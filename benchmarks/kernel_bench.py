@@ -1,0 +1,52 @@
+"""Benchmark: kernel micro-bench (interpret mode on CPU — correctness-path
+timing only; TPU wall-times come from deployment).  Emits
+name,us_per_call,derived CSV per the harness convention."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(print_fn=print) -> int:
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    print_fn("name,us_per_call,derived")
+
+    B, S, H, KV, D = 1, 128, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    t_kernel = _time(lambda *a: ops.flash_attention(
+        *a, causal=True, block_q=64, block_k=64, interpret=True), q, k, v)
+    flops = 4 * B * S * S * H * D
+    print_fn(f"flash_attention_interp_{S},{t_kernel:.0f},"
+             f"{flops / t_kernel / 1e6:.3f}GFLOPs_equiv")
+
+    B, S, nh, hd, ds = 1, 256, 2, 32, 16
+    xh = jnp.asarray(rng.standard_normal((B, S, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, nh)), jnp.float32)
+    bs = jnp.asarray(rng.standard_normal((B, S, ds)), jnp.float32)
+    cs = jnp.asarray(rng.standard_normal((B, S, ds)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2, (nh,)), jnp.float32)
+    t_ssd = _time(lambda *x: ops.ssd_scan(*x, chunk=64, interpret=True),
+                  xh, dt, bs, cs, a)
+    t_ref = _time(lambda *x: ref.ssd_ref(
+        x[0].transpose(0, 2, 1, 3), x[1].transpose(0, 2, 1), *x[2:]),
+        xh, dt, bs, cs, a)
+    print_fn(f"ssd_scan_interp_{S},{t_ssd:.0f},vs_ref_{t_ref:.0f}us")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

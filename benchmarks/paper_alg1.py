@@ -1,0 +1,44 @@
+"""Benchmark: Algorithm 1 (paper §IV-H) — technique selection per cluster,
+checked against the winner/only-survivor reported in each paper figure."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core.costmodel import PAPER_CLUSTERS, paper_workload
+from repro.core.selector import CostModelProber, select_technique
+
+# (cluster, model) -> acceptable selections given the paper's results
+PAPER_EXPECTED = {
+    ("TACC-TACC", "gpt2m"): {("data", (0,))},       # C3: 2 RTX data wins
+    ("TACC-TACC", "gpt2L"): {("zero2", (0, 1))},    # only survivor
+    ("UTAH-GPN", "gpt2m"): {("data", (0,))},        # 18 min vs 26
+    ("UTAH-GPN", "gpt2L"): {("zero2", (0, 1))},     # only survivor
+    ("UTAH-MASS", "gpt2m"): {("data", (0,)), ("data", (1,))},
+    ("UTAH-MASS", "gpt2L"): {("pipeshard", (0, 1))},
+    ("BRIS-STAR", "gpt2m"): {("data", (0,))},       # 2 A30 data best
+    ("BRIS-STAR", "gpt2L"): {("pipeshard", (0, 1))},  # only survivor
+    ("GAT-AMST", "gpt2m"): {("data", (0,)), ("shard", (0,)),
+                            ("data", (1,)), ("shard", (1,))},
+    ("GAT-AMST", "gpt2L"): {("pipeshard", (0, 1))},   # only survivor
+}
+
+
+def run(print_fn=print) -> int:
+    n_fail = 0
+    print_fn("# Algorithm 1 selections")
+    print_fn("cluster,model,selected,vms,matches_paper")
+    for (cname, mname), expected in PAPER_EXPECTED.items():
+        wl = paper_workload(get_config(mname))
+        sel = select_technique(CostModelProber(wl, PAPER_CLUSTERS[cname]),
+                               delta=0.1)
+        key = (sel.technique, tuple(sel.vms) if sel.vms else None)
+        ok = key in expected
+        n_fail += (not ok)
+        print_fn(f"{cname},{mname},{sel.technique},"
+                 f"{'+'.join(map(str, sel.vms or []))},{ok}")
+    return n_fail
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

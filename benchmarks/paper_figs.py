@@ -1,0 +1,81 @@
+"""Benchmark: paper Figures 3–7 — per-cluster pretraining time + TFLOP/s
+for every technique, 4-GPU (two VM) and single-VM configurations, with OOM
+marks, plus the machine-checkable claims each figure supports."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.core.costmodel import (PAPER_CLUSTERS, avg_tflops, epoch_minutes,
+                                  paper_workload)
+
+TECHNIQUES = ("data", "zero2", "shard", "pipeshard")
+
+
+def figure_rows(cluster_name: str) -> List[Dict]:
+    cluster = PAPER_CLUSTERS[cluster_name]
+    rows = []
+    for model_name in ("gpt2m", "gpt2L", "gpt2l"):
+        wl = paper_workload(get_config(model_name))
+        for scope, vms in (("4gpu", None), ("1vm", [0])):
+            for tech in TECHNIQUES:
+                mins = epoch_minutes(tech, wl, cluster, vms)
+                tf = avg_tflops(tech, wl, cluster, vms)
+                rows.append({
+                    "cluster": cluster_name, "model": model_name,
+                    "scope": scope, "technique": tech,
+                    "minutes": mins, "tflops": tf,
+                })
+    return rows
+
+
+def check_figure_claims(cluster_name: str) -> List[str]:
+    """The per-figure claims from §IV-A..E, evaluated on the model."""
+    failures = []
+    cluster = PAPER_CLUSTERS[cluster_name]
+    wl_m = paper_workload(get_config("gpt2m"))
+    t = {tech: epoch_minutes(tech, wl_m, cluster) for tech in TECHNIQUES}
+
+    if cluster_name != "TACC-TACC":
+        # C1: Pipeshard fastest on every geo-distributed 4-GPU cluster
+        others = [v for k, v in t.items() if k != "pipeshard" and v]
+        if t["pipeshard"] and others and t["pipeshard"] > min(others):
+            failures.append(f"{cluster_name}: pipeshard not fastest (gpt2m)")
+        # C2: Shard slowest among techniques that ran
+        ran = {k: v for k, v in t.items() if v}
+        if "shard" in ran and ran["shard"] != max(ran.values()):
+            failures.append(f"{cluster_name}: shard not slowest")
+    # C3: single-VM Data beats 4-GPU Pipeshard when it fits (all clusters)
+    one = epoch_minutes("data", wl_m, cluster, vms=[0])
+    if one is not None and t["pipeshard"] is not None \
+            and one > t["pipeshard"]:
+        failures.append(f"{cluster_name}: 1-VM data slower than pipeshard")
+    # C4: gpt2L memory: zero2 fits whenever anything fits
+    wl_L = paper_workload(get_config("gpt2L"))
+    fits = {tech: epoch_minutes(tech, wl_L, cluster) is not None
+            for tech in TECHNIQUES}
+    if any(fits.values()) and not (fits["zero2"] or fits["pipeshard"]):
+        failures.append(f"{cluster_name}: nothing low-memory fits gpt2L")
+    return failures
+
+
+def run(print_fn=print) -> int:
+    n_fail = 0
+    for cname in PAPER_CLUSTERS:
+        rows = figure_rows(cname)
+        print_fn(f"# Figure ({cname})")
+        print_fn("cluster,model,scope,technique,minutes,tflops")
+        for r in rows:
+            m = "OOM" if r["minutes"] is None else f"{r['minutes']:.0f}"
+            f = "-" if r["tflops"] is None else f"{r['tflops']:.2f}"
+            print_fn(f"{r['cluster']},{r['model']},{r['scope']},"
+                     f"{r['technique']},{m},{f}")
+        fails = check_figure_claims(cname)
+        for f in fails:
+            print_fn(f"CLAIM-FAIL: {f}")
+        n_fail += len(fails)
+    return n_fail
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

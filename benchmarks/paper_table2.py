@@ -1,0 +1,74 @@
+"""Benchmark: paper Table II — gpt2m pretraining time for the four
+techniques across the five clusters ordered by site-to-site latency, plus
+the latency-sensitivity claims (C1/C2)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.core.costmodel import (PAPER_CLUSTERS, epoch_minutes,
+                                  paper_workload)
+
+PAPER_TABLE2 = {  # minutes, from the paper
+    "data": [41, 136, 272, 199, 1375],
+    "zero2": [52, 295, 641, 363, 3519],
+    "shard": [82, 840, 1808, 1125, 5400],
+    "pipeshard": [29, 57, 86, 96, 100],
+}
+CLUSTER_ORDER = ["TACC-TACC", "UTAH-GPN", "UTAH-MASS", "BRIS-STAR",
+                 "GAT-AMST"]
+
+
+def model_table() -> Dict[str, List[Optional[float]]]:
+    wl = paper_workload(get_config("gpt2m"))
+    return {tech: [epoch_minutes(tech, wl, PAPER_CLUSTERS[c])
+                   for c in CLUSTER_ORDER]
+            for tech in PAPER_TABLE2}
+
+
+def check_claims(table: Dict[str, List[Optional[float]]]) -> List[str]:
+    failures = []
+    lat0, lat4 = table["pipeshard"][0], table["pipeshard"][-1]
+    for tech in ("data", "zero2", "shard"):
+        # C1: Pipeshard tolerates latency better: its degradation ratio is
+        # far below every other technique's
+        deg_t = table[tech][-1] / table[tech][0]
+        deg_p = lat4 / lat0
+        if deg_p >= deg_t:
+            failures.append(f"pipeshard degradation {deg_p:.1f}x not better "
+                            f"than {tech} {deg_t:.1f}x")
+        # monotone-ish degradation with latency (paper rows rise with
+        # latency except the A30-powered BRIS-STAR dip)
+        if not table[tech][-1] > table[tech][0]:
+            failures.append(f"{tech}: no degradation across latency range")
+    # C2: shard is the most latency-affected
+    shard_deg = table["shard"][-1] / table["shard"][0]
+    for tech in ("data", "zero2"):
+        if shard_deg < table[tech][-1] / table[tech][0]:
+            failures.append(f"shard degradation not worst vs {tech}")
+    # pipeshard fastest on every multi-site cluster
+    for i, c in enumerate(CLUSTER_ORDER[1:], start=1):
+        best = min(v[i] for v in table.values() if v[i] is not None)
+        if table["pipeshard"][i] != best:
+            failures.append(f"pipeshard not fastest on {c}")
+    return failures
+
+
+def run(print_fn=print) -> int:
+    table = model_table()
+    print_fn("# Table II (gpt2m, 4 GPUs, minutes for 20 epochs)")
+    print_fn("technique," + ",".join(CLUSTER_ORDER) + ",source")
+    for tech in PAPER_TABLE2:
+        ours = ",".join("OOM" if v is None else f"{v:.0f}"
+                        for v in table[tech])
+        ref = ",".join(str(v) for v in PAPER_TABLE2[tech])
+        print_fn(f"{tech},{ours},model")
+        print_fn(f"{tech},{ref},paper")
+    fails = check_claims(table)
+    for f in fails:
+        print_fn(f"CLAIM-FAIL: {f}")
+    return len(fails)
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

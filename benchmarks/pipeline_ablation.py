@@ -1,0 +1,75 @@
+"""Benchmark: Pipeshard microbatch ablation (paper §III-A: "the training
+batch is split into microbatches; forward and backward are pipelined").
+
+Sweeps n_micro for llama3.2-3b × train_4k on the multi-pod mesh and
+reports, per choice: the GPipe bubble fraction (n_stages-1)/(n_micro +
+n_stages-1) (idle compute), pod-crossing ppermute bytes, and per-device
+memory — the bubble-vs-memory tradeoff Alpa's DP solves analytically.
+
+Heavy (one 512-device compile per point): run explicitly via
+    PYTHONPATH=src python -m benchmarks.pipeline_ablation
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import json
+import sys
+import time
+
+
+def run(print_fn=print, micros=(2, 4, 8, 16)) -> int:
+    import jax
+
+    from repro.configs import get_config, get_shape
+    from repro.configs.base import TrainConfig
+    from repro.core.pipeline import pipeline_mesh
+    from repro.core.plans import get_plan
+    from repro.launch import roofline as rl
+    from repro.launch.dryrun import build_step
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import Model
+
+    cfg = get_config("llama3.2-3b")
+    shape = get_shape("train_4k")
+    plan = get_plan("pipeshard")
+    n_stages = 2
+    print_fn("# Pipeshard microbatch ablation "
+             "(llama3.2-3b x train_4k x 2x16x16, 2 stages)")
+    print_fn("n_micro,bubble_frac,dcn_gb_per_dev,ici_gb_per_dev,"
+             "collective_s,mem_gb_per_dev,compile_s")
+    rows = []
+    for m in micros:
+        base = make_production_mesh(multi_pod=True)
+        mesh = pipeline_mesh(base, n_stages)
+        model = Model(cfg)
+        tcfg = TrainConfig(microbatches=m)
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            step, args, acost = build_step(model, plan, mesh, cfg, shape,
+                                           tcfg)
+            compiled = step.lower(*args).compile()
+        roof = rl.from_compiled(
+            compiled, arch=cfg.name, shape=shape.name, mesh_name="2x16x16",
+            plan=f"pipeshard_m{m}", analytic=acost, n_devices=512,
+            crosses_pod=True)
+        bubble = (n_stages - 1) / (m + n_stages - 1)
+        row = dict(n_micro=m, bubble=bubble,
+                   dcn_gb=roof.dcn_bytes_per_device / 1e9,
+                   ici_gb=roof.collective_bytes_per_device / 1e9,
+                   coll_s=roof.collective_s,
+                   mem_gb=roof.memory_per_device_bytes / 1e9,
+                   compile_s=time.time() - t0)
+        rows.append(row)
+        print_fn(f"{m},{bubble:.3f},{row['dcn_gb']:.3f},{row['ici_gb']:.2f},"
+                 f"{row['coll_s']:.2f},{row['mem_gb']:.2f},"
+                 f"{row['compile_s']:.0f}")
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "pipeline_ablation.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

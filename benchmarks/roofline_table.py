@@ -1,0 +1,67 @@
+"""Benchmark: roofline table from the dry-run sweep results
+(results/dryrun/*.json) — §Roofline of EXPERIMENTS.md is generated from
+this module's output."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+ARCH_ORDER = [
+    "minicpm3-4b", "phi-3-vision-4.2b", "phi3.5-moe-42b-a6.6b",
+    "falcon-mamba-7b", "zamba2-2.7b", "llama3-405b", "phi4-mini-3.8b",
+    "whisper-small", "deepseek-v2-236b", "llama3.2-3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "single") -> List[Dict]:
+    recs = []
+    for path in glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    key = lambda r: (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER
+                     else 99, SHAPE_ORDER.index(r["shape"])
+                     if r["shape"] in SHAPE_ORDER else 9)
+    return sorted(recs, key=key)
+
+
+def fmt_row(r: Dict) -> str:
+    if r["status"] == "skip":
+        return (f"{r['arch']},{r['shape']},{r.get('plan', '-')},SKIP,,,,,,"
+                f"\"{r['reason'][:60]}\"")
+    if r["status"] != "ok":
+        return f"{r['arch']},{r['shape']},{r.get('plan', '-')},FAIL,,,,,," \
+               f"\"{r.get('error', '')[:60]}\""
+    frac = r["useful_flops_fraction"]
+    return (f"{r['arch']},{r['shape']},{r['plan']},ok,"
+            f"{r['compute_s'] * 1e3:.2f},{r['memory_s'] * 1e3:.2f},"
+            f"{r['collective_s'] * 1e3:.2f},{r['dominant']},"
+            f"{frac:.2f},{r['memory_per_device_bytes'] / 1e9:.2f}")
+
+
+def run(print_fn=print, mesh: str = "single") -> int:
+    recs = load(mesh)
+    print_fn(f"# Roofline table ({mesh}-pod mesh, per step, per device)")
+    print_fn("arch,shape,plan,status,compute_ms,memory_ms,collective_ms,"
+             "dominant,useful_flops_frac,mem_gb_per_dev")
+    n_fail = 0
+    for r in recs:
+        print_fn(fmt_row(r))
+        n_fail += r["status"] == "fail"
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print_fn(f"# dominant-term histogram: {doms}; "
+                 f"{len(ok)} ok / {len(recs)} total")
+    return n_fail
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

@@ -1,0 +1,52 @@
+"""Benchmark harness entrypoint: one module per paper table/figure plus the
+dry-run roofline and kernel micro-bench.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything cheap
+    PYTHONPATH=src python -m benchmarks.run --sweep    # + re-run dry-runs
+
+Exit code = number of failed paper-claim checks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true",
+                    help="also (re)run the 40-combo dry-run sweep "
+                         "(~4 min single-pod + ~4 min multi-pod)")
+    args = ap.parse_args()
+
+    import benchmarks.kernel_bench as kernel_bench
+    import benchmarks.paper_alg1 as paper_alg1
+    import benchmarks.paper_figs as paper_figs
+    import benchmarks.paper_table2 as paper_table2
+    import benchmarks.roofline_table as roofline_table
+
+    n_fail = 0
+    for name, mod in (("paper_figs (Figs 3-7)", paper_figs),
+                      ("paper_table2 (Table II)", paper_table2),
+                      ("paper_alg1 (Algorithm 1)", paper_alg1),
+                      ("kernel_bench", kernel_bench)):
+        print(f"\n===== {name} =====")
+        n_fail += mod.run()
+
+    if args.sweep:
+        import subprocess
+        for extra in ([], ["--multi-pod"]):
+            rc = subprocess.call([sys.executable, "-m",
+                                  "benchmarks.dryrun_sweep", *extra])
+            n_fail += rc != 0
+
+    for mesh in ("single", "multi"):
+        print(f"\n===== roofline ({mesh}) =====")
+        n_fail += roofline_table.run(mesh=mesh)
+
+    print(f"\nTOTAL claim/bench failures: {n_fail}")
+    sys.exit(n_fail)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Algorithm 1 (paper §IV-H) in action: pick the pretraining technique for
+a model + cluster, two ways:
+
+  1. analytically, over the paper's five FABRIC slices (cost model),
+  2. live, probing epsilon-epochs of real training on host devices.
+
+    PYTHONPATH=src python examples/select_technique.py --model gpt2m
+    PYTHONPATH=src python examples/select_technique.py --live
+"""
+import argparse
+import os
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--model", default="gpt2m")
+ap.add_argument("--live", action="store_true",
+                help="probe with real epsilon-epoch training runs")
+ap.add_argument("--devices", type=int, default=8)
+ap.add_argument("--delta", type=float, default=0.1)
+args = ap.parse_args()
+
+if args.live:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core.costmodel import PAPER_CLUSTERS, paper_workload
+from repro.core.selector import (CostModelProber, LiveProber,
+                                 select_technique)
+
+
+def analytic():
+    wl = paper_workload(get_config(args.model))
+    print(f"Algorithm 1 over the paper's clusters ({args.model}):")
+    for name, cluster in PAPER_CLUSTERS.items():
+        sel = select_technique(CostModelProber(wl, cluster),
+                               delta=args.delta)
+        probes = {k: (f"{v:.2f}" if v else "OOM")
+                  for k, v in sel.probes.items()}
+        print(f"  {name:11s} -> {sel.technique}@VMs{sel.vms}   "
+              f"probes(TFLOP/s): {probes}")
+
+
+def live():
+    """epsilon-epoch probes with real training on host devices: VM1 = first
+    half of the mesh, VM2 = second half (the paper's two-VM shape)."""
+    import dataclasses
+    import jax
+    from repro.configs.base import TrainConfig
+    from repro.core.plans import get_plan
+    from repro.core.pipeline import pipeline_mesh
+    from repro.data import (Loader, Tokenizer, build_dataset,
+                            synthetic_wikipedia)
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import Model
+    from repro.train import model_flops_per_step, train
+
+    texts = list(synthetic_wikipedia(300, seed=0))
+    tok = Tokenizer.train(texts, 1024)
+    cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(),
+                              n_layers=4, vocab_size=tok.vocab_size)
+    ds = build_dataset(texts, tok, seq_len=64)
+
+    def probe(technique, vms):
+        plan = get_plan("shard_zero" if technique == "shard" else technique)
+        n = args.devices if vms is None else args.devices // 2
+        base = make_host_mesh((max(n // 4, 1), 2, 2),
+                              ("pod", "data", "model"))
+        mesh = pipeline_mesh(base, 2) if plan.pipeline else base
+        loader = Loader(ds, global_batch=8, seed=0)
+        res = train(Model(cfg), plan, mesh,
+                    TrainConfig(warmup_steps=2, total_steps=10,
+                                microbatches=4),
+                    loader, steps=6, log_every=0)
+        flops = model_flops_per_step(cfg, 8 * 64)
+        tf = res.tflops(flops)
+        print(f"  probe {technique}@{vms or 'both'}: {tf:.4f} TFLOP/s")
+        return tf
+
+    sel = select_technique(LiveProber(probe), delta=args.delta)
+    print(f"live selection: {sel.technique}@VMs{sel.vms}")
+
+
+if __name__ == "__main__":
+    (live if args.live else analytic)()

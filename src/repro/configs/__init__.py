@@ -1,0 +1,69 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` resolves any assigned architecture id (and the
+paper's own gpt2 variants) to its ``ModelConfig``.
+"""
+from repro.configs.base import (
+    INPUT_SHAPES,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RunConfig,
+    ShapeConfig,
+    SSMConfig,
+    TrainConfig,
+    cfg_summary,
+)
+
+from repro.configs.minicpm3_4b import CONFIG as _minicpm3
+from repro.configs.phi3_vision_4_2b import CONFIG as _phi3v
+from repro.configs.phi35_moe_42b import CONFIG as _phi35moe
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.zamba2_2_7b import CONFIG as _zamba2
+from repro.configs.llama3_405b import CONFIG as _llama405
+from repro.configs.phi4_mini_3_8b import CONFIG as _phi4mini
+from repro.configs.whisper_small import CONFIG as _whisper
+from repro.configs.deepseek_v2_236b import CONFIG as _dsv2
+from repro.configs.llama3_2_3b import CONFIG as _llama32
+from repro.configs.gpt2 import GPT2_LARGE, GPT2_LARGE_REDUCED, GPT2_MEDIUM
+
+ARCH_CONFIGS = {
+    c.name: c
+    for c in [
+        _minicpm3, _phi3v, _phi35moe, _falcon_mamba, _zamba2,
+        _llama405, _phi4mini, _whisper, _dsv2, _llama32,
+        GPT2_MEDIUM, GPT2_LARGE, GPT2_LARGE_REDUCED,
+    ]
+}
+
+# The ten assigned architectures (excludes the paper's gpt2 models).
+ASSIGNED_ARCHS = [
+    "minicpm3-4b", "phi-3-vision-4.2b", "phi3.5-moe-42b-a6.6b",
+    "falcon-mamba-7b", "zamba2-2.7b", "llama3-405b", "phi4-mini-3.8b",
+    "whisper-small", "deepseek-v2-236b", "llama3.2-3b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return ARCH_CONFIGS[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(ARCH_CONFIGS)}"
+        ) from None
+
+
+def get_shape(name: str) -> ShapeConfig:
+    try:
+        return INPUT_SHAPES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown input shape {name!r}; available: {sorted(INPUT_SHAPES)}"
+        ) from None
+
+
+__all__ = [
+    "ARCH_CONFIGS", "ASSIGNED_ARCHS", "INPUT_SHAPES",
+    "MLAConfig", "ModelConfig", "MoEConfig", "RunConfig", "ShapeConfig",
+    "SSMConfig", "TrainConfig", "cfg_summary", "get_config", "get_shape",
+]

@@ -1,0 +1,269 @@
+"""α–β analytical cost model of the paper's FABRIC GPU clusters.
+
+Reproduces the paper's Figures 3–7 and Table II: per-technique pretraining
+time for GPT-2 medium/large on two-VM slices with measured site-to-site
+latencies.  The model is deliberately simple — compute term from achievable
+per-GPU FLOP/s, communication terms from per-step traffic of each technique
+over (intra-VM PCIe, inter-VM WAN) links with latency α and bandwidth β —
+because the *paper's claims are about orderings and trends*, which is what
+EXPERIMENTS.md §Paper-validation checks.
+
+The same machinery prices TPU meshes (ICI vs DCN) for plan selection when
+no hardware is attached — the dry-run roofline (launch/roofline.py) uses
+compiled HLO instead wherever it can.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------- #
+# hardware vocabulary
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class GPUSpec:
+    name: str
+    tflops: float          # achievable mixed-precision TFLOP/s for GEMMs
+    mem_gb: float
+    mem_bw_gbps: float
+
+
+# Achievable (not peak-marketing) numbers for the paper's cards:
+GPUS = {
+    # Quadro RTX 6000: 16.3 fp32 / ~32 fp16-ish; achievable trainer ~20
+    "RTX": GPUSpec("RTX", 20.0, 24.0, 672.0),
+    # Tesla T4: 8.1 fp32, 65 fp16 peak but bandwidth-starved; ~10 achievable
+    "T4": GPUSpec("T4", 10.0, 16.0, 320.0),
+    # A30: 10.3 fp32 / 165 bf16 peak; ~25 achievable with its 933 GB/s
+    "A30": GPUSpec("A30", 25.0, 24.0, 933.0),
+}
+
+
+TCP_WINDOW_BYTES = 8e6   # effective socket window of NCCL-over-TCP streams
+
+
+@dataclass(frozen=True)
+class Link:
+    latency_s: float
+    bandwidth_gbps: float  # GB/s usable at zero RTT
+
+    @property
+    def effective_gbps(self) -> float:
+        """Single-stream TCP throughput is window/RTT-limited (paper §II-C:
+        NCCL uses TCP/IP between VMs, no GPUDirect) — this is what makes
+        Data/ZeRO2/Shard collapse on high-latency slices (Table II)."""
+        if self.latency_s <= 0:
+            return self.bandwidth_gbps
+        return min(self.bandwidth_gbps,
+                   TCP_WINDOW_BYTES / self.latency_s / 1e9)
+
+
+@dataclass(frozen=True)
+class VM:
+    gpus: Tuple[str, ...]                 # e.g. ("RTX", "RTX")
+    intra: Link = Link(5e-6, 12.0)        # PCIe within a VM
+
+
+@dataclass(frozen=True)
+class Cluster:
+    """Two-VM FABRIC slice (paper Table I)."""
+    name: str
+    vms: Tuple[VM, ...]
+    wan: Link                              # inter-VM (L2Bridge / L2STS)
+
+    def all_gpus(self) -> List[GPUSpec]:
+        return [GPUS[g] for vm in self.vms for g in vm.gpus]
+
+
+def fabric_cluster(name: str, gpus1: Tuple[str, str], gpus2: Tuple[str, str],
+                   latency_ms: float, wan_gbps: float = 3.0) -> Cluster:
+    """WAN bandwidth: NCCL over TCP/IP on FABRIC achieves only a few GB/s
+    of the 100 Gbps links (paper §II-C: TCP/IP, no GPUDirect)."""
+    return Cluster(name, (VM(gpus1), VM(gpus2)),
+                   Link(latency_ms * 1e-3, wan_gbps))
+
+
+# The paper's five slices (Table I).
+PAPER_CLUSTERS: Dict[str, Cluster] = {
+    "TACC-TACC": fabric_cluster("TACC-TACC", ("RTX", "RTX"), ("T4", "T4"), 0.1),
+    "UTAH-GPN": fabric_cluster("UTAH-GPN", ("RTX", "RTX"), ("T4", "T4"), 20.2),
+    "UTAH-MASS": fabric_cluster("UTAH-MASS", ("RTX", "RTX"), ("RTX", "RTX"), 57.4),
+    "BRIS-STAR": fabric_cluster("BRIS-STAR", ("A30", "A30"), ("RTX", "RTX"), 95.9),
+    "GAT-AMST": fabric_cluster("GAT-AMST", ("A30", "A30"), ("A30", "A30"), 103.0),
+}
+
+
+# --------------------------------------------------------------------- #
+# workload description
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class Workload:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    steps_per_epoch: int
+    epochs: int = 20                      # the paper runs 20 epochs
+    microbatches: int = 4
+
+    @property
+    def tokens_per_step(self) -> int:
+        return self.seq_len * self.global_batch
+
+    @property
+    def flops_per_step(self) -> float:
+        return 6.0 * self.cfg.active_param_count() * self.tokens_per_step
+
+    def bytes_params(self) -> float:
+        return 2.0 * self.cfg.param_count()          # fp16/bf16 on the wire
+
+    def bytes_grads(self) -> float:
+        return 2.0 * self.cfg.param_count()
+
+    # Alpa's gpt-2 training keeps fp32 master params + fp32 Adam moments:
+    def bytes_train_state(self) -> float:           # p+g+m+v, fp32
+        return 16.0 * self.cfg.param_count()
+
+    ACT_FACTOR = 10.0  # no-remat Alpa training: activations + attn scores
+    OVERHEAD_GB = 2.0  # CUDA context, NCCL buffers, framework workspace
+
+    def activation_bytes_per_gpu(self, n_gpus: int) -> float:
+        c = self.cfg
+        per_layer = self.tokens_per_step // max(n_gpus, 1) * c.d_model * 2
+        return per_layer * c.n_layers * self.ACT_FACTOR
+
+
+# the paper pretrains on 20231101.ace (~8MB dump): roughly 2M tokens
+def paper_workload(cfg: ModelConfig, *, global_batch: int = 32) -> Workload:
+    tokens = 2_000_000
+    steps = max(1, tokens // (cfg.max_seq_len * global_batch))
+    return Workload(cfg, cfg.max_seq_len, global_batch, steps)
+
+
+# --------------------------------------------------------------------- #
+# per-technique cost
+# --------------------------------------------------------------------- #
+
+LOG2E = 1.4426950408889634
+
+
+@dataclass
+class StepCost:
+    compute_s: float
+    comm_s: float
+    mem_required_gb: float
+    mem_available_gb: float
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.comm_s
+
+    @property
+    def fits(self) -> bool:
+        return self.mem_required_gb <= self.mem_available_gb
+
+
+def _allreduce_time(bytes_total: float, n: int, link: Link) -> float:
+    """Ring all-reduce: 2(n-1)/n × bytes over the slowest link, with 2(n-1)
+    latency hops, at the TCP-effective bandwidth."""
+    if n <= 1:
+        return 0.0
+    return 2 * (n - 1) * link.latency_s \
+        + 2 * (n - 1) / n * bytes_total / (link.effective_gbps * 1e9)
+
+
+def _worst_link(cluster: Cluster, spans_wan: bool) -> Link:
+    return cluster.wan if spans_wan else cluster.vms[0].intra
+
+
+def technique_step_cost(technique: str, wl: Workload, cluster: Cluster,
+                        vms: Optional[List[int]] = None) -> StepCost:
+    """Model one optimizer step of `technique` on `cluster` (paper §III).
+
+    vms: which VMs participate (None = all).  Heterogeneous GPUs make the
+    *slowest* participant the pace-setter for data-parallel styles, while
+    Pipeshard assigns stages per mesh (paper: meshes of equal capability).
+    """
+    sel = cluster.vms if vms is None else [cluster.vms[i] for i in vms]
+    gpus = [GPUS[g] for vm in sel for g in vm.gpus]
+    n = len(gpus)
+    spans_wan = len(sel) > 1
+    link = _worst_link(cluster, spans_wan)
+    intra = sel[0].intra
+
+    flops = wl.flops_per_step
+    slowest = min(g.tflops for g in gpus) * 1e12
+    g_bytes = wl.bytes_grads()
+    p_bytes = wl.bytes_params()
+    state = wl.bytes_train_state()          # fp32 p+g+m+v (Alpa default)
+    act = wl.activation_bytes_per_gpu(n)
+    ovh = wl.OVERHEAD_GB
+    mem_avail = min(g.mem_gb for g in gpus)
+
+    if technique == "data":
+        compute = flops / (n * slowest)
+        comm = _allreduce_time(g_bytes, n, link)
+        mem = (state + act) / 1e9 + ovh
+    elif technique == "zero2":
+        compute = flops / (n * slowest)
+        # reduce-scatter grads + all-gather of updated fp16 params + the
+        # partitioned fp32 master sync => ~2.2x the Data volume, which is
+        # the paper's observed zero2-vs-data degradation ratio (Table II)
+        comm = 2.2 * _allreduce_time(g_bytes, n, link)
+        # fp16 replica + partitioned fp32 states: the lowest-memory plan
+        mem = (p_bytes + (state - p_bytes) / n + act) / 1e9 + ovh
+    elif technique == "shard":
+        compute = flops / (n * slowest)
+        # Megatron-style: 4 all-reduces of activations per layer (fwd+bwd)
+        act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
+        comm = 4 * wl.cfg.n_layers * _allreduce_time(act_bytes, n, link)
+        # sharded states but activation replicas + all-gather buffers
+        mem = (state / n + 1.5 * act) / 1e9 + ovh
+    elif technique == "pipeshard":
+        # stages = VMs; shard (intra-op) inside each VM over PCIe;
+        # inter-stage point-to-point microbatch activations over WAN.
+        n_stages = max(len(sel), 1)
+        per_mesh = n // n_stages
+        stage_flops = flops / n_stages
+        mesh_tflops = [min(GPUS[g].tflops for g in vm.gpus) * 1e12
+                       * len(vm.gpus) for vm in sel]
+        bubble = (n_stages - 1) / wl.microbatches
+        compute = max(stage_flops / t for t in mesh_tflops) * (1 + bubble)
+        act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
+        # each microbatch crosses each stage boundary twice (fwd + bwd)
+        p2p = 2 * (n_stages - 1) * (
+            wl.microbatches * (act_bytes / wl.microbatches)
+            / (cluster.wan.effective_gbps * 1e9)
+            + wl.microbatches * cluster.wan.latency_s)
+        intra_comm = 4 * wl.cfg.n_layers / n_stages * _allreduce_time(
+            act_bytes, per_mesh, intra)
+        comm = (p2p if spans_wan else 0.0) + intra_comm
+        # in-flight microbatches make Pipeshard the memory-hungry plan
+        # (paper §IV-G observation 3)
+        mem = (state / n + act * (1 + 0.5 * wl.microbatches)) / 1e9 + ovh
+    else:
+        raise ValueError(technique)
+    return StepCost(compute, comm, mem, mem_avail)
+
+
+def epoch_minutes(technique: str, wl: Workload, cluster: Cluster,
+                  vms: Optional[List[int]] = None) -> Optional[float]:
+    """Minutes per `epochs` epochs; None when the technique OOMs (the
+    paper's '×' bars)."""
+    c = technique_step_cost(technique, wl, cluster, vms)
+    if not c.fits:
+        return None
+    return c.total_s * wl.steps_per_epoch * wl.epochs / 60.0
+
+
+def avg_tflops(technique: str, wl: Workload, cluster: Cluster,
+               vms: Optional[List[int]] = None) -> Optional[float]:
+    c = technique_step_cost(technique, wl, cluster, vms)
+    if not c.fits:
+        return None
+    return wl.flops_per_step / c.total_s / 1e12

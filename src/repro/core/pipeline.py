@@ -1,0 +1,153 @@
+"""Pipeshard: inter-operator (pipeline) parallelism over a ``stage`` mesh
+axis, combined with intra-operator (Shard) parallelism inside each stage.
+
+This is the TPU-native mapping of Alpa's pipeshard plans (paper §III-B):
+
+  * the layer stack (already stacked ``[L, ...]`` for ``lax.scan``) is cut
+    into ``n_stages`` contiguous slices by sharding the stack axis over the
+    ``stage`` mesh axis with a partial-manual ``jax.shard_map``;
+  * the global batch is split into microbatches; the classic GPipe schedule
+    runs ``n_micro + n_stages - 1`` ticks, each stage processing microbatch
+    ``t - stage_id`` and handing activations to its successor with
+    ``jax.lax.ppermute`` — the point-to-point communication that makes the
+    paper's Pipeshard latency-tolerant (Table II);
+  * inside the body, the ``data``/``model`` mesh axes stay *auto*, so GSPMD
+    still applies the Shard rules (tensor parallelism) per stage;
+  * embedding / head / loss run outside the manual region in auto-SPMD land
+    and the backward schedule falls out of differentiating through the scan
+    and the ppermute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.plans import Plan, STAGE_AXIS
+
+
+def pipeline_mesh(devices_mesh: Mesh, n_stages: int) -> Mesh:
+    """Reshape a (pod?, data, model) mesh into (stage, data, model).
+
+    The stage axis absorbs the pod axis first (inter-stage point-to-point is
+    exactly the traffic that tolerates the slow inter-pod link — the paper's
+    geo-distributed finding), then splits the data axis if more stages are
+    requested.
+    """
+    names = devices_mesh.axis_names
+    shape = dict(zip(names, devices_mesh.devices.shape))
+    pod = shape.get("pod", 1)
+    data = shape.get("data", 1)
+    model = shape.get("model", 1)
+    if n_stages % pod != 0 and pod % n_stages != 0:
+        raise ValueError(f"n_stages={n_stages} incompatible with pod={pod}")
+    rest = n_stages // pod if n_stages >= pod else 1
+    if data % rest != 0:
+        raise ValueError(
+            f"cannot split data={data} into {rest} pipeline sub-stages")
+    devs = devices_mesh.devices.reshape(n_stages, (pod * data) // n_stages,
+                                        model)
+    return jax.sharding.Mesh(devs, (STAGE_AXIS, "data", "model"))
+
+
+def stack_length(cfg, stack) -> int:
+    leaf = jax.tree.leaves(stack)[0]
+    return leaf.shape[0]
+
+
+def validate_stages(cfg, stack, n_stages: int) -> None:
+    L = stack_length(cfg, stack)
+    if L % n_stages != 0:
+        raise ValueError(
+            f"{cfg.name}: stack length {L} (groups for hybrid) not divisible "
+            f"by n_stages={n_stages} — pick a divisor (see DESIGN.md §4)")
+
+
+def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
+                       remat: bool = True, carrier_dtype=jnp.float32):
+    """Build loss(params, batch) running the stacked layers as a GPipe
+    pipeline over the mesh's ``stage`` axis.
+
+    ``carrier_dtype``: dtype of the inter-stage activation carriers (scan
+    state / ppermute payload / bank buffer).  Defaults to fp32 because the
+    XLA *CPU* SPMD partitioner CHECK-fails ("Invalid binary instruction
+    opcode copy") when transposing the pipeline with bf16 carriers; the
+    stage compute itself still runs in the model dtype.  On real TPU this
+    can be set to bf16 to halve inter-stage ppermute bytes.
+    """
+    cfg = model.cfg
+    n_stages = mesh.shape[STAGE_AXIS]
+
+    def loss_fn(params, batch):
+        x, positions, _ = model._embed_inputs(params, batch)
+        enc_out = model._encode(params, batch) if cfg.family == "encdec" \
+            else None
+        B, S, d = x.shape
+        assert B % n_micro == 0, (B, n_micro)
+        mb = B // n_micro
+        xm = x.reshape(n_micro, mb, S, d).astype(carrier_dtype)
+        xm = jax.lax.with_sharding_constraint(
+            xm, P(None, "data", None, None))
+        pos_mb = positions[:mb]
+        enc_mb = jnp.zeros((), x.dtype) if enc_out is None else \
+            enc_out.reshape(n_micro, mb, *enc_out.shape[1:])
+        stack = params["layers"]
+        validate_stages(cfg, stack, n_stages)
+        shared = params.get("shared")
+        if shared is None:
+            shared = jnp.zeros(())
+
+        # in_specs: only the manual (stage) axis is mentioned; data/model
+        # sharding of the same arrays stays in auto-SPMD land.
+        stack_spec = jax.tree.map(lambda _: P(STAGE_AXIS), stack)
+
+        @partial(jax.shard_map, mesh=mesh, axis_names={STAGE_AXIS},
+                 in_specs=(stack_spec, P(), P(), P(), P()),
+                 out_specs=P(STAGE_AXIS), check_vma=False)
+        def run_pipeline(stack_local, xm, pos_mb, enc_mb, shared):
+            stage = jax.lax.axis_index(STAGE_AXIS)
+            T = n_micro + n_stages - 1
+            state0 = jnp.zeros_like(xm[0])
+            buf0 = jnp.zeros_like(xm)
+
+            def tick(carry, t):
+                state, buf = carry
+                mb_idx = jnp.clip(t - stage, 0, n_micro - 1)
+                inp = jnp.where(stage == 0, xm[jnp.clip(t, 0, n_micro - 1)],
+                                state)
+                kwargs = {}
+                if cfg.family == "encdec":
+                    kwargs["enc_out"] = enc_mb[mb_idx]
+                out, aux = model.run_stack(
+                    stack_local, inp.astype(model.compute_dtype), pos_mb,
+                    shared=(shared if cfg.family == "hybrid" else None),
+                    remat=remat, **kwargs)
+                out = out.astype(carrier_dtype)
+                # last stage banks its finished microbatch t-(S-1)
+                done_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+                valid = (t - (n_stages - 1) >= 0)
+                slot = jax.lax.dynamic_update_index_in_dim(
+                    buf, out.astype(buf.dtype), done_idx, 0)
+                buf = jnp.where(valid, slot, buf)
+                # hand activations to the next stage (p2p, ring)
+                perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+                state = jax.lax.ppermute(out, STAGE_AXIS, perm)
+                return (state, buf), aux
+
+            (_, buf), auxs = jax.lax.scan(
+                tick, (state0, buf0), jnp.arange(T))
+            # leading (length-1 per shard) stage axis; caller slices [-1]
+            return buf[None], jnp.sum(auxs)[None]
+
+        buf_staged, aux_staged = run_pipeline(stack, xm, pos_mb, enc_mb,
+                                              shared)
+        hidden = buf_staged[-1].reshape(B, S, d).astype(model.compute_dtype)
+        aux = aux_staged[-1]
+        logits = model._head(params, hidden)
+        from repro.models.model import lm_loss
+        return lm_loss(cfg, logits, batch, aux)
+
+    return loss_fn

@@ -1,0 +1,206 @@
+"""The paper's four pretraining techniques as first-class execution plans.
+
+    Data      — pure data parallelism: params replicated, batch split,
+                gradient all-reduce (paper §III-A).
+    ZeRO2     — data parallelism with gradients + optimizer state sharded
+                over the data axes: reduce-scatter grads, shard-local AdamW,
+                all-gather updated params (paper §III-B, DeepSpeed ZeRO-2).
+    Shard     — Alpa's intra-operator / SPMD parallelism: weights sharded on
+                their logical axes over the ``model`` mesh axis, batch over
+                the data axes (paper §III-B "Shard").
+    Pipeshard — Alpa's combined inter+intra-operator parallelism: the layer
+                stack is cut into stages over a ``stage`` mesh axis,
+                microbatches are pipelined between stages with ppermute,
+                and Shard rules apply inside each stage (paper §III-B).
+
+A plan turns (model params, mesh) into in/out shardings for jit and an
+update rule; the same four names are what Algorithm 1 selects between.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import sharding as shardlib
+from repro.core.sharding import AxisMap
+
+# Mesh axis vocabulary: production meshes use ("pod",)? + ("data", "model");
+# Pipeshard views reshape to ("stage", "data", "model").
+DATA_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+STAGE_AXIS = "stage"
+
+
+@dataclass(frozen=True)
+class Plan:
+    name: str
+    shards_weights: bool        # tensor parallelism over `model`
+    zero_sharding: bool         # grads/opt-state sharded over data axes
+    pipeline: bool              # stage axis + microbatch pipelining
+    fsdp: bool = False          # params ALSO sharded over the data axes
+    #   (ZeRO-3 / FSDP: beyond-paper — the paper's ZeRO2 stops at grads
+    #   + optimizer state; this is what a 405B model actually needs)
+
+    # ------------------------------------------------------------- #
+    def mesh_axes(self, mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+        names = mesh.axis_names
+        data = tuple(a for a in names if a in DATA_AXES)
+        model = tuple(a for a in names if a == MODEL_AXIS)
+        stage = tuple(a for a in names if a == STAGE_AXIS)
+        return {"data": data, "model": model, "stage": stage}
+
+    def batch_axes(self, mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+        """Mesh axes the batch dim is split over, greedily folding in axes
+        that still divide the batch.  Pure data parallelism also folds in
+        the model axis — the paper's Data plan uses *all* GPUs as replicas
+        when it can."""
+        ax = self.mesh_axes(mesh)
+        cand = ax["data"] if (self.shards_weights or self.pipeline) \
+            else ax["data"] + ax["model"]
+        axes, prod = [], 1
+        for a in cand:
+            n = mesh.shape[a]
+            if global_batch > 0 and global_batch % (prod * n) == 0:
+                axes.append(a)
+                prod *= n
+        return tuple(axes)
+
+    # ------------------------------------------------------------- #
+    def axis_map(self, mesh: Mesh) -> AxisMap:
+        """logical dim -> mesh axis mapping for parameters."""
+        if not self.shards_weights and not self.pipeline:
+            return AxisMap()                      # fully replicated params
+        # NB deliberately NO head_dim/embed_d secondaries: sharding the
+        # contraction dim of q/k or of the unembedding all-reduces every
+        # attention score block / the full logits — measured 76 s of
+        # collective time per step for llama3.2-3b (EXPERIMENTS.md §Perf).
+        # Non-divisible heads/vocab fall back to replication instead.
+        m = AxisMap(
+            vocab=MODEL_AXIS, heads=MODEL_AXIS, kv_heads=MODEL_AXIS,
+            mlp=MODEL_AXIS, expert=MODEL_AXIS, d_inner=MODEL_AXIS,
+        )
+        if self.pipeline:
+            m["__stack__"] = STAGE_AXIS
+        return m
+
+    def param_specs(self, params_or_shapes, cfg: ModelConfig, mesh: Mesh):
+        specs = shardlib.param_specs(params_or_shapes, self.axis_map(mesh),
+                                     cfg.family, dict(mesh.shape))
+        if not self.fsdp:
+            return specs
+        axes = self.mesh_axes(mesh)["data"]
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        return jax.tree.map(
+            lambda leaf, spec: shardlib.add_fsdp_axis(leaf, spec, axes, size),
+            params_or_shapes, specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def param_shardings(self, params_or_shapes, cfg: ModelConfig, mesh: Mesh):
+        return shardlib.named_shardings(
+            self.param_specs(params_or_shapes, cfg, mesh), mesh)
+
+    def opt_specs(self, params_or_shapes, cfg: ModelConfig, mesh: Mesh):
+        """Optimizer-state (and gradient reduce-scatter) specs.
+
+        FSDP: optimizer state lives exactly on the param shards (grads
+        reduce-scatter straight into the update layout — no resharding).
+        ZeRO2: params stay replicated/TP-sharded, m/v spread over the data
+        axes on the largest divisible dim."""
+        if self.fsdp or not self.zero_sharding:
+            return self.param_specs(params_or_shapes, cfg, mesh)
+        axes = self.mesh_axes(mesh)["data"]
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        return shardlib.zero_specs(params_or_shapes, axes, size)
+
+    # ------------------------------------------------------------- #
+    def batch_spec(self, batch, mesh: Mesh) -> Any:
+        """Input batch shardings: batch dim over the plan's batch axes."""
+        def leaf_spec(leaf):
+            gb = leaf.shape[0]
+            axes = self.batch_axes(mesh, gb)
+            if not axes:
+                return P()
+            return P(axes if len(axes) > 1 else axes[0])
+        return jax.tree.map(leaf_spec, batch)
+
+    def batch_shardings(self, batch, mesh: Mesh):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            self.batch_spec(batch, mesh),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # ------------------------------------------------------------- #
+    def cache_spec(self, cache, cfg: ModelConfig, mesh: Mesh,
+                   batch_size: int) -> Any:
+        """Decode-cache shardings: batch over data axes; under Shard the
+        long (sequence / latent) cache dim goes over `model` so a 32k–500k
+        KV cache fits — context-parallel decode.  The batch dim is located
+        by size (caches carry layer/group stack prefixes of varying depth)."""
+        data = self.mesh_axes(mesh)["data"]
+        use_model = self.shards_weights or self.pipeline
+        d_ax = data if len(data) > 1 else (data[0] if data else None)
+        model_n = mesh.shape.get(MODEL_AXIS, 1)
+
+        def leaf_spec(path, leaf):
+            ps = shardlib._path_str(path)
+            if leaf.ndim == 0 or ps.endswith("index"):
+                return P()
+            entries: list = [None] * leaf.ndim
+            b_dim = next((i for i, s in enumerate(leaf.shape)
+                          if s == batch_size), None)
+            if b_dim is not None and d_ax is not None \
+                    and batch_size % np.prod([mesh.shape[a] for a in data]) == 0:
+                entries[b_dim] = d_ax
+            # the long dim right after batch (cache seq / latent rows)
+            if use_model and b_dim is not None and leaf.ndim > b_dim + 1 \
+                    and leaf.shape[b_dim + 1] >= model_n \
+                    and leaf.shape[b_dim + 1] % model_n == 0:
+                entries[b_dim + 1] = MODEL_AXIS
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+    def cache_shardings(self, cache, cfg: ModelConfig, mesh: Mesh,
+                        batch_size: int):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            self.cache_spec(cache, cfg, mesh, batch_size),
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+PLANS: Dict[str, Plan] = {
+    "data": Plan("data", shards_weights=False, zero_sharding=False,
+                 pipeline=False),
+    "zero2": Plan("zero2", shards_weights=False, zero_sharding=True,
+                  pipeline=False),
+    "shard": Plan("shard", shards_weights=True, zero_sharding=False,
+                  pipeline=False),
+    # zero-sharded optimizer states compose with tensor parallelism the same
+    # way Alpa's shard plan folds in the ZeRO optimizer (paper §III-B)
+    "shard_zero": Plan("shard_zero", shards_weights=True, zero_sharding=True,
+                       pipeline=False),
+    "pipeshard": Plan("pipeshard", shards_weights=True, zero_sharding=False,
+                      pipeline=True),
+    # beyond-paper: full FSDP/ZeRO-3 — params sharded over data axes too,
+    # gathered per layer inside the scan (memory <-> all-gather tradeoff;
+    # what makes llama3-405b trainable on 256 chips, EXPERIMENTS.md §Perf H2)
+    "fsdp": Plan("fsdp", shards_weights=True, zero_sharding=True,
+                 pipeline=False, fsdp=True),
+}
+
+
+def get_plan(name: str) -> Plan:
+    try:
+        return PLANS[name]
+    except KeyError:
+        raise KeyError(f"unknown plan {name!r}; available {sorted(PLANS)}") \
+            from None

@@ -1,0 +1,201 @@
+"""Logical-axis sharding rule engine.
+
+Every parameter leaf is matched (by its key path + rank) to a tuple of
+*logical* dimension names; a plan then maps logical names to mesh axes.
+Leaves with more dims than the rule's base rank are stacked (layer /
+group axes) and get the plan's ``stack_axis`` (``None`` for SPMD plans,
+``"stage"`` for Pipeshard) prepended.
+
+jit input shardings must divide exactly, so assignment is divisibility-
+aware: each dim takes its mapped mesh axis only when the size divides; and
+when the primary tensor-parallel dim does not divide (minicpm3's 40 heads
+or whisper's 51865 vocab on a 16-way model axis), a *secondary* dim
+(head_dim / embedding-d) picks up the axis so the tensor still shards.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Secondary names take a mesh axis only when the primary dim of the same
+# tensor failed divisibility.
+SECONDARY = ("head_dim", "embed_d")
+
+# (path regex, base rank, logical dims) — first match wins.
+RULES: Sequence[Tuple[str, int, Tuple[Optional[str], ...]]] = (
+    # embeddings / heads
+    (r"(embed|lm_head)/table$", 2, ("vocab", "embed_d")),
+    (r"pos(_embed)?/table$|pos/table$", 2, (None, "embed_d")),
+    # attention (dense / encdec / hybrid-shared)
+    (r"/wq$", 3, ("residual", "heads", "head_dim")),
+    (r"/w[kv]$", 3, ("residual", "kv_heads", "head_dim")),
+    (r"/wo$", 3, ("heads", "head_dim", "residual")),
+    (r"/bq$", 2, ("heads", "head_dim")),
+    (r"/b[kv]$", 2, ("kv_heads", "head_dim")),
+    (r"/bo$", 1, ("residual",)),
+    # MLA
+    (r"mla/w_dq$", 2, ("residual", None)),
+    (r"mla/(q|kv)_norm$", 1, (None,)),
+    (r"mla/w_uq$", 3, (None, "heads", "head_dim")),
+    (r"mla/w_dkv$", 2, ("residual", None)),
+    (r"mla/w_kr$", 2, ("residual", None)),
+    (r"mla/w_u[kv]$", 3, ("heads", None, "head_dim")),
+    (r"mla/wo$", 3, ("heads", "head_dim", "residual")),
+    # dense MLP
+    (r"mlp/w_(gate|up)$", 2, ("residual", "mlp")),
+    (r"mlp/b_up$", 1, ("mlp",)),
+    (r"mlp/w_down$", 2, ("mlp", "residual")),
+    (r"mlp/b_down$", 1, ("residual",)),
+    # MoE
+    (r"moe/router$", 2, ("residual", None)),
+    (r"moe/w_(gate|up|down)$", 3, ("expert", None, None)),
+    (r"moe/shared_(gate|up)$", 2, ("residual", "mlp")),
+    (r"moe/shared_down$", 2, ("mlp", "residual")),
+    # Mamba (1 and 2)
+    (r"mamba/in_proj$", 2, ("residual", "d_inner")),
+    (r"mamba/conv_w$", 2, (None, "d_inner")),
+    (r"mamba/conv_b$", 1, ("d_inner",)),
+    (r"mamba/x_proj$", 2, ("d_inner", None)),
+    (r"mamba/dt_proj$", 2, (None, "d_inner")),
+    (r"mamba/dt_bias$", 1, (None,)),
+    (r"mamba/A_log$", 2, ("d_inner", None)),   # mamba1 [di, ds]
+    (r"mamba/A_log$", 1, (None,)),             # mamba2 [nh]
+    (r"mamba/D$", 1, (None,)),
+    (r"mamba/norm_scale$", 1, ("d_inner",)),
+    (r"mamba/out_proj$", 2, ("d_inner", "residual")),
+    # VLM projector
+    (r"projector/w1$", 2, (None, "residual")),
+    (r"projector/w2$", 2, ("residual", "residual2")),
+    # norms / gates / everything else: replicated
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def logical_spec(path_str: str, ndim: int,
+                 *, n_stack: int = 0) -> Tuple[Optional[str], ...]:
+    """Logical dims for one leaf. ``n_stack``: how many leading stacked dims
+    precede the per-layer parameter (0 for unstacked, 1 for [L,...],
+    2 for hybrid [G,k,...])."""
+    base = ndim - n_stack
+    for pat, rank, dims in RULES:
+        if rank == base and re.search(pat, path_str):
+            return ("__stack__",) * n_stack + dims
+    return (None,) * ndim
+
+
+def _stack_depth(path_str: str, family: str) -> int:
+    """Stacked prefix depth for a leaf under layers/encoder-layers."""
+    if "layers/blocks" in path_str:          # hybrid [G, k, ...]
+        return 1 if path_str.endswith("gates") else 2
+    if re.search(r"(^|/)layers/", path_str):
+        return 1
+    return 0
+
+
+class AxisMap(dict):
+    """logical name -> mesh axis (or axis tuple); missing => replicated."""
+
+    def to_pspec(self, dims: Tuple[Optional[str], ...],
+                 shape: Optional[Tuple[int, ...]] = None,
+                 axis_sizes: Optional[Dict[str, int]] = None) -> P:
+        """Divisibility-aware assignment.  Primary dims get their axis when
+        the size divides; SECONDARY dims only fire when the tensor's primary
+        dim failed, so each mesh axis is used at most once per tensor."""
+        entries: list = [None] * len(dims)
+        used: set = set()
+
+        def axes_of(name):
+            ax = self.get(name)
+            if ax is None:
+                return None, ()
+            return ax, (ax if isinstance(ax, tuple) else (ax,))
+
+        def divisible(i, ax_t):
+            if shape is None or axis_sizes is None:
+                return True
+            size = 1
+            for a in ax_t:
+                size *= axis_sizes.get(a, 1)
+            return size > 0 and shape[i] % size == 0
+
+        for pass_secondary in (False, True):
+            for i, d in enumerate(dims):
+                if d is None or entries[i] is not None:
+                    continue
+                if (d in SECONDARY) != pass_secondary:
+                    continue
+                ax, ax_t = axes_of(d)
+                if ax is None or any(a in used for a in ax_t):
+                    continue
+                if divisible(i, ax_t):
+                    entries[i] = ax
+                    used.update(ax_t)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+
+def param_specs(params_or_shapes, axis_map: AxisMap, family: str,
+                axis_sizes: Optional[Dict[str, int]] = None) -> Any:
+    """PartitionSpec pytree matching the parameter pytree."""
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        dims = logical_spec(ps, leaf.ndim, n_stack=_stack_depth(ps, family))
+        return axis_map.to_pspec(dims, tuple(leaf.shape), axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_or_shapes)
+
+
+def named_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def largest_dim_spec(leaf, axes: Tuple[str, ...], axes_size: int) -> P:
+    """ZeRO spec: shard the largest *divisible* dimension over ``axes``."""
+    if leaf.ndim == 0:
+        return P()
+    dims = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+    for dim in dims:
+        if leaf.shape[dim] % axes_size == 0 and leaf.shape[dim] >= axes_size:
+            entries: list = [None] * leaf.ndim
+            entries[dim] = axes if len(axes) > 1 else axes[0]
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+    return P()
+
+
+def zero_specs(params_or_shapes, axes: Tuple[str, ...], axes_size: int):
+    return jax.tree.map(lambda l: largest_dim_spec(l, axes, axes_size),
+                        params_or_shapes)
+
+
+def add_fsdp_axis(leaf, spec: P, axes: Tuple[str, ...], axes_size: int) -> P:
+    """FSDP: put the data axes on the largest still-unsharded divisible dim
+    of an already (tensor-)sharded leaf."""
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    free = [i for i in range(leaf.ndim) if entries[i] is None
+            and leaf.shape[i] % axes_size == 0 and leaf.shape[i] >= axes_size]
+    if not free:
+        return spec
+    dim = max(free, key=lambda i: leaf.shape[i])
+    entries[dim] = axes if len(axes) > 1 else axes[0]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)

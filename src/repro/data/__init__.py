@@ -1,0 +1,6 @@
+from repro.data.corpus import load_text_dir, synthetic_wikipedia
+from repro.data.pipeline import Loader, PackedDataset, build_dataset, pack_documents
+from repro.data.tokenizer import Tokenizer
+
+__all__ = ["Loader", "PackedDataset", "Tokenizer", "build_dataset",
+           "load_text_dir", "pack_documents", "synthetic_wikipedia"]

@@ -1,0 +1,113 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+TPU adaptation (vs the CUDA flash-attention algorithm):
+  * tiling is chosen for VMEM + the 128x128 MXU: q/k/v tiles are
+    [block_q, head_dim] / [block_k, head_dim] with head_dim padded to a
+    multiple of 128 by the wrapper, so every matmul hits the systolic array;
+  * the kv loop is the *sequential* (minor) grid dimension — VMEM scratch
+    (m, l, acc) persists across kv steps per (batch, head, q-block), which
+    replaces the CUDA shared-memory accumulator;
+  * softmax statistics are fp32 in VREGs; only the final normalized tile is
+    cast back to the model dtype.
+
+The pure-jnp oracle is kernels/ref.py::attention_ref; parity is asserted in
+interpret mode over shape/dtype sweeps by tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, n_kv_blocks: int, scale: float,
+                  causal: bool, window: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)                # [bk, dv]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         scale: float | None = None,
+                         interpret: bool = False):
+    """q: [B, H, Sq, D]; k/v: [B, KV, Sk, D] (already GQA-expanded index
+    mapping, head_dim padded).  ``scale`` must be 1/sqrt(unpadded head_dim)
+    when the wrapper padded D.  Returns [B, H, Sq, D]."""
+    B, H, Sq, D = q.shape
+    _, KV, Sk, Dv = v.shape
+    group = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, n_kv_blocks=nk,
+        scale=scale, causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dv),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((block_q, Dv), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,174 @@
+"""Mamba2/SSD chunked selective scan as a Pallas TPU kernel.
+
+TPU adaptation (vs the CUDA mamba kernel):
+  * the CUDA implementation leans on warp-level parallel prefix scans;
+    TPUs have no warp shuffles, so we use the SSD *block decomposition*:
+    the intra-chunk part becomes a decay-masked [K, K] matmul (MXU work)
+    and only the chunk-boundary state is carried — the recurrence runs
+    over the sequential grid dimension with the state in VMEM scratch;
+  * chunk length K and head_dim are the MXU-aligned tile sides; d_state
+    rides along the lane dimension.
+
+Grid: (batch, heads, n_chunks) with n_chunks the sequential (minor) axis.
+Per step the kernel computes
+    y_intra = (L ∘ (C Bᵀ) ∘ dtᵀ) X        (within-chunk, matmul form)
+    y_inter = exp(s) C · h                 (contribution of carried state)
+    h      <- exp(s_K) h + Σ_j exp(s_K - s_j) dt_j x_j ⊗ B_j
+with s the in-chunk cumulative log-decay.  Oracle: kernels/ref.py::ssd_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hlast_ref, h_scr,
+                *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # [K, hd]
+    dt = dt_ref[0, 0].astype(jnp.float32)        # [K, 1]
+    bs = b_ref[0].astype(jnp.float32)            # [K, ds]
+    cs = c_ref[0].astype(jnp.float32)            # [K, ds]
+    a = a_ref[0, 0]                              # scalar (negative)
+
+    da = dt[:, 0] * a                            # [K] log-decay increments
+    s_cum = jnp.cumsum(da)                       # [K]
+    # intra-chunk decay matrix L[i,j] = exp(s_i - s_j) * dt_j, causal
+    diff = s_cum[:, None] - s_cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(iota_i >= iota_j, jnp.exp(diff) * dt[:, 0][None, :], 0.0)
+    scores = jax.lax.dot_general(cs, bs, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [K,K]
+    y_intra = jax.lax.dot_general(L * scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter-chunk: y_i += exp(s_i) * C_i . h   (h: [hd, ds])
+    h = h_scr[...]
+    y_inter = jnp.exp(s_cum)[:, None] * jax.lax.dot_general(
+        cs, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(s_K) h + Σ_j exp(s_K - s_j) dt_j x_j ⊗ B_j
+    tail = jnp.exp(s_cum[-1] - s_cum) * dt[:, 0]          # [K]
+    dh = jax.lax.dot_general(x * tail[:, None], bs,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [hd, ds]
+    h_scr[...] = jnp.exp(s_cum[-1]) * h + dh
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hlast_ref[0, 0] = h_scr[...]
+
+
+def ssd_scan(xh, dt, b_s, c_s, a, *, chunk: int = 64,
+             interpret: bool = False):
+    """xh: [B, nh, S, hd]; dt: [B, nh, S]; b_s/c_s: [B, S, ds]; a: [nh].
+    Returns (y [B, nh, S, hd], h_last [B, nh, hd, ds]).  S % chunk == 0."""
+    B, nh, S, hd = xh.shape
+    ds = b_s.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    a_in = jnp.broadcast_to(a.astype(jnp.float32)[None, :, None], (B, nh, 1))
+
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, c: (b, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nh, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xh, dt[..., None], b_s, c_s, a_in)
+    return y, h_last
+
+
+# --------------------------------------------------------------------- #
+# Mamba1: per-channel recurrence, sequential in-chunk loop
+# --------------------------------------------------------------------- #
+
+def _mamba1_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hlast_ref,
+                   h_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)       # [K, di]
+    dt = dt_ref[0].astype(jnp.float32)     # [K, di]
+    bs = b_ref[0].astype(jnp.float32)      # [K, ds]
+    cs = c_ref[0].astype(jnp.float32)      # [K, ds]
+    A = a_ref[...].astype(jnp.float32)     # [di, ds]
+
+    def step(t, carry):
+        h, y = carry
+        a_t = jnp.exp(dt[t][:, None] * A)                 # [di, ds]
+        h = a_t * h + (dt[t] * x[t])[:, None] * bs[t][None, :]
+        y = y.at[t].set(jnp.sum(h * cs[t][None, :], axis=1))
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros_like(x)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_scr[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hlast_ref[0] = h_scr[...]
+
+
+def mamba1_scan(x, dt, b_s, c_s, A, *, chunk: int = 64,
+                interpret: bool = False):
+    """x/dt: [B, S, di]; b_s/c_s: [B, S, ds]; A: [di, ds] (negative).
+    Returns (y [B, S, di] fp32, h_last [B, di, ds])."""
+    B, S, di = x.shape
+    ds = b_s.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    kernel = functools.partial(_mamba1_kernel, chunk=chunk, n_chunks=nc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((di, ds), lambda b, c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, di, ds), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((di, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b_s, c_s, A)
+    return y, h_last

@@ -1,0 +1,128 @@
+"""Jit'd wrappers: layout/padding glue between model code ([B, S, H, D]
+activations) and the Pallas kernels ([B, H, S, D] MXU-aligned tiles).
+
+``interpret`` defaults to True off-TPU so the kernels execute (and are
+tested) on CPU; on TPU backends the real kernels are emitted.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import mamba_scan as _scan
+from repro.kernels import flash_attention as _fa
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x, mult: int, axis: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Model-layout flash attention.  q: [B, Sq, H, Dk]; k/v: [B, Sk, KV, D*].
+    Pads seq to block multiples and head_dim to a lane multiple (128),
+    runs the kernel in [B, H, S, D] layout, unpads."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, Sq, H, Dk = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    qT = _pad_axis(_pad_axis(q.transpose(0, 2, 1, 3), block_q, 2), 128, 3)
+    kT = _pad_axis(_pad_axis(k.transpose(0, 2, 1, 3), block_k, 2), 128, 3)
+    vT = _pad_axis(_pad_axis(v.transpose(0, 2, 1, 3), block_k, 2), 128, 3)
+    # padded kv positions are masked out by causality for q<=Sq... they are
+    # NOT in general: mask them via an additive key of -inf is handled by
+    # the kernel's position mask only when causal. For non-causal inputs we
+    # rely on Sk % block_k == 0 after padding with window/causal masking;
+    # serving paths always run causal.
+    o = _fa.flash_attention_bhsd(qT, kT, vT, causal=causal, window=window,
+                                 block_q=min(block_q, qT.shape[2]),
+                                 block_k=min(block_k, kT.shape[2]),
+                                 scale=1.0 / (Dk ** 0.5),
+                                 interpret=interpret)
+    o = o.transpose(0, 2, 1, 3)[:, :Sq, :, :Dv]
+    return o.astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh, dt, b_s, c_s, a, *, chunk: int = 64,
+             interpret: bool | None = None):
+    """Model-layout SSD.  xh: [B, S, nh, hd]; dt: [B, S, nh];
+    b_s/c_s: [B, S, ds]; a: [nh].  Returns (y [B,S,nh,hd] fp32, h_last)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, S, nh, hd = xh.shape
+    x_t = _pad_axis(xh.transpose(0, 2, 1, 3), chunk, 2)       # [B,nh,S,hd]
+    dt_t = _pad_axis(dt.transpose(0, 2, 1), chunk, 2)         # [B,nh,S]
+    b_p = _pad_axis(b_s, chunk, 1)
+    c_p = _pad_axis(c_s, chunk, 1)
+    y, h_last = _scan.ssd_scan(x_t, dt_t, b_p, c_p, a, chunk=chunk,
+                               interpret=interpret)
+    return y[:, :, :S].transpose(0, 2, 1, 3), h_last
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba1_scan(x, dt, b_s, c_s, A, *, chunk: int = 64,
+                interpret: bool | None = None):
+    """x/dt: [B, S, di]; b_s/c_s: [B, S, ds]; A: [di, ds]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    S = x.shape[1]
+    y, h_last = _scan.mamba1_scan(
+        _pad_axis(x, chunk, 1), _pad_axis(dt, chunk, 1),
+        _pad_axis(b_s, chunk, 1), _pad_axis(c_s, chunk, 1), A,
+        chunk=chunk, interpret=interpret)
+    return y[:, :S], h_last
+
+
+# ------------------------------------------------------------------ #
+# model-facing adapters (called from repro.models.* when use_pallas=True)
+# ------------------------------------------------------------------ #
+
+def ssd_scan_op(xh, delta, B_s, C_s, A, h0, *, chunk: int):
+    """Adapter matching models.ssm._ssd_chunk_scan's signature.
+    h0 is assumed zero at train time (kernel owns the carry)."""
+    y, h_last = ssd_scan(xh, delta, B_s, C_s, A, chunk=chunk)
+    return y, h_last
+
+
+def mamba1_scan_op(x_conv, z, params, cfg, h0, *, chunk: int):
+    """Adapter matching models.ssm._mamba1_inner: projects dt/B/C itself and
+    applies D skip + gate, mirroring the jnp path."""
+    dt_x = x_conv.dtype
+    dt_rank = params["dt_proj"].shape[0]
+    ds = cfg.ssm.d_state
+    proj = jnp.einsum("bsc,cr->bsr", x_conv, params["x_proj"].astype(dt_x))
+    dt_raw, B_s, C_s = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dt_raw, params["dt_proj"].astype(dt_x))
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, h_last = mamba1_scan(x_conv.astype(jnp.float32), delta,
+                            B_s.astype(jnp.float32), C_s.astype(jnp.float32),
+                            A, chunk=chunk)
+    y = y + params["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(dt_x), h_last
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, weight, *, eps: float = 1e-5, block_rows: int = 256,
+            interpret: bool | None = None):
+    """Fused RMSNorm (kernels/rmsnorm.py)."""
+    from repro.kernels import rmsnorm as _rn
+    return _rn.rmsnorm(x, weight, eps=eps, block_rows=block_rows,
+                       interpret=interpret)

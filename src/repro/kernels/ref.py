@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every kernel (the ground truth the Pallas kernels
+are swept against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Direct (materialized-scores) attention.  q: [B, H, Sq, D];
+    k/v: [B, KV, Sk, D*]; returns [B, H, Sq, Dv] in q.dtype."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    group = H // KV
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / (D ** 0.5)
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= kj
+    if window:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(xh, dt, b_s, c_s, a):
+    """Sequential (per-token) SSD recurrence — the trusted slow path.
+    xh: [B, nh, S, hd]; dt: [B, nh, S]; b_s/c_s: [B, S, ds]; a: [nh].
+    Returns (y [B, nh, S, hd] fp32, h_last [B, nh, hd, ds] fp32)."""
+    B, nh, S, hd = xh.shape
+    ds = b_s.shape[-1]
+    xh = xh.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    b_s = b_s.astype(jnp.float32)
+    c_s = c_s.astype(jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(dt[:, :, t] * a)                       # [B, nh]
+        dx = dt[:, :, t, None] * xh[:, :, t]                   # [B, nh, hd]
+        h = decay[..., None, None] * h \
+            + dx[..., None] * b_s[:, None, t, None, :]
+        y = jnp.einsum("bhds,bs->bhd", h, c_s[:, t])
+        return h, y
+
+    h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 2), h_last
+
+
+def mamba1_ref(x, dt, b_s, c_s, A):
+    """Sequential mamba1 recurrence.  x/dt: [B, S, di]; b_s/c_s: [B, S, ds];
+    A: [di, ds].  Returns (y [B, S, di] fp32, h_last [B, di, ds])."""
+    B, S, di = x.shape
+    ds = b_s.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    b_s = b_s.astype(jnp.float32)
+    c_s = c_s.astype(jnp.float32)
+
+    def step(h, t):
+        a_t = jnp.exp(dt[:, t, :, None] * A)                   # [B, di, ds]
+        h = a_t * h + (dt[:, t] * x[:, t])[..., None] * b_s[:, t, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_s[:, t])
+        return h, y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def rmsnorm_ref(x, weight, *, eps: float = 1e-5):
+    """Reference RMSNorm (same math as models/layers.py::rmsnorm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * weight.astype(jnp.float32)).astype(x.dtype)

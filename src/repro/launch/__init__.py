@@ -1,0 +1,2 @@
+"""Launchers: production meshes, the multi-pod dry-run, roofline
+extraction, training/serving CLIs, and the plan-equivalence checker."""

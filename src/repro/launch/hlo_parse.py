@@ -1,0 +1,177 @@
+"""Optimized-HLO text analysis: collective bytes with while-loop trip
+counts and pod-boundary classification.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of trip
+count, which silently drops ~n_layers× of the collective traffic of a
+scanned transformer.  This parser rebuilds the computation graph from the
+HLO text: per-computation collective result bytes, while-ops resolved to
+their (body, condition) computations, trip counts read from the condition's
+integer constant, and totals accumulated recursively from ENTRY.
+
+Each collective is additionally classified as intra-pod (ICI) or
+pod-crossing (DCN) by *evaluating* its ``replica_groups`` iota tile
+assignment (``[G,N]<=[dims]T(perm)``) or ``source_target_pairs`` against
+the pod boundary, so multi-pod rooflines can price the slow axis correctly
+— the TPU analogue of the paper's WAN-vs-PCIe distinction.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_BLOCK_START = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[0-9,\]\[\s]*\]?\)?[^=]*?)\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=(%[\w.\-]+),\s*body=(%[\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9,{}\s]*\})\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([0-9,{}\s]*)\}")
+
+
+def _groups_cross_pod(line: str, pod_size: int) -> bool:
+    """Does this collective's participant set span a pod boundary?"""
+    if pod_size <= 0:
+        return False
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        g, n, dims_s, perm_s = m.groups()
+        dims = [int(x) for x in dims_s.split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if perm_s:
+            ids = ids.transpose([int(x) for x in perm_s.split(",")])
+        groups = ids.reshape(int(g), int(n))
+        pods = groups // pod_size
+        return bool(np.any(pods.min(axis=1) != pods.max(axis=1)))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        for grp in re.findall(r"\{([0-9,\s]*)\}", m.group(0)):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if ids and (min(ids) // pod_size) != (max(ids) // pod_size):
+                return True
+        return False
+    m = _PAIRS_RE.search(line)
+    if m:
+        for pair in re.findall(r"\{(\d+),(\d+)\}", m.group(0)):
+            if int(pair[0]) // pod_size != int(pair[1]) // pod_size:
+                return True
+        return False
+    # replica_groups={} (all participants) or unknown: conservative
+    return True
+
+
+@dataclass
+class Computation:
+    name: str
+    # (kind, crossing) -> bytes / count
+    coll_bytes: Dict[Tuple[str, bool], float] = field(default_factory=dict)
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)
+    max_const: int = 0
+
+
+def _result_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_computations(hlo_text: str, pod_size: int = 0
+                       ) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry_name = ""
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _BLOCK_START.match(line)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if raw.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        if "-done(" not in line:
+            cm = _COLL_RE.search(line)
+            if cm:
+                sig, kind, _ = cm.groups()
+                crossing = _groups_cross_pod(line, pod_size)
+                key = (kind, crossing)
+                cur.coll_bytes[key] = cur.coll_bytes.get(key, 0.0) \
+                    + _result_bytes(sig)
+                cur.coll_counts[kind] = cur.coll_counts.get(kind, 0) + 1
+        wm = _WHILE_RE.search(line)
+        if wm:
+            cur.whiles.append((wm.group(1), wm.group(2)))
+        for c in _CONST_RE.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+    return comps, entry_name
+
+
+def collective_bytes_with_trips(hlo_text: str, pod_size: int = 0
+                                ) -> Dict[str, object]:
+    """Totals per collective kind (while bodies × trip counts), split into
+    intra-pod vs pod-crossing bytes.
+
+    Returns {kind: bytes, ..., "_crossing": {kind: bytes}, "_static_op_counts": {...}}.
+    """
+    comps, entry = parse_computations(hlo_text, pod_size)
+    memo: Dict[str, Dict[Tuple[str, bool], float]] = {}
+
+    def resolve(name: str, depth: int = 0) -> Dict[Tuple[str, bool], float]:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        out: Dict[Tuple[str, bool], float] = {}
+        if comp is None or depth > 16:
+            return out
+        memo[name] = out
+        for k, v in comp.coll_bytes.items():
+            out[k] = out.get(k, 0.0) + v
+        for cond_name, body_name in comp.whiles:
+            cond = comps.get(cond_name)
+            trips = max(cond.max_const if cond else 1, 1)
+            inner = resolve(body_name, depth + 1)
+            for k, v in inner.items():
+                out[k] = out.get(k, 0.0) + trips * v
+        return out
+
+    totals = resolve(entry) if entry else {}
+    local = {k: 0.0 for k in COLLECTIVE_KINDS}
+    crossing = {k: 0.0 for k in COLLECTIVE_KINDS}
+    for (kind, is_cross), v in totals.items():
+        (crossing if is_cross else local)[kind] += v
+    counts: Dict[str, int] = {}
+    for comp in comps.values():
+        for k, v in comp.coll_counts.items():
+            counts[k] = counts.get(k, 0) + v
+    result: Dict[str, object] = dict(local)
+    result["_crossing"] = crossing
+    result["_static_op_counts"] = counts
+    return result

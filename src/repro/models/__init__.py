@@ -1,0 +1,3 @@
+from repro.models.model import Model, cast_params
+
+__all__ = ["Model", "cast_params"]

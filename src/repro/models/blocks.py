@@ -1,0 +1,306 @@
+"""Per-layer blocks for every architecture family.
+
+Every block family exposes a uniform (init, forward, prefill, decode)
+quartet so that model.py can stack layer parameters on a leading [L] axis
+and drive them with ``lax.scan`` — which is also exactly the layout the
+Pipeshard plan slices into pipeline stages.
+Forward/prefill/decode all return ``(x, aux)`` / ``(x, cache, aux)`` with a
+scalar aux (MoE load-balance loss; 0.0 elsewhere) to keep scan signatures
+uniform across families.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+# --------------------------------------------------------------------- #
+# dense (llama/phi/gpt2/minicpm3) — also the LM backbone of the VLM
+# --------------------------------------------------------------------- #
+
+def init_dense_block(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 4)
+    p = {
+        "norm1": init_norm(r[0], cfg.d_model, cfg.norm),
+        "norm2": init_norm(r[1], cfg.d_model, cfg.norm),
+        "mlp": init_mlp(r[2], cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+    if cfg.mla is not None:
+        p["mla"] = attn.init_mla(r[3], cfg)
+    else:
+        p["attn"] = attn.init_attention(r[3], cfg)
+    return p
+
+
+def dense_block_forward(x, p, cfg: ModelConfig, *, positions, window=0,
+                        use_pallas=False):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    if cfg.mla is not None:
+        a = attn.mla_forward(h, p["mla"], cfg, positions=positions,
+                             window=window, use_pallas=use_pallas)
+    else:
+        a = attn.attention_forward(h, p["attn"], cfg, positions=positions,
+                                   window=window, use_pallas=use_pallas)
+    x = x + a
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    x = x + apply_mlp(h, p["mlp"], cfg.activation)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def dense_block_prefill(x, p, cfg: ModelConfig, *, positions, cache, window=0):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_prefill(h, p["mla"], cfg, positions=positions,
+                                    cache=cache, window=window)
+    else:
+        a, cache = attn.attention_prefill(h, p["attn"], cfg,
+                                          positions=positions, cache=cache,
+                                          window=window)
+    x = x + a
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    x = x + apply_mlp(h, p["mlp"], cfg.activation)
+    return x, cache, jnp.zeros((), jnp.float32)
+
+
+def dense_block_decode(x, p, cfg: ModelConfig, *, cache, window=0):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_decode(h, p["mla"], cfg, cache=cache,
+                                   window=window)
+    else:
+        a, cache = attn.attention_decode(h, p["attn"], cfg, cache=cache,
+                                         window=window)
+    x = x + a
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    x = x + apply_mlp(h, p["mlp"], cfg.activation)
+    return x, cache, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# MoE (phi3.5-moe, deepseek-v2)
+# --------------------------------------------------------------------- #
+
+def init_moe_block(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 4)
+    p = {
+        "norm1": init_norm(r[0], cfg.d_model, cfg.norm),
+        "norm2": init_norm(r[1], cfg.d_model, cfg.norm),
+        "moe": moe_mod.init_moe(r[2], cfg),
+    }
+    if cfg.mla is not None:
+        p["mla"] = attn.init_mla(r[3], cfg)
+    else:
+        p["attn"] = attn.init_attention(r[3], cfg)
+    return p
+
+
+def moe_block_forward(x, p, cfg: ModelConfig, *, positions, window=0,
+                      use_pallas=False):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    if cfg.mla is not None:
+        a = attn.mla_forward(h, p["mla"], cfg, positions=positions,
+                             window=window, use_pallas=use_pallas)
+    else:
+        a = attn.attention_forward(h, p["attn"], cfg, positions=positions,
+                                   window=window, use_pallas=use_pallas)
+    x = x + a
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    m, aux = moe_mod.moe_forward(h, p["moe"], cfg)
+    return x + m, aux
+
+
+def moe_block_prefill(x, p, cfg: ModelConfig, *, positions, cache, window=0):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_prefill(h, p["mla"], cfg, positions=positions,
+                                    cache=cache, window=window)
+    else:
+        a, cache = attn.attention_prefill(h, p["attn"], cfg,
+                                          positions=positions, cache=cache,
+                                          window=window)
+    x = x + a
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    m, aux = moe_mod.moe_forward(h, p["moe"], cfg)
+    return x + m, cache, aux
+
+
+def moe_block_decode(x, p, cfg: ModelConfig, *, cache, window=0):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_decode(h, p["mla"], cfg, cache=cache,
+                                   window=window)
+    else:
+        a, cache = attn.attention_decode(h, p["attn"], cfg, cache=cache,
+                                         window=window)
+    x = x + a
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    m, aux = moe_mod.moe_forward(h, p["moe"], cfg)
+    return x + m, cache, aux
+
+
+# --------------------------------------------------------------------- #
+# SSM (falcon-mamba: norm -> mamba1 -> residual)
+# --------------------------------------------------------------------- #
+
+def init_ssm_block(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 2)
+    return {
+        "norm": init_norm(r[0], cfg.d_model, cfg.norm),
+        "mamba": ssm_mod.init_mamba1(r[1], cfg),
+    }
+
+
+def ssm_block_forward(x, p, cfg: ModelConfig, *, use_pallas=False, **_):
+    h = apply_norm(x, p["norm"], cfg.norm, cfg.norm_eps)
+    y, _ = ssm_mod.mamba1_forward(h, p["mamba"], cfg, use_pallas=use_pallas)
+    return x + y, jnp.zeros((), jnp.float32)
+
+
+def ssm_block_decode(x, p, cfg: ModelConfig, *, cache, **_):
+    h = apply_norm(x, p["norm"], cfg.norm, cfg.norm_eps)
+    y, cache = ssm_mod.mamba1_decode(h, p["mamba"], cfg, state=cache)
+    return x + y, cache, jnp.zeros((), jnp.float32)
+
+
+def ssm_block_prefill(x, p, cfg: ModelConfig, *, cache, **_):
+    h = apply_norm(x, p["norm"], cfg.norm, cfg.norm_eps)
+    y, cache = ssm_mod.mamba1_forward(h, p["mamba"], cfg, state=cache)
+    return x + y, cache, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# hybrid (zamba2: groups of mamba2 layers + one shared attention block)
+# --------------------------------------------------------------------- #
+
+def init_mamba2_block(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 2)
+    return {
+        "norm": init_norm(r[0], cfg.d_model, cfg.norm),
+        "mamba": ssm_mod.init_mamba2(r[1], cfg),
+    }
+
+
+def mamba2_block_forward(x, p, cfg: ModelConfig, *, use_pallas=False, **_):
+    h = apply_norm(x, p["norm"], cfg.norm, cfg.norm_eps)
+    y, _ = ssm_mod.mamba2_forward(h, p["mamba"], cfg, use_pallas=use_pallas)
+    return x + y, jnp.zeros((), jnp.float32)
+
+
+def mamba2_block_prefill(x, p, cfg: ModelConfig, *, cache, **_):
+    h = apply_norm(x, p["norm"], cfg.norm, cfg.norm_eps)
+    y, cache = ssm_mod.mamba2_forward(h, p["mamba"], cfg, state=cache)
+    return x + y, cache, jnp.zeros((), jnp.float32)
+
+
+def mamba2_block_decode(x, p, cfg: ModelConfig, *, cache, **_):
+    h = apply_norm(x, p["norm"], cfg.norm, cfg.norm_eps)
+    y, cache = ssm_mod.mamba2_decode(h, p["mamba"], cfg, state=cache)
+    return x + y, cache, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# whisper decoder block (self-attn + cross-attn + mlp)
+# --------------------------------------------------------------------- #
+
+def init_encdec_block(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 6)
+    return {
+        "norm1": init_norm(r[0], cfg.d_model, cfg.norm),
+        "self_attn": attn.init_attention(r[1], cfg),
+        "norm2": init_norm(r[2], cfg.d_model, cfg.norm),
+        "cross_attn": attn.init_attention(r[3], cfg),
+        "norm3": init_norm(r[4], cfg.d_model, cfg.norm),
+        "mlp": init_mlp(r[5], cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def _cross_attention(h, p, cfg: ModelConfig, enc_out):
+    dt = h.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt)) + p["bq"].astype(dt)
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt)) + p["bk"].astype(dt)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt)) + p["bv"].astype(dt)
+    o = attn.chunked_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt)) + p["bo"].astype(dt)
+
+
+def _cross_attention_cached(h, p, k, v):
+    """Decode-time cross attention against precomputed enc K/V."""
+    dt = h.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt)) + p["bq"].astype(dt)
+    B, F = k.shape[0], k.shape[1]
+    o = attn.decode_attention(q, k, v, jnp.ones((B, F), bool))
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt)) + p["bo"].astype(dt)
+
+
+def encdec_block_forward(x, p, cfg: ModelConfig, *, positions, enc_out, **_):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    x = x + attn.attention_forward(h, p["self_attn"], cfg,
+                                   positions=positions, causal=True)
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    x = x + _cross_attention(h, p["cross_attn"], cfg, enc_out)
+    h = apply_norm(x, p["norm3"], cfg.norm, cfg.norm_eps)
+    x = x + apply_mlp(h, p["mlp"], cfg.activation)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def encdec_block_prefill(x, p, cfg: ModelConfig, *, positions, enc_out,
+                         cache, **_):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    a, self_cache = attn.attention_prefill(h, p["self_attn"], cfg,
+                                           positions=positions,
+                                           cache=cache["self"])
+    x = x + a
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    x = x + _cross_attention(h, p["cross_attn"], cfg, enc_out)
+    h = apply_norm(x, p["norm3"], cfg.norm, cfg.norm_eps)
+    x = x + apply_mlp(h, p["mlp"], cfg.activation)
+    dt = x.dtype
+    ck = jnp.einsum("bsd,dhk->bshk", enc_out,
+                    p["cross_attn"]["wk"].astype(dt)) \
+        + p["cross_attn"]["bk"].astype(dt)
+    cv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                    p["cross_attn"]["wv"].astype(dt)) \
+        + p["cross_attn"]["bv"].astype(dt)
+    new_cache = {"self": self_cache, "cross_k": ck.astype(cache["cross_k"].dtype),
+                 "cross_v": cv.astype(cache["cross_v"].dtype)}
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def encdec_block_decode(x, p, cfg: ModelConfig, *, cache, **_):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    a, self_cache = attn.attention_decode(h, p["self_attn"], cfg,
+                                          cache=cache["self"])
+    x = x + a
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    x = x + _cross_attention_cached(h, p["cross_attn"],
+                                    cache["cross_k"], cache["cross_v"])
+    h = apply_norm(x, p["norm3"], cfg.norm, cfg.norm_eps)
+    x = x + apply_mlp(h, p["mlp"], cfg.activation)
+    new_cache = dict(cache, self=self_cache)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# whisper encoder block: bidirectional self-attn + mlp
+def init_encoder_block(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 3)
+    return {
+        "norm1": init_norm(r[0], cfg.d_model, cfg.norm),
+        "attn": attn.init_attention(r[1], cfg),
+        "norm2": init_norm(r[2], cfg.d_model, cfg.norm),
+        "mlp": init_mlp(jax.random.fold_in(rng, 3), cfg.d_model, cfg.d_ff,
+                        cfg.activation),
+    }
+
+
+def encoder_block_forward(x, p, cfg: ModelConfig, *, positions):
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    x = x + attn.attention_forward(h, p["attn"], cfg, positions=positions,
+                                   causal=False)
+    h = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+    return x + apply_mlp(h, p["mlp"], cfg.activation)

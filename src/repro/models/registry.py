@@ -1,0 +1,62 @@
+"""Model + input-spec registry: builds Model objects and the batch pytrees
+(concrete or ShapeDtypeStruct) for every (arch, input-shape) combination."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+
+
+def build_model(arch_or_cfg, *, use_pallas: bool = False) -> Model:
+    cfg = arch_or_cfg if isinstance(arch_or_cfg, ModelConfig) \
+        else get_config(arch_or_cfg)
+    return Model(cfg, use_pallas=use_pallas)
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                abstract: bool = True, rng: np.random.Generator = None
+                ) -> Dict[str, Any]:
+    """Batch pytree for a (model, input-shape) pair.
+
+    ``abstract=True`` returns ShapeDtypeStructs (dry-run lowering, zero
+    allocation); otherwise concrete random arrays (smoke tests).
+    Train/prefill shapes give the full-sequence batch; decode shapes give
+    the single-token batch (the cache comes from Model.init_cache).
+
+    For the stub-frontend families, the modality encoder is NOT built
+    (per assignment): ``patch_embeds`` / ``frames`` are precomputed
+    embeddings of the documented shape.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    mk_i = (lambda s: _struct(s, jnp.int32)) if abstract else \
+        (lambda s: jnp.asarray(rng.integers(0, min(cfg.vocab_size, 1000), s),
+                               jnp.int32))
+    mk_f = (lambda s: _struct(s, jnp.dtype(cfg.dtype))) if abstract else \
+        (lambda s: jnp.asarray(rng.standard_normal(s) * 0.02,
+                               jnp.dtype(cfg.dtype)))
+
+    if shape.kind == "decode":
+        batch = {"tokens": mk_i((B, 1))}
+        return batch
+
+    batch = {}
+    s_text = S
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_patches
+        batch["patch_embeds"] = mk_f((B, cfg.n_patches, cfg.vision_dim))
+    if cfg.family == "encdec":
+        batch["frames"] = mk_f((B, cfg.enc_seq_len, cfg.d_model))
+    batch["tokens"] = mk_i((B, s_text))
+    if shape.kind == "train":
+        batch["labels"] = mk_i((B, s_text))
+    return batch

@@ -1,0 +1,333 @@
+"""State-space blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+Training/prefill use chunked scans:
+  * Mamba1 — per-channel diagonal recurrence; within-chunk
+    ``lax.associative_scan``, inter-chunk state carried by a ``lax.scan``.
+  * Mamba2 — the SSD block decomposition: the intra-chunk part is a masked
+    (decay-weighted) attention-like matmul ``(L ∘ C Bᵀ) X`` and only chunk
+    boundary states are materialized, which is the memory layout the Pallas
+    kernel (kernels/mamba_scan.py) tiles into VMEM.
+
+Decode keeps a constant-size state: conv ring buffer + SSM state — this is
+what makes the ``long_500k`` shape native for ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+# --------------------------------------------------------------------- #
+# causal depthwise conv (kernel size d_conv, shift-based)
+# --------------------------------------------------------------------- #
+
+def causal_conv(x, w, b):
+    """x: [B, S, C]; w: [K, C]; b: [C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pad[:, i:i + S] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def conv_step(x_new, conv_state, w, b):
+    """One-token conv. x_new: [B, 1, C]; conv_state: [B, K-1, C] holds the
+    previous K-1 inputs. Returns (y [B,1,C], new_state)."""
+    full = jnp.concatenate([conv_state, x_new], axis=1)      # [B, K, C]
+    y = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y[:, None, :].astype(x_new.dtype), full[:, 1:]
+
+
+# --------------------------------------------------------------------- #
+# Mamba1
+# --------------------------------------------------------------------- #
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # [B, K-1, conv_channels]
+    h: jax.Array      # mamba1: [B, d_inner, d_state]; mamba2: [B, nh, hd, ds]
+
+
+def init_mamba1(rng, cfg: ModelConfig):
+    s, d = cfg.ssm, cfg.d_model
+    di, ds = s.expand * d, s.d_state
+    dt_rank = max(1, (d + 15) // 16)
+    r = jax.random.split(rng, 6)
+    # S4D-real initialization of A
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(r[0], (d, 2 * di), d),
+        "conv_w": dense_init(r[1], (s.d_conv, di), s.d_conv),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": dense_init(r[2], (di, dt_rank + 2 * ds), di),
+        "dt_proj": dense_init(r[3], (dt_rank, di), dt_rank),
+        "dt_bias": jnp.log(jnp.expm1(0.01 * jnp.ones((di,)))),  # softplus^-1
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,)),
+        "out_proj": dense_init(r[4], (di, d), di),
+    }
+
+
+def _mamba1_inner(x_conv, z, params, cfg: ModelConfig, h0, chunk: int):
+    """x_conv: [B, S, di] post-conv+silu; returns (y [B,S,di], h_last)."""
+    s = cfg.ssm
+    di, ds = s.expand * cfg.d_model, s.d_state
+    dt_rank = params["dt_proj"].shape[0]
+    dt = x_conv.dtype
+
+    proj = jnp.einsum("bsc,cr->bsr", x_conv, params["x_proj"].astype(dt))
+    dt_raw, B_s, C_s = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dt_raw, params["dt_proj"].astype(dt))
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # [di, ds]
+
+    S = x_conv.shape[1]
+    pad = (-S) % chunk
+    xp = jnp.pad(x_conv.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    dp = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+    Bp = jnp.pad(B_s.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Cp = jnp.pad(C_s.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    n = xp.shape[1] // chunk
+    Bsz = x_conv.shape[0]
+
+    def split_chunks(t):
+        return t.reshape(Bsz, n, chunk, *t.shape[2:]).transpose(
+            1, 0, *range(2, t.ndim + 1))
+
+    def body(h, inp):
+        xc, dc, bc, cc = inp                    # [B,K,di],[B,K,di],[B,K,ds]x2
+        a = jnp.exp(dc[..., None] * A)          # [B,K,di,ds]
+        b = (dc * xc)[..., None] * bc[:, :, None, :]
+
+        def comb(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+
+        aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+        states = bb + aa * h[:, None]
+        y = jnp.einsum("bkds,bks->bkd", states, cc)
+        return states[:, -1], y
+
+    h_last, ys = jax.lax.scan(
+        body, h0.astype(jnp.float32),
+        (split_chunks(xp), split_chunks(dp), split_chunks(Bp), split_chunks(Cp)))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, n * chunk, di)[:, :S]
+    y = y + params["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(dt), h_last
+
+
+def mamba1_forward(x, params, cfg: ModelConfig, *, state: SSMState = None,
+                   use_pallas: bool = False):
+    """x: [B, S, d] -> ([B, S, d], new_state or None)."""
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    dt = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv = causal_conv(x_in, params["conv_w"], params["conv_b"])
+    x_conv = jax.nn.silu(x_conv.astype(jnp.float32)).astype(dt)
+    B = x.shape[0]
+    h0 = jnp.zeros((B, di, s.d_state), jnp.float32) if state is None else state.h
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        y, h_last = kernel_ops.mamba1_scan_op(
+            x_conv, z, params, cfg, h0, chunk=s.chunk)
+    else:
+        y, h_last = _mamba1_inner(x_conv, z, params, cfg, h0, chunk=s.chunk)
+    out = jnp.einsum("bsc,cd->bsd", y, params["out_proj"].astype(dt))
+    new_state = None
+    if state is not None:
+        conv = jnp.concatenate([state.conv, x_in], axis=1)[:, -(s.d_conv - 1):]
+        new_state = SSMState(conv=conv.astype(state.conv.dtype),
+                             h=h_last.astype(state.h.dtype))
+    return out, new_state
+
+
+def mamba1_decode(x, params, cfg: ModelConfig, *, state: SSMState):
+    """One token: x [B, 1, d]."""
+    s = cfg.ssm
+    ds = s.d_state
+    dt = x.dtype
+    dt_rank = params["dt_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv = conv_step(x_in, state.conv, params["conv_w"], params["conv_b"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32))
+    proj = jnp.einsum("bsc,cr->bsr", x_c.astype(dt), params["x_proj"].astype(dt))
+    dt_raw, B_s, C_s = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dt_raw, params["dt_proj"].astype(dt))
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))[:, 0]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(delta[..., None] * A)                      # [B, di, ds]
+    b = (delta * x_c[:, 0])[..., None] * B_s[:, 0, None, :].astype(jnp.float32)
+    h = a * state.h.astype(jnp.float32) + b
+    y = jnp.einsum("bds,bs->bd", h, C_s[:, 0].astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32) * x_c[:, 0]
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = jnp.einsum("bc,cd->bd", y.astype(dt), params["out_proj"].astype(dt))
+    return out[:, None], SSMState(conv=conv.astype(state.conv.dtype),
+                                  h=h.astype(state.h.dtype))
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 / SSD
+# --------------------------------------------------------------------- #
+
+def _m2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = s.n_heads or di // s.head_dim
+    return di, nh, di // nh, s.d_state
+
+
+def init_mamba2(rng, cfg: ModelConfig):
+    s, d = cfg.ssm, cfg.d_model
+    di, nh, hd, ds = _m2_dims(cfg)
+    r = jax.random.split(rng, 4)
+    conv_ch = di + 2 * ds
+    return {
+        "in_proj": dense_init(r[0], (d, 2 * di + 2 * ds + nh), d),
+        "conv_w": dense_init(r[1], (s.d_conv, conv_ch), s.d_conv),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "dt_bias": jnp.log(jnp.expm1(0.01 * jnp.ones((nh,)))),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,)),
+        "norm_scale": jnp.ones((di,)),   # gated RMSNorm before out_proj
+        "out_proj": dense_init(r[2], (di, d), di),
+    }
+
+
+def _ssd_chunk_scan(xh, dt_h, B_s, C_s, A, h0, chunk: int):
+    """SSD block decomposition.
+
+    xh: [B, S, nh, hd]; dt_h: [B, S, nh]; B_s/C_s: [B, S, ds];
+    A: [nh] (negative); h0: [B, nh, hd, ds].  Returns (y, h_last).
+    """
+    Bsz, S, nh, hd = xh.shape
+    ds = B_s.shape[-1]
+    pad = (-S) % chunk
+    xp = jnp.pad(xh.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dp = jnp.pad(dt_h, ((0, 0), (0, pad), (0, 0)))
+    Bp = jnp.pad(B_s.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Cp = jnp.pad(C_s.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    n = xp.shape[1] // chunk
+
+    def split(t):
+        return t.reshape(Bsz, n, chunk, *t.shape[2:]).transpose(
+            1, 0, *range(2, t.ndim + 1))
+
+    def body(h, inp):
+        xc, dc, bc, cc = inp          # [B,K,nh,hd],[B,K,nh],[B,K,ds],[B,K,ds]
+        da = dc * A                   # [B,K,nh] log-decay increments (<=0)
+        s_cum = jnp.cumsum(da, axis=1)               # [B,K,nh]
+        # intra-chunk: M[i,j] = exp(s_i - s_j) dt_j (C_i . B_j), i >= j
+        scores = jnp.einsum("bis,bjs->bij", cc, bc)  # [B,K,K]
+        decay = s_cum[:, :, None, :] - s_cum[:, None, :, :]   # [B,i,j,nh]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        M = jnp.where(causal[None, :, :, None],
+                      jnp.exp(decay) * dc[:, None, :, :], 0.0)
+        M = M * scores[..., None]                     # [B,i,j,nh]
+        y_intra = jnp.einsum("bijh,bjhd->bihd", M, xc)
+        # inter-chunk: y_i += exp(s_i) C_i . h_carry
+        y_inter = jnp.einsum("bis,bhds->bihd", cc, h) \
+            * jnp.exp(s_cum)[..., None]
+        y = y_intra + y_inter
+        # state update: h' = exp(s_K) h + sum_j exp(s_K - s_j) dt_j x_j ⊗ B_j
+        tail = jnp.exp(s_cum[:, -1:, :] - s_cum) * dc  # [B,K,nh]
+        dh = jnp.einsum("bjh,bjhd,bjs->bhds", tail, xc, bc)
+        h_new = jnp.exp(s_cum[:, -1])[:, :, None, None] * h + dh
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(
+        body, h0.astype(jnp.float32),
+        (split(xp), split(dp), split(Bp), split(Cp)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, n * chunk, nh, hd)[:, :S]
+    return y, h_last
+
+
+def mamba2_forward(x, params, cfg: ModelConfig, *, state: SSMState = None,
+                   use_pallas: bool = False):
+    s = cfg.ssm
+    di, nh, hd, ds = _m2_dims(cfg)
+    dt = x.dtype
+    B = x.shape[0]
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt))
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * ds], axis=-1)
+    xBC = causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(dt)
+    x_in, B_s, C_s = jnp.split(xBC, [di, di + ds], axis=-1)
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                            + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = x_in.reshape(B, -1, nh, hd)
+    h0 = jnp.zeros((B, nh, hd, ds), jnp.float32) if state is None else \
+        state.h.astype(jnp.float32)
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        y, h_last = kernel_ops.ssd_scan_op(xh, delta, B_s, C_s, A, h0,
+                                           chunk=s.chunk)
+    else:
+        y, h_last = _ssd_chunk_scan(xh, delta, B_s, C_s, A, h0, chunk=s.chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(B, -1, di)
+    # gated RMSNorm (mamba2 places the gate inside the norm)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm_scale"]
+    out = jnp.einsum("bsc,cd->bsd", y.astype(dt), params["out_proj"].astype(dt))
+    new_state = None
+    if state is not None:
+        conv = jnp.concatenate(
+            [state.conv, proj[..., di:2 * di + 2 * ds]], axis=1)[:, -(s.d_conv - 1):]
+        new_state = SSMState(conv=conv.astype(state.conv.dtype),
+                             h=h_last.astype(state.h.dtype))
+    return out, new_state
+
+
+def mamba2_decode(x, params, cfg: ModelConfig, *, state: SSMState):
+    s = cfg.ssm
+    di, nh, hd, ds = _m2_dims(cfg)
+    dt = x.dtype
+    B = x.shape[0]
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt))
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * ds], axis=-1)
+    xBC_c, conv = conv_step(xBC, state.conv, params["conv_w"], params["conv_b"])
+    xBC_c = jax.nn.silu(xBC_c.astype(jnp.float32))
+    x_in, B_s, C_s = jnp.split(xBC_c[:, 0], [di, di + ds], axis=-1)
+    delta = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                            + params["dt_bias"].astype(jnp.float32))  # [B,nh]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(delta * A)                                  # [B, nh]
+    xh = x_in.reshape(B, nh, hd)
+    dh = jnp.einsum("bh,bhd,bs->bhds", delta, xh, B_s)
+    h = a[:, :, None, None] * state.h.astype(jnp.float32) + dh
+    y = jnp.einsum("bhds,bs->bhd", h, C_s)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, di)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm_scale"]
+    out = jnp.einsum("bc,cd->bd", y.astype(dt), params["out_proj"].astype(dt))
+    return out[:, None], SSMState(conv=conv.astype(state.conv.dtype),
+                                  h=h.astype(state.h.dtype))
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    if s.version == 1:
+        di = s.expand * cfg.d_model
+        return SSMState(conv=jnp.zeros((batch, s.d_conv - 1, di), dtype),
+                        h=jnp.zeros((batch, di, s.d_state), jnp.float32))
+    di, nh, hd, ds = _m2_dims(cfg)
+    return SSMState(conv=jnp.zeros((batch, s.d_conv - 1, di + 2 * ds), dtype),
+                    h=jnp.zeros((batch, nh, hd, ds), jnp.float32))

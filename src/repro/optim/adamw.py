@@ -1,0 +1,81 @@
+"""AdamW with global-norm clipping, built so ZeRO plans can shard its state.
+
+The optimizer state mirrors the parameter pytree (m, v per leaf), so a plan
+can place it with arbitrary PartitionSpecs (ZeRO-2 shards it over the data
+axes).  Updates are pure functions of (grads, state, params) — the paper's
+ZeRO2 reduce-scatter / all-gather pattern is realized by the *shardings*
+the train step pins on grads / opt state / new params, not by this module.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array        # scalar int32
+    m: Any                 # first moment  (params-shaped)
+    v: Any                 # second moment (params-shaped)
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+_NO_DECAY = ("scale", "bias", "gates", "dt_bias", "A_log", "D", "norm_scale",
+             "q_norm", "kv_norm")
+
+
+def _decay_mask(path) -> bool:
+    last = ""
+    for p in path:
+        if hasattr(p, "key"):
+            last = str(p.key)
+    return last not in _NO_DECAY and "norm" not in last
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: TrainConfig,
+                 lr: jax.Array) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_state, stats)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state.v, grads)
+
+    def upd(path, p, m, v):
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(upd, params, new_m, new_v)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr}

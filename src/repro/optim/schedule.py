@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_at(step, cfg: TrainConfig):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - 0.9 * frac
+    else:  # cosine to 10%
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.learning_rate * warm * decay

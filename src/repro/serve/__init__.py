@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, ServeStats, sample_tokens
+
+__all__ = ["Engine", "ServeStats", "sample_tokens"]

@@ -1,0 +1,106 @@
+"""Batched serving engine: prefill + autoregressive decode over the plan's
+sharded caches.  ``long context`` uses the sliding-window ring cache for
+attention archs and the native constant-size state for SSM/hybrid."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.plans import Plan
+from repro.core.steps import build_prefill_step, build_serve_step
+from repro.models.model import Model
+
+
+def sample_tokens(logits, rng_key, *, temperature: float = 0.0,
+                  top_k: int = 0):
+    """Greedy (temperature 0) or top-k temperature sampling."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(rng_key, logits).astype(jnp.int32)
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: List[float] = field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        times = self.decode_s[1:] or self.decode_s
+        return 1.0 / float(np.mean(times)) if times else 0.0
+
+
+class Engine:
+    """Holds compiled prefill/decode steps for one (model, plan, mesh)."""
+
+    def __init__(self, model: Model, plan: Plan, mesh, *, batch_size: int,
+                 max_len: int, window: int = 0, temperature: float = 0.0,
+                 top_k: int = 0):
+        self.model, self.plan, self.mesh = model, plan, mesh
+        self.window = window
+        self.temperature, self.top_k = temperature, top_k
+        self.batch_size, self.max_len = batch_size, max_len
+        with jax.set_mesh(mesh):
+            cache = model.init_cache(batch_size, max_len, window=window)
+            self._cache0 = cache
+            c_shapes = jax.eval_shape(lambda: cache)
+            self._serve_step = None
+            self._cache_shapes = c_shapes
+
+    def _build(self, params, batch):
+        with jax.set_mesh(self.mesh):
+            p_shapes = jax.eval_shape(lambda: params)
+            b_shapes = jax.eval_shape(lambda: batch)
+            self._prefill, sh_p = build_prefill_step(
+                self.model, self.plan, self.mesh, params_shapes=p_shapes,
+                batch_shapes=b_shapes, cache_shapes=self._cache_shapes,
+                batch_size=self.batch_size, window=self.window)
+            self._serve_step, sh_s = build_serve_step(
+                self.model, self.plan, self.mesh, params_shapes=p_shapes,
+                cache_shapes=self._cache_shapes,
+                batch_size=self.batch_size, window=self.window)
+            self.shardings = {**sh_p, **sh_s}
+
+    def generate(self, params, batch: Dict[str, Any], n_tokens: int, *,
+                 seed: int = 0) -> Dict[str, Any]:
+        """batch: prompt inputs (tokens [B, S] + modality extras).
+        Returns generated token matrix [B, n_tokens] and timing stats."""
+        if self._serve_step is None:
+            self._build(params, batch)
+        stats = ServeStats()
+        key = jax.random.key(seed)
+        with jax.set_mesh(self.mesh):
+            cache = jax.device_put(self._cache0, self.shardings["cache"])
+            t0 = time.perf_counter()
+            logits, cache = self._prefill(params, batch, cache)
+            logits.block_until_ready()
+            stats.prefill_s = time.perf_counter() - t0
+            key, k = jax.random.split(key)
+            tok = sample_tokens(logits, k, temperature=self.temperature,
+                                top_k=self.top_k)[:, None]
+            out = [np.asarray(tok)]
+            for _ in range(n_tokens - 1):
+                t0 = time.perf_counter()
+                logits, next_tok, cache = self._serve_step(params, cache, tok)
+                if self.temperature > 0:
+                    key, k = jax.random.split(key)
+                    tok = sample_tokens(logits, k,
+                                        temperature=self.temperature,
+                                        top_k=self.top_k)[:, None]
+                else:
+                    tok = next_tok
+                tok.block_until_ready()
+                stats.decode_s.append(time.perf_counter() - t0)
+                out.append(np.asarray(tok))
+        return {"tokens": np.concatenate(out, axis=1), "stats": stats}

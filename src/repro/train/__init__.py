@@ -1,0 +1,6 @@
+from repro.train.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.loop import TrainResult, model_flops_per_step, train
+
+__all__ = ["TrainResult", "latest_checkpoint", "model_flops_per_step",
+           "restore_checkpoint", "save_checkpoint", "train"]

@@ -1,0 +1,95 @@
+"""Checkpointing: params + optimizer state + step to sharded .npz files.
+
+Leaves are flattened with tree paths as keys; arrays are gathered to host
+(fine at SLM scale, the paper's regime) and split across ``n_files`` npz
+shards to bound file sizes.  Restore reproduces the exact pytree and can
+re-place leaves onto any sharding (plan changes between runs are allowed —
+the technique-selection algorithm may switch plans mid-project).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state=None, *,
+                    n_files: int = 4, extra: Optional[Dict] = None) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    trees = {"params": params}
+    if opt_state is not None:
+        trees["opt"] = opt_state
+    manifest: Dict[str, Any] = {"step": step, "files": {},
+                                "extra": extra or {}}
+    for name, tree in trees.items():
+        flat = _flatten(tree)
+        keys = sorted(flat)
+        shards = [keys[i::n_files] for i in range(n_files)]
+        for i, ks in enumerate(shards):
+            if not ks:
+                continue
+            fname = f"{name}_{i:02d}.npz"
+            np.savez(os.path.join(path, fname), **{k: flat[k] for k in ks})
+            manifest["files"].setdefault(name, []).append(fname)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    return os.path.join(ckpt_dir, steps[-1]) if steps else None
+
+
+def restore_checkpoint(path: str, params_like, opt_like=None,
+                       shardings: Optional[Dict] = None
+                       ) -> Tuple[Any, Any, int]:
+    """Restore onto templates; optional shardings re-place the leaves."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def load(name, like, shard_tree):
+        flat: Dict[str, np.ndarray] = {}
+        for fname in manifest["files"].get(name, []):
+            with np.load(os.path.join(path, fname)) as z:
+                flat.update({k: z[k] for k in z.files})
+        leaves_paths = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        shard_leaves = (jax.tree.leaves(shard_tree)
+                        if shard_tree is not None else None)
+        for i, (p, leaf) in enumerate(leaves_paths[0]):
+            key = "/".join(
+                str(getattr(q, "key", getattr(q, "name", getattr(q, "idx", q))))
+                for q in p)
+            arr = flat[key]
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(f"{key}: ckpt {arr.shape} != {leaf.shape}")
+            a = jnp.asarray(arr, dtype=leaf.dtype)
+            if shard_leaves is not None:
+                a = jax.device_put(a, shard_leaves[i])
+            out.append(a)
+        return jax.tree_util.tree_unflatten(leaves_paths[1], out)
+
+    params = load("params", params_like,
+                  shardings.get("params") if shardings else None)
+    opt = None
+    if opt_like is not None and "opt" in manifest["files"]:
+        opt = load("opt", opt_like, shardings.get("opt") if shardings else None)
+    return params, opt, manifest["step"]

@@ -1,0 +1,68 @@
+"""Held-out evaluation: perplexity over a packed dataset.
+
+The paper's end goal is low-perplexity SLMs whose embeddings feed
+domain-specific vector databases (§I) — this is the measurement half, plus
+the mean-pooled hidden-state embedding extractor those databases would
+ingest.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plans import Plan
+from repro.models.model import Model
+
+
+def evaluate_perplexity(model: Model, params, loader, *, max_batches: int = 0,
+                        mesh=None) -> Dict[str, float]:
+    """Token-level NLL / perplexity over (up to) one epoch."""
+    @jax.jit
+    def batch_nll(params, batch):
+        _, metrics = model.loss(params, batch, remat=False)
+        return metrics["ce"], metrics["tokens"]
+
+    total_nll = 0.0
+    total_tokens = 0.0
+    n = loader.batches_per_epoch if not max_batches \
+        else min(max_batches, loader.batches_per_epoch)
+    ctx = jax.set_mesh(mesh) if mesh is not None else _null_ctx()
+    with ctx:
+        for i in range(n):
+            batch = jax.tree.map(jnp.asarray, loader.batch_at(i))
+            ce, toks = batch_nll(params, batch)
+            total_nll += float(ce) * float(toks)
+            total_tokens += float(toks)
+    nll = total_nll / max(total_tokens, 1.0)
+    return {"nll": nll, "perplexity": math.exp(min(nll, 30.0)),
+            "tokens": total_tokens}
+
+
+def embed_texts(model: Model, params, token_batches) -> np.ndarray:
+    """Mean-pooled final hidden states — the embeddings the paper's vector
+    databases store.  token_batches: iterable of [B, S] int32."""
+    cfg = model.cfg
+
+    @jax.jit
+    def pool(params, tokens):
+        x, positions, _ = model._embed_inputs(params, {"tokens": tokens})
+        h, _ = model.run_stack(params["layers"], x, positions,
+                               shared=params.get("shared"), remat=False)
+        mask = (tokens > 0).astype(jnp.float32)[..., None]
+        return jnp.sum(h.astype(jnp.float32) * mask, axis=1) \
+            / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+
+    outs = [np.asarray(pool(params, jnp.asarray(t))) for t in token_batches]
+    return np.concatenate(outs, axis=0)
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,88 @@
+"""Training loop: plan-aware pretraining driver.
+
+Mirrors the paper's measurement methodology (§III-B): wall-clock per epoch
+and average achieved TFLOP/s (model FLOPs 6·N·D / step time), which is what
+Algorithm 1 probes when choosing a technique.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.plans import Plan
+from repro.core.steps import build_train_step
+from repro.models.model import Model
+from repro.optim import init_adamw
+from repro.train.checkpoint import save_checkpoint
+
+
+@dataclass
+class TrainResult:
+    losses: List[float] = field(default_factory=list)
+    step_times: List[float] = field(default_factory=list)
+    metrics_last: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def avg_step_time(self) -> float:
+        times = self.step_times[1:] or self.step_times  # drop compile step
+        return float(np.mean(times)) if times else float("nan")
+
+    def tflops(self, model_flops_per_step: float) -> float:
+        t = self.avg_step_time
+        return model_flops_per_step / t / 1e12 if t > 0 else 0.0
+
+
+def model_flops_per_step(cfg: ModelConfig, tokens_per_step: int) -> float:
+    """6·N_active·D — the paper's 'training performance' denominator."""
+    return 6.0 * cfg.active_param_count() * tokens_per_step
+
+
+def train(model: Model, plan: Plan, mesh, tcfg: TrainConfig, loader, *,
+          steps: int, params=None, opt_state=None,
+          log_every: int = 10, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 0,
+          log_fn: Callable[[str], None] = print) -> TrainResult:
+    cfg = model.cfg
+    with jax.set_mesh(mesh):
+        if params is None:
+            params = model.init(jax.random.key(tcfg.seed))
+        if opt_state is None:
+            opt_state = init_adamw(params)
+        first = loader.batch_at(0)
+        p_shapes = jax.eval_shape(lambda: params)
+        b_shapes = jax.eval_shape(lambda: first)
+        step_fn, sh = build_train_step(model, plan, mesh, tcfg,
+                                       params_shapes=p_shapes,
+                                       batch_shapes=b_shapes)
+        params = jax.device_put(params, sh["params"])
+        opt_state = jax.device_put(opt_state, sh["opt"])
+
+        result = TrainResult()
+        flops = model_flops_per_step(
+            cfg, first["tokens"].shape[0] * first["tokens"].shape[1]
+            * loader.n_shards)
+        for i in range(steps):
+            batch = jax.device_put(loader.batch_at(i), sh["batch"])
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])         # blocks on completion
+            dt = time.perf_counter() - t0
+            result.losses.append(loss)
+            result.step_times.append(dt)
+            if log_every and (i % log_every == 0 or i == steps - 1):
+                log_fn(f"step {i:5d} loss {loss:8.4f} "
+                       f"ce {float(metrics['ce']):8.4f} "
+                       f"gnorm {float(metrics['grad_norm']):7.3f} "
+                       f"{dt * 1e3:8.1f} ms "
+                       f"{flops / max(dt, 1e-9) / 1e12:6.2f} TFLOP/s")
+            if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+                save_checkpoint(ckpt_dir, i + 1, params, opt_state)
+        result.metrics_last = {k: float(v) for k, v in metrics.items()}
+        if ckpt_dir:
+            save_checkpoint(ckpt_dir, steps, params, opt_state)
+    return result

@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single CPU device; multi-device tests spawn
+subprocesses with their own --xla_force_host_platform_device_count."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def subprocess_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env

@@ -1,0 +1,48 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.optim import init_adamw
+from repro.train import (latest_checkpoint, restore_checkpoint,
+                         save_checkpoint)
+
+
+def test_roundtrip_params_and_opt(tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = init_adamw(params)
+    path = save_checkpoint(str(tmp_path), 7, params, opt, n_files=3)
+    p2, o2, step = restore_checkpoint(path, params, opt)
+    assert step == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, p2)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), opt, o2)
+
+
+def test_latest_checkpoint_ordering(tmp_path):
+    cfg = get_config("whisper-small").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(1))
+    save_checkpoint(str(tmp_path), 5, params)
+    save_checkpoint(str(tmp_path), 50, params)
+    assert latest_checkpoint(str(tmp_path)).endswith("step_00000050")
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    path = save_checkpoint(str(tmp_path), 1, params)
+    import dataclasses
+    bad_cfg = dataclasses.replace(cfg, d_ff=cfg.d_ff * 2)
+    bad = Model(bad_cfg).init(jax.random.key(0))
+    try:
+        restore_checkpoint(path, bad)
+        raise AssertionError("expected shape mismatch")
+    except ValueError:
+        pass

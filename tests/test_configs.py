@@ -1,0 +1,98 @@
+"""Config-system tests: every assigned architecture is present with the
+exact published hyperparameters and a spec-conforming reduced() variant."""
+import pytest
+
+from repro.configs import (ARCH_CONFIGS, ASSIGNED_ARCHS, INPUT_SHAPES,
+                           get_config, get_shape)
+
+# published parameter counts (billions), ±12% tolerance for structural
+# simplifications documented in DESIGN.md
+PUBLISHED_PARAMS = {
+    "minicpm3-4b": 4.0,
+    "phi-3-vision-4.2b": 4.2,
+    "phi3.5-moe-42b-a6.6b": 41.9,
+    "falcon-mamba-7b": 7.3,
+    "zamba2-2.7b": 2.7,
+    "llama3-405b": 405.0,
+    "phi4-mini-3.8b": 3.8,
+    "whisper-small": 0.244,
+    "deepseek-v2-236b": 236.0,
+    "llama3.2-3b": 3.2,
+}
+
+ACTIVE_PARAMS = {
+    "phi3.5-moe-42b-a6.6b": 6.6,
+    "deepseek-v2-236b": 21.0,
+}
+
+
+def test_all_assigned_archs_present():
+    assert len(ASSIGNED_ARCHS) == 10
+    for arch in ASSIGNED_ARCHS:
+        assert arch in ARCH_CONFIGS
+
+
+def test_six_family_span():
+    fams = {get_config(a).family for a in ASSIGNED_ARCHS}
+    assert fams == {"dense", "vlm", "moe", "ssm", "hybrid", "encdec"}
+
+
+@pytest.mark.parametrize("arch,target", sorted(PUBLISHED_PARAMS.items()))
+def test_param_counts_match_published(arch, target):
+    got = get_config(arch).param_count() / 1e9
+    assert abs(got - target) / target < 0.15, (arch, got, target)
+
+
+@pytest.mark.parametrize("arch,target", sorted(ACTIVE_PARAMS.items()))
+def test_active_param_counts(arch, target):
+    got = get_config(arch).active_param_count() / 1e9
+    assert abs(got - target) / target < 0.15, (arch, got, target)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_variant_conforms(arch):
+    """Spec: smoke variant has 2 layers, d_model<=512, <=4 experts."""
+    r = get_config(arch).reduced()
+    assert r.n_layers == 2
+    assert r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.n_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+def test_exact_assignment_hyperparams():
+    c = get_config("llama3-405b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (126, 16384, 128, 8, 53248, 128256)
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k,
+            c.moe.n_shared_experts, c.mla.kv_lora_rank) == \
+        (60, 5120, 160, 6, 2, 512)
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.ssm.d_state, c.d_ff) == (64, 4096, 16, 0)
+    c = get_config("zamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.ssm.d_state, c.ssm.version) == \
+        (54, 2560, 64, 2)
+    c = get_config("whisper-small")
+    assert (c.n_layers, c.n_enc_layers, c.d_model, c.vocab_size) == \
+        (12, 12, 768, 51865)
+
+
+def test_input_shapes_exact():
+    assert len(INPUT_SHAPES) == 4
+    s = get_shape("train_4k")
+    assert (s.seq_len, s.global_batch, s.kind) == (4096, 256, "train")
+    s = get_shape("prefill_32k")
+    assert (s.seq_len, s.global_batch, s.kind) == (32768, 32, "prefill")
+    s = get_shape("decode_32k")
+    assert (s.seq_len, s.global_batch, s.kind) == (32768, 128, "decode")
+    s = get_shape("long_500k")
+    assert (s.seq_len, s.global_batch, s.kind) == (524288, 1, "decode")
+
+
+def test_long_context_policy():
+    """ssm/hybrid native; dense via sliding window; whisper has none."""
+    assert get_config("falcon-mamba-7b").supports_long_context
+    assert get_config("zamba2-2.7b").supports_long_context
+    assert get_config("llama3-405b").supports_long_context  # window variant
+    assert not get_config("whisper-small").supports_long_context

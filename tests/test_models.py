@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (REDUCED variants per the assignment: 2
+layers, d_model<=512, <=4 experts): one forward/train step on CPU asserting
+output shapes + no NaNs, plus forward/prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import ShapeConfig
+from repro.models import Model
+from repro.models.registry import input_specs
+
+SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+def _setup(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = input_specs(cfg, SHAPE, abstract=False,
+                        rng=np.random.default_rng(0))
+    return cfg, model, params, batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, model, params, batch = _setup(arch)
+    logits, aux = model.forward(params, batch, remat=False)
+    B = SHAPE.global_batch
+    s_text = batch["tokens"].shape[1]
+    exp_len = s_text + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, exp_len, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_train_step_no_nan(arch):
+    cfg, model, params, batch = _setup(arch)
+
+    def loss_fn(p):
+        return model.loss(p, batch, remat=True)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """serve_step(prefill(x[:-1])) must reproduce forward(x) logits."""
+    cfg, model, params, batch = _setup(arch)
+    full_logits, _ = model.forward(params, batch, remat=False)
+    cache = model.init_cache(SHAPE.global_batch, 64)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :-1]
+    lg_pre, cache = model.prefill(params, pre_batch, cache)
+    lg_dec, cache = model.decode_step(params, cache,
+                                      batch["tokens"][:, -1:])
+    np.testing.assert_allclose(np.asarray(lg_pre),
+                               np.asarray(full_logits[:, -2]),
+                               atol=0.08, rtol=0.05)
+    np.testing.assert_allclose(np.asarray(lg_dec),
+                               np.asarray(full_logits[:, -1]),
+                               atol=0.08, rtol=0.05)
+
+
+def test_sliding_window_decode_ring_buffer():
+    """Windowed decode must agree with full-cache decode once both see the
+    same (recent) context, while using a bounded cache."""
+    cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(),
+                              sliding_window=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    B, prompt_len, n_gen = 2, 24, 4
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, prompt_len)),
+                       jnp.int32)
+    # windowed path
+    cache_w = model.init_cache(B, 1024, window=cfg.sliding_window)
+    assert cache_w.k.shape[2] == cfg.sliding_window
+    lg_w, cache_w = model.prefill(params, {"tokens": toks}, cache_w,
+                                  window=cfg.sliding_window)
+    # ring buffer holds exactly the last `window` tokens
+    assert int(cache_w.index[0]) == prompt_len
+    for _ in range(n_gen):
+        nxt = jnp.argmax(lg_w, -1)[:, None].astype(jnp.int32)
+        lg_w, cache_w = model.decode_step(params, cache_w, nxt,
+                                          window=cfg.sliding_window)
+    assert bool(jnp.isfinite(lg_w).all())
+
+
+def test_mla_latent_cache_is_compressed():
+    """MLA decode cache stores the latent (kv_lora + rope), not full K/V."""
+    cfg = get_config("minicpm3-4b").reduced()
+    model = Model(cfg)
+    cache = model.init_cache(2, 64)
+    # stacked [L, B, S, R]; R = kv_lora_rank << n_heads * head_dim
+    assert cache.c_kv.shape[-1] == cfg.mla.kv_lora_rank
+    assert cache.k_rope.shape[-1] == cfg.mla.rope_head_dim
+    full_kv = 2 * cfg.n_kv_heads * cfg.head_dim
+    assert cache.c_kv.shape[-1] + cache.k_rope.shape[-1] < full_kv
+
+
+def test_moe_aux_loss_range():
+    """Load-balance aux: E * sum f_e p_e in [1, E] => aux in
+    [coef, E*coef] per layer (near-uniform routing at init)."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = input_specs(cfg, SHAPE, abstract=False,
+                        rng=np.random.default_rng(2))
+    _, metrics = model.loss(params, batch, remat=False)
+    coef = cfg.moe.router_aux_coef
+    aux = float(metrics["aux"])
+    assert 2 * coef * 0.9 <= aux <= 2 * coef * cfg.moe.n_experts

@@ -1,0 +1,71 @@
+"""Optimizer tests: AdamW matches the reference formula, clipping and
+schedule properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.optim import adamw_update, global_norm, init_adamw, lr_at
+from repro.optim.adamw import clip_by_global_norm
+
+
+def test_adamw_matches_manual_formula():
+    cfg = TrainConfig(learning_rate=1e-2, weight_decay=0.0, grad_clip=1e9,
+                      beta1=0.9, beta2=0.999, eps=1e-8)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    state = init_adamw(params)
+    new_params, new_state, _ = adamw_update(grads, state, params, cfg,
+                                            jnp.float32(1e-2))
+    g = np.asarray(grads["w"])
+    m = 0.1 * g
+    v = 0.001 * g ** 2
+    mh, vh = m / 0.1, v / 0.001
+    want = np.asarray(params["w"]) - 1e-2 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_params["w"]), want, rtol=1e-5)
+    assert int(new_state.step) == 1
+
+
+def test_weight_decay_skips_norm_like_params():
+    cfg = TrainConfig(learning_rate=1e-2, weight_decay=1.0, grad_clip=1e9)
+    params = {"w": jnp.ones((3,)), "scale": jnp.ones((3,))}
+    grads = {"w": jnp.zeros((3,)), "scale": jnp.zeros((3,))}
+    state = init_adamw(params)
+    new_params, _, _ = adamw_update(grads, state, params, cfg,
+                                    jnp.float32(1e-2))
+    assert float(jnp.max(jnp.abs(new_params["scale"] - 1.0))) < 1e-7
+    assert float(jnp.max(jnp.abs(new_params["w"] - 1.0))) > 1e-4  # decayed
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    scale=st.floats(0.01, 1000.0),
+    max_norm=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_clip_property(scale, max_norm, seed):
+    """After clipping, global norm <= max_norm (+eps) and direction kept."""
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.standard_normal(5) * scale, jnp.float32),
+         "b": jnp.asarray(rng.standard_normal((2, 3)) * scale, jnp.float32)}
+    clipped, norm = clip_by_global_norm(g, max_norm)
+    new_norm = float(global_norm(clipped))
+    assert new_norm <= max_norm * 1.001 + 1e-6
+    if float(norm) <= max_norm:  # no-op when under the limit
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(g["a"], np.float32), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(steps=st.integers(2, 1000))
+def test_schedule_properties(steps):
+    cfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=1000,
+                      schedule="cosine")
+    lr0 = float(lr_at(jnp.asarray(0), cfg))
+    lr_peak = float(lr_at(jnp.asarray(10), cfg))
+    lr_s = float(lr_at(jnp.asarray(steps), cfg))
+    assert 0 < lr0 < lr_peak <= 1e-3 + 1e-9
+    assert 0 < lr_s <= 1e-3 + 1e-9
+    # cosine floor: never below 10% after decay
+    assert float(lr_at(jnp.asarray(1000), cfg)) >= 1e-4 * 0.99

@@ -1,0 +1,105 @@
+"""Sharding rule-engine tests: spec resolution per architecture and the
+divisibility invariant (hypothesis)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import sharding as shardlib
+from repro.core.plans import get_plan
+from repro.models import Model
+
+AXIS_SIZES = {"data": 16, "model": 16}
+
+
+def _shapes(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    return cfg, jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_specs_divide_for_every_arch(arch):
+    """Every emitted PartitionSpec must divide its dim by the axis size —
+    the invariant jit in_shardings enforce (minicpm3's 40 heads et al.)."""
+    cfg, shapes = _shapes(arch)
+    plan = get_plan("shard")
+    amap = plan.axis_map(mesh=_FakeMesh())
+    specs = shardlib.param_specs(shapes, amap, cfg.family, AXIS_SIZES)
+
+    def check(leaf, spec):
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([AXIS_SIZES[a] for a in axes]))
+            assert leaf.shape[i] % size == 0, (leaf.shape, spec)
+
+    jax.tree.map(check, shapes, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+    # sanity: at least one leaf is actually sharded for each arch
+    n_sharded = sum(
+        1 for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        if isinstance(s, P) and any(e is not None for e in s))
+    assert n_sharded > 0, arch
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = AXIS_SIZES
+
+
+def test_expert_weights_sharded_on_expert_axis():
+    cfg, shapes = _shapes("phi3.5-moe-42b-a6.6b")
+    # full config: 16 experts over 16-way model axis
+    cfg_full = get_config("phi3.5-moe-42b-a6.6b")
+    model = Model(cfg_full)
+    shapes_full = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = shardlib.param_specs(shapes_full,
+                                 get_plan("shard").axis_map(_FakeMesh()),
+                                 "moe", AXIS_SIZES)
+    spec = specs["layers"]["moe"]["w_gate"]
+    assert spec[1] == "model", spec   # [L, E, d, ff] -> expert dim sharded
+
+
+def test_nondivisible_heads_fall_back_to_replication():
+    """minicpm3: 40 heads on a 16-way axis must NOT shard the head dim
+    (contraction-dim sharding all-reduces every score block)."""
+    cfg_full = get_config("minicpm3-4b")
+    model = Model(cfg_full)
+    shapes_full = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = shardlib.param_specs(shapes_full,
+                                 get_plan("shard").axis_map(_FakeMesh()),
+                                 "dense", AXIS_SIZES)
+    spec = specs["layers"]["mla"]["w_uq"]    # [L, q_in, 40, dims]
+    assert all(e is None for e in spec), spec
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dim0=st.integers(1, 300),
+    dim1=st.integers(1, 300),
+    axes_size=st.sampled_from([2, 4, 8, 16]),
+)
+def test_zero_spec_divisibility_property(dim0, dim1, axes_size):
+    """zero_specs never emits a spec whose dim doesn't divide."""
+    leaf = jax.ShapeDtypeStruct((dim0, dim1), np.float32)
+    spec = shardlib.largest_dim_spec(leaf, ("data",), axes_size)
+    for i, entry in enumerate(spec):
+        if entry is not None:
+            assert leaf.shape[i] % axes_size == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(batch=st.sampled_from([1, 2, 8, 32, 128, 256, 100, 7]))
+def test_batch_axes_always_divide(batch):
+    """plan.batch_axes product always divides the global batch."""
+    mesh = _FakeMesh()
+    for plan_name in ("data", "zero2", "shard"):
+        plan = get_plan(plan_name)
+        axes = plan.batch_axes(mesh, batch)
+        prod = int(np.prod([AXIS_SIZES[a] for a in axes])) if axes else 1
+        assert batch % prod == 0
