@@ -1,11 +1,16 @@
 """Benchmark: Algorithm 1 (paper §IV-H) — technique selection per cluster,
-checked against the winner/only-survivor reported in each paper figure."""
+checked against the winner/only-survivor reported in each paper figure.
+
+Selections run through the generalized ``core.search.PlanSearch`` path
+(Algorithm 1 is its N=2 special case); the legacy ``select_technique``
+wrapper is cross-checked to agree on every entry."""
 from __future__ import annotations
 
 from typing import List
 
 from repro.configs import get_config
 from repro.core.costmodel import PAPER_CLUSTERS, paper_workload
+from repro.core.search import PlanSearch
 from repro.core.selector import CostModelProber, select_technique
 
 # (cluster, model) -> acceptable selections given the paper's results
@@ -26,17 +31,19 @@ PAPER_EXPECTED = {
 
 def run(print_fn=print) -> int:
     n_fail = 0
-    print_fn("# Algorithm 1 selections")
-    print_fn("cluster,model,selected,vms,matches_paper")
+    print_fn("# Algorithm 1 selections (via PlanSearch)")
+    print_fn("cluster,model,selected,vms,matches_paper,wrapper_agrees")
     for (cname, mname), expected in PAPER_EXPECTED.items():
         wl = paper_workload(get_config(mname))
-        sel = select_technique(CostModelProber(wl, PAPER_CLUSTERS[cname]),
-                               delta=0.1)
+        cluster = PAPER_CLUSTERS[cname]
+        sel = PlanSearch.for_cluster(wl, cluster).select(delta=0.1)
         key = (sel.technique, tuple(sel.vms) if sel.vms else None)
         ok = key in expected
-        n_fail += (not ok)
+        legacy = select_technique(CostModelProber(wl, cluster), delta=0.1)
+        agrees = (legacy.technique, legacy.vms) == (sel.technique, sel.vms)
+        n_fail += (not ok) + (not agrees)
         print_fn(f"{cname},{mname},{sel.technique},"
-                 f"{'+'.join(map(str, sel.vms or []))},{ok}")
+                 f"{'+'.join(map(str, sel.vms or []))},{ok},{agrees}")
     return n_fail
 
 

@@ -1,11 +1,14 @@
 """Algorithm 1 (paper §IV-H) in action: pick the pretraining technique for
-a model + cluster, two ways:
+a model + cluster, three ways:
 
   1. analytically, over the paper's five FABRIC slices (cost model),
-  2. live, probing epsilon-epochs of real training on host devices.
+  2. live, probing epsilon-epochs of real training on host devices,
+  3. beyond the paper: full PlanSearch over an N-site topology — site
+     subsets and pipeline stage orders the two-VM algorithm can't express.
 
     PYTHONPATH=src python examples/select_technique.py --model gpt2m
     PYTHONPATH=src python examples/select_technique.py --live
+    PYTHONPATH=src python examples/select_technique.py --topology edge3
 """
 import argparse
 import os
@@ -15,6 +18,8 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--model", default="gpt2m")
 ap.add_argument("--live", action="store_true",
                 help="probe with real epsilon-epoch training runs")
+ap.add_argument("--topology", choices=["edge3", "ring3", "hub4"],
+                help="full PlanSearch over an example N-site topology")
 ap.add_argument("--devices", type=int, default=8)
 ap.add_argument("--delta", type=float, default=0.1)
 args = ap.parse_args()
@@ -27,8 +32,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
 from repro.core.costmodel import PAPER_CLUSTERS, paper_workload
+from repro.core.search import PlanSearch
 from repro.core.selector import (CostModelProber, LiveProber,
                                  select_technique)
+from repro.core.topology import Link, Site, hub, make_topology, ring
 
 
 def analytic():
@@ -41,6 +48,61 @@ def analytic():
                   for k, v in sel.probes.items()}
         print(f"  {name:11s} -> {sel.technique}@VMs{sel.vms}   "
               f"probes(TFLOP/s): {probes}")
+
+
+EXAMPLE_TOPOLOGIES = {
+    # two metro-adjacent sites + one transatlantic: the search spans the
+    # cheap pair with Data — a subset the two-VM algorithm never probes.
+    "edge3": lambda: make_topology(
+        "edge3",
+        [Site(("A30", "A30"), name="A"), Site(("A30", "A30"), name="B"),
+         Site(("A30", "A30"), name="C")],
+        {(0, 1): Link(0.5e-3, 3.0), (1, 2): Link(60e-3, 3.0),
+         (0, 2): Link(100e-3, 3.0)}),
+    # asymmetric ring: the best pipeline stage order crosses the two cheap
+    # links and leaves the 120 ms edge as the un-crossed return path.
+    "ring3": lambda: ring(
+        "ring3", [Site(("A30", "A30"), name=n) for n in "ABC"],
+        [Link(5e-3, 3.0), Link(5e-3, 3.0), Link(120e-3, 3.0)]),
+    # hub-and-spoke: leaf↔leaf traffic relays through the hub (2 hops).
+    "hub4": lambda: hub(
+        "hub4", Site(("A30", "A30"), name="HUB"),
+        [Site(("RTX", "RTX"), name=f"L{k}") for k in range(3)],
+        Link(25e-3, 3.0)),
+}
+
+
+def topology_search():
+    from repro.core.plans import get_plan
+    from repro.launch.analytic import placement_degrees
+
+    topo = EXAMPLE_TOPOLOGIES[args.topology]()
+    wl = paper_workload(get_config(args.model))
+    print(topo.describe())
+    search = PlanSearch(wl, topo)
+    ranked = search.search()
+    print(f"\nPlanSearch over {len(ranked)} candidates ({args.model}):")
+    for s in ranked[:8]:
+        perf = f"{s.tflops:.2f}" if s.feasible else "OOM"
+        print(f"  {s.candidate.key:30s} {perf:>8s} TFLOP/s")
+    best = search.best()
+    alg1 = search.select(delta=args.delta)
+    if best is None:
+        print("\nbest overall : none — every candidate OOMs on this "
+              "topology (need more GPU memory)")
+        print(f"Algorithm 1  : {alg1.technique}@VMs{alg1.vms}")
+        return
+    print(f"\nbest overall : {best.candidate.key} "
+          f"({best.tflops:.2f} TFLOP/s)")
+    print(f"Algorithm 1  : {alg1.technique}@VMs{alg1.vms} "
+          f"(probe set restricted to the paper's)")
+    plan_name = "shard_zero" if best.candidate.technique == "shard" \
+        else best.candidate.technique
+    dp, tp, zdeg = placement_degrees(
+        get_plan(plan_name), topo, best.candidate.placement(),
+        wl.global_batch)
+    print(f"mesh degrees : dp={dp} tp={tp} zero={zdeg} over sites "
+          f"{best.candidate.sites}")
 
 
 def live():
@@ -84,4 +146,9 @@ def live():
 
 
 if __name__ == "__main__":
-    (live if args.live else analytic)()
+    if args.topology:
+        topology_search()
+    elif args.live:
+        live()
+    else:
+        analytic()

@@ -1,0 +1,9 @@
+"""Reproduction of "Performance of Small Language Model Pretraining on
+FABRIC: An Empirical Study" grown toward a production-scale jax system.
+
+Importing any ``repro`` package installs the jax version-compat shims
+(repro.compat) so the modern-API codebase also runs on jax 0.4.x.
+"""
+from repro import compat as _compat  # noqa: F401  (installs jax shims)
+
+_compat.install()

@@ -1,0 +1,103 @@
+"""Compatibility shims for older jax releases (see DESIGN.md §6).
+
+The codebase is written against the modern jax API (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh`` with
+``axis_types``).  The pinned toolchain in some environments ships jax
+0.4.x where those live elsewhere (or don't exist); importing any
+``repro`` package installs equivalents into the ``jax`` namespace so both
+the library and its tests run unchanged on either version:
+
+  * ``jax.set_mesh(mesh)``   -> the Mesh context manager itself (the
+    0.4.x global-mesh context has the same scope semantics for our
+    ``with jax.set_mesh(mesh):`` usage);
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
+    axis_names=..., check_vma=...)`` -> ``jax.experimental.shard_map``
+    with ``auto = mesh.axis_names - axis_names`` and
+    ``check_rep = check_vma``;
+  * ``jax.sharding.AxisType``  -> a small stand-in enum (only ever used
+    to request Auto axes, which is 0.4.x's only behavior anyway).
+
+``make_mesh(shape, axes)`` here is the version-agnostic constructor —
+prefer it over calling ``jax.make_mesh`` with ``axis_types`` directly.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Optional, Sequence
+
+import jax
+import jax.sharding
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+_HAS_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+# Native modern shard_map implies a partitioner that supports the
+# partial-manual (ManualSubgroup) SPMD pattern; the 0.4.x experimental
+# shard_map accepts `auto=` but its XLA CHECK-fails partitioning the
+# surrounding auto region (pipeshard pipeline, per-shard MoE dispatch).
+# Paths needing partial-auto gate on this flag (evaluated before the
+# shims below are installed, so it reflects the real jax).
+NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              *, devices=None) -> jax.sharding.Mesh:
+    """jax.make_mesh with Auto axis types where supported."""
+    kw = {} if devices is None else {"devices": devices}
+    if _HAS_AXIS_TYPES:
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kw)
+
+
+def _set_mesh(mesh):
+    """0.4.x fallback for jax.set_mesh: the Mesh *is* a context manager
+    that scopes the global physical mesh."""
+    return mesh
+
+
+def _ambient_mesh():
+    """The mesh installed by the 0.4.x global-mesh context (`with mesh:`,
+    which is what our set_mesh shim scopes)."""
+    from jax.interpreters import pxla
+    m = pxla.thread_resources.env.physical_mesh
+    if m.empty:
+        raise ValueError("shard_map without mesh= needs an enclosing "
+                         "jax.set_mesh(...)")
+    return m
+
+
+def _shard_map(f=None, *, mesh=None, in_specs, out_specs, axis_names=None,
+               check_vma: bool = True):
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def bind(fn):
+        def call(*args):
+            m = mesh if mesh is not None else _ambient_mesh()
+            auto = frozenset()
+            if axis_names is not None:
+                auto = frozenset(m.axis_names) - frozenset(axis_names)
+            sm = _sm(fn, mesh=m, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma, auto=auto)
+            return sm(*args)
+        return call
+    return bind if f is None else bind(f)
+
+
+def install() -> None:
+    """Idempotently add missing modern-API names to the jax namespace."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map
+
+
+install()

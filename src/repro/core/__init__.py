@@ -1,13 +1,14 @@
 """The paper's primary contribution: parallelization techniques as
 first-class execution plans (Data / ZeRO2 / Shard / Pipeshard), the
-pipeline runtime, plan-aware step builders, the FABRIC cluster cost model,
-and Algorithm 1 (technique selection)."""
-from repro.core.plans import PLANS, Plan, get_plan
+pipeline runtime, plan-aware step builders, the N-site cluster topology
+model + FABRIC cost model, and the plan search generalizing Algorithm 1
+(technique selection)."""
+from repro.core.plans import PLANS, Placement, Plan, get_plan
 from repro.core.steps import (
     build_prefill_step,
     build_serve_step,
     build_train_step,
 )
 
-__all__ = ["PLANS", "Plan", "get_plan", "build_prefill_step",
+__all__ = ["PLANS", "Placement", "Plan", "get_plan", "build_prefill_step",
            "build_serve_step", "build_train_step"]

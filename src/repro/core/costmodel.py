@@ -4,9 +4,17 @@ Reproduces the paper's Figures 3–7 and Table II: per-technique pretraining
 time for GPT-2 medium/large on two-VM slices with measured site-to-site
 latencies.  The model is deliberately simple — compute term from achievable
 per-GPU FLOP/s, communication terms from per-step traffic of each technique
-over (intra-VM PCIe, inter-VM WAN) links with latency α and bandwidth β —
-because the *paper's claims are about orderings and trends*, which is what
+over the cluster's link graph with latency α and bandwidth β — because the
+*paper's claims are about orderings and trends*, which is what
 EXPERIMENTS.md §Paper-validation checks.
+
+Since the N-site generalization (core/topology.py, DESIGN.md §5) the
+pricing works on an arbitrary ``Topology``: collectives pay the worst link
+on their spanning set, Pipeshard pays each stage-boundary link it actually
+crosses in its stage→site order.  The legacy two-VM ``Cluster`` is kept as
+a thin shim whose ``topology()`` is the N=2 special case, so every paper
+artifact (PAPER_CLUSTERS, benchmarks, Algorithm 1) keeps its exact shape
+and numbers.
 
 The same machinery prices TPU meshes (ICI vs DCN) for plan selection when
 no hardware is attached — the dry-run roofline (launch/roofline.py) uses
@@ -16,75 +24,50 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ModelConfig
+from repro.core.topology import (GPUS, GPUSpec, Link, PCIE, Site,
+                                 TCP_WINDOW_BYTES, Topology, two_site)
 
-
-# --------------------------------------------------------------------- #
-# hardware vocabulary
-# --------------------------------------------------------------------- #
-
-@dataclass(frozen=True)
-class GPUSpec:
-    name: str
-    tflops: float          # achievable mixed-precision TFLOP/s for GEMMs
-    mem_gb: float
-    mem_bw_gbps: float
-
-
-# Achievable (not peak-marketing) numbers for the paper's cards:
-GPUS = {
-    # Quadro RTX 6000: 16.3 fp32 / ~32 fp16-ish; achievable trainer ~20
-    "RTX": GPUSpec("RTX", 20.0, 24.0, 672.0),
-    # Tesla T4: 8.1 fp32, 65 fp16 peak but bandwidth-starved; ~10 achievable
-    "T4": GPUSpec("T4", 10.0, 16.0, 320.0),
-    # A30: 10.3 fp32 / 165 bf16 peak; ~25 achievable with its 933 GB/s
-    "A30": GPUSpec("A30", 25.0, 24.0, 933.0),
-}
-
-
-TCP_WINDOW_BYTES = 8e6   # effective socket window of NCCL-over-TCP streams
-
-
-@dataclass(frozen=True)
-class Link:
-    latency_s: float
-    bandwidth_gbps: float  # GB/s usable at zero RTT
-
-    @property
-    def effective_gbps(self) -> float:
-        """Single-stream TCP throughput is window/RTT-limited (paper §II-C:
-        NCCL uses TCP/IP between VMs, no GPUDirect) — this is what makes
-        Data/ZeRO2/Shard collapse on high-latency slices (Table II)."""
-        if self.latency_s <= 0:
-            return self.bandwidth_gbps
-        return min(self.bandwidth_gbps,
-                   TCP_WINDOW_BYTES / self.latency_s / 1e9)
-
-
-@dataclass(frozen=True)
-class VM:
-    gpus: Tuple[str, ...]                 # e.g. ("RTX", "RTX")
-    intra: Link = Link(5e-6, 12.0)        # PCIe within a VM
+# Legacy alias: the paper called a site a "VM".
+VM = Site
 
 
 @dataclass(frozen=True)
 class Cluster:
-    """Two-VM FABRIC slice (paper Table I)."""
+    """Two-VM FABRIC slice (paper Table I) — legacy N=2 shim over
+    ``core.topology.Topology``."""
     name: str
-    vms: Tuple[VM, ...]
+    vms: Tuple[Site, ...]
     wan: Link                              # inter-VM (L2Bridge / L2STS)
 
     def all_gpus(self) -> List[GPUSpec]:
         return [GPUS[g] for vm in self.vms for g in vm.gpus]
+
+    def topology(self) -> Topology:
+        """Embed as the N=2 special case of the site/link graph."""
+        import itertools
+        sites = tuple(
+            Site(vm.gpus, vm.intra, vm.name or f"V{i + 1}")
+            for i, vm in enumerate(self.vms))
+        links = {(i, j): self.wan
+                 for i, j in itertools.combinations(range(len(sites)), 2)}
+        return Topology(self.name, sites, links)
+
+
+ClusterLike = Union[Cluster, Topology]
+
+
+def as_topology(cluster: ClusterLike) -> Topology:
+    return cluster.topology() if isinstance(cluster, Cluster) else cluster
 
 
 def fabric_cluster(name: str, gpus1: Tuple[str, str], gpus2: Tuple[str, str],
                    latency_ms: float, wan_gbps: float = 3.0) -> Cluster:
     """WAN bandwidth: NCCL over TCP/IP on FABRIC achieves only a few GB/s
     of the 100 Gbps links (paper §II-C: TCP/IP, no GPUDirect)."""
-    return Cluster(name, (VM(gpus1), VM(gpus2)),
+    return Cluster(name, (Site(tuple(gpus1)), Site(tuple(gpus2))),
                    Link(latency_ms * 1e-3, wan_gbps))
 
 
@@ -95,6 +78,11 @@ PAPER_CLUSTERS: Dict[str, Cluster] = {
     "UTAH-MASS": fabric_cluster("UTAH-MASS", ("RTX", "RTX"), ("RTX", "RTX"), 57.4),
     "BRIS-STAR": fabric_cluster("BRIS-STAR", ("A30", "A30"), ("RTX", "RTX"), 95.9),
     "GAT-AMST": fabric_cluster("GAT-AMST", ("A30", "A30"), ("A30", "A30"), 103.0),
+}
+
+# The same slices as 2-site topologies (what PlanSearch consumes).
+PAPER_TOPOLOGIES: Dict[str, Topology] = {
+    name: c.topology() for name, c in PAPER_CLUSTERS.items()
 }
 
 
@@ -151,6 +139,8 @@ def paper_workload(cfg: ModelConfig, *, global_batch: int = 32) -> Workload:
 
 LOG2E = 1.4426950408889634
 
+TECHNIQUES = ("data", "zero2", "shard", "pipeshard")
+
 
 @dataclass
 class StepCost:
@@ -177,24 +167,36 @@ def _allreduce_time(bytes_total: float, n: int, link: Link) -> float:
         + 2 * (n - 1) / n * bytes_total / (link.effective_gbps * 1e9)
 
 
-def _worst_link(cluster: Cluster, spans_wan: bool) -> Link:
-    return cluster.wan if spans_wan else cluster.vms[0].intra
+def _collective_time(bytes_total: float, n: int, topo: Topology,
+                     sites: Sequence[int]) -> float:
+    """All-reduce over a site subset: the ring crosses every site pair's
+    path, so the *worst* spanning link prices the collective (the N=2
+    special case is exactly the old single-``wan``-field rule)."""
+    if len(sites) <= 1:
+        return _allreduce_time(bytes_total, n, topo.sites[sites[0]].intra)
+    return max(_allreduce_time(bytes_total, n, l)
+               for l in topo.spanning_links(sites))
 
 
-def technique_step_cost(technique: str, wl: Workload, cluster: Cluster,
-                        vms: Optional[List[int]] = None) -> StepCost:
-    """Model one optimizer step of `technique` on `cluster` (paper §III).
+def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
+                        vms: Optional[Sequence[int]] = None, *,
+                        stage_order: Optional[Sequence[int]] = None
+                        ) -> StepCost:
+    """Model one optimizer step of `technique` (paper §III) on a cluster
+    or N-site topology.
 
-    vms: which VMs participate (None = all).  Heterogeneous GPUs make the
+    vms: which sites participate (None = all).  Heterogeneous GPUs make the
     *slowest* participant the pace-setter for data-parallel styles, while
     Pipeshard assigns stages per mesh (paper: meshes of equal capability).
+    stage_order (Pipeshard only): explicit stage→site assignment — the
+    pipeline crosses exactly the links between consecutive sites in this
+    order, so on an asymmetric topology the order matters.
     """
-    sel = cluster.vms if vms is None else [cluster.vms[i] for i in vms]
-    gpus = [GPUS[g] for vm in sel for g in vm.gpus]
+    topo = as_topology(cluster)
+    sel = topo.select(vms)
+    sites = [topo.sites[i] for i in sel]
+    gpus = [GPUS[g] for s in sites for g in s.gpus]
     n = len(gpus)
-    spans_wan = len(sel) > 1
-    link = _worst_link(cluster, spans_wan)
-    intra = sel[0].intra
 
     flops = wl.flops_per_step
     slowest = min(g.tflops for g in gpus) * 1e12
@@ -207,42 +209,51 @@ def technique_step_cost(technique: str, wl: Workload, cluster: Cluster,
 
     if technique == "data":
         compute = flops / (n * slowest)
-        comm = _allreduce_time(g_bytes, n, link)
+        comm = _collective_time(g_bytes, n, topo, sel)
         mem = (state + act) / 1e9 + ovh
     elif technique == "zero2":
         compute = flops / (n * slowest)
         # reduce-scatter grads + all-gather of updated fp16 params + the
         # partitioned fp32 master sync => ~2.2x the Data volume, which is
         # the paper's observed zero2-vs-data degradation ratio (Table II)
-        comm = 2.2 * _allreduce_time(g_bytes, n, link)
+        comm = 2.2 * _collective_time(g_bytes, n, topo, sel)
         # fp16 replica + partitioned fp32 states: the lowest-memory plan
         mem = (p_bytes + (state - p_bytes) / n + act) / 1e9 + ovh
     elif technique == "shard":
         compute = flops / (n * slowest)
         # Megatron-style: 4 all-reduces of activations per layer (fwd+bwd)
         act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
-        comm = 4 * wl.cfg.n_layers * _allreduce_time(act_bytes, n, link)
+        comm = 4 * wl.cfg.n_layers * _collective_time(act_bytes, n, topo, sel)
         # sharded states but activation replicas + all-gather buffers
         mem = (state / n + 1.5 * act) / 1e9 + ovh
     elif technique == "pipeshard":
-        # stages = VMs; shard (intra-op) inside each VM over PCIe;
-        # inter-stage point-to-point microbatch activations over WAN.
-        n_stages = max(len(sel), 1)
-        per_mesh = n // n_stages
+        # stages = sites of the selection in stage_order; shard (intra-op)
+        # inside each site over PCIe; inter-stage point-to-point microbatch
+        # activations over each crossed stage-boundary link.
+        order = sel if stage_order is None else topo.select(stage_order)
+        if sorted(order) != sorted(sel):
+            raise ValueError(
+                f"stage_order {order} is not a permutation of sites {sel}")
+        n_stages = max(len(order), 1)
+        stage_sites = [topo.sites[i] for i in order]
         stage_flops = flops / n_stages
-        mesh_tflops = [min(GPUS[g].tflops for g in vm.gpus) * 1e12
-                       * len(vm.gpus) for vm in sel]
+        mesh_tflops = [min(GPUS[g].tflops for g in s.gpus) * 1e12
+                       * len(s.gpus) for s in stage_sites]
         bubble = (n_stages - 1) / wl.microbatches
         compute = max(stage_flops / t for t in mesh_tflops) * (1 + bubble)
         act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
-        # each microbatch crosses each stage boundary twice (fwd + bwd)
-        p2p = 2 * (n_stages - 1) * (
-            wl.microbatches * (act_bytes / wl.microbatches)
-            / (cluster.wan.effective_gbps * 1e9)
-            + wl.microbatches * cluster.wan.latency_s)
-        intra_comm = 4 * wl.cfg.n_layers / n_stages * _allreduce_time(
-            act_bytes, per_mesh, intra)
-        comm = (p2p if spans_wan else 0.0) + intra_comm
+        # each microbatch crosses each stage boundary twice (fwd + bwd),
+        # paying that boundary's own link (N=2: the single WAN link)
+        p2p = sum(
+            2 * (wl.microbatches * (act_bytes / wl.microbatches)
+                 / (topo.link(a, b).effective_gbps * 1e9)
+                 + wl.microbatches * topo.link(a, b).latency_s)
+            for a, b in zip(order[:-1], order[1:]))
+        intra_comm = max(
+            4 * wl.cfg.n_layers / n_stages * _allreduce_time(
+                act_bytes, len(s.gpus), s.intra)
+            for s in stage_sites)
+        comm = p2p + intra_comm
         # in-flight microbatches make Pipeshard the memory-hungry plan
         # (paper §IV-G observation 3)
         mem = (state / n + act * (1 + 0.5 * wl.microbatches)) / 1e9 + ovh
@@ -251,19 +262,25 @@ def technique_step_cost(technique: str, wl: Workload, cluster: Cluster,
     return StepCost(compute, comm, mem, mem_avail)
 
 
-def epoch_minutes(technique: str, wl: Workload, cluster: Cluster,
-                  vms: Optional[List[int]] = None) -> Optional[float]:
+def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
+                  vms: Optional[Sequence[int]] = None, *,
+                  stage_order: Optional[Sequence[int]] = None
+                  ) -> Optional[float]:
     """Minutes per `epochs` epochs; None when the technique OOMs (the
     paper's '×' bars)."""
-    c = technique_step_cost(technique, wl, cluster, vms)
+    c = technique_step_cost(technique, wl, cluster, vms,
+                            stage_order=stage_order)
     if not c.fits:
         return None
     return c.total_s * wl.steps_per_epoch * wl.epochs / 60.0
 
 
-def avg_tflops(technique: str, wl: Workload, cluster: Cluster,
-               vms: Optional[List[int]] = None) -> Optional[float]:
-    c = technique_step_cost(technique, wl, cluster, vms)
+def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
+               vms: Optional[Sequence[int]] = None, *,
+               stage_order: Optional[Sequence[int]] = None
+               ) -> Optional[float]:
+    c = technique_step_cost(technique, wl, cluster, vms,
+                            stage_order=stage_order)
     if not c.fits:
         return None
     return wl.flops_per_step / c.total_s / 1e12

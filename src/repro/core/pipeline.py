@@ -29,13 +29,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.plans import Plan, STAGE_AXIS
 
 
-def pipeline_mesh(devices_mesh: Mesh, n_stages: int) -> Mesh:
+def pipeline_mesh(devices_mesh: Mesh, n_stages: int,
+                  stage_order=None) -> Mesh:
     """Reshape a (pod?, data, model) mesh into (stage, data, model).
 
     The stage axis absorbs the pod axis first (inter-stage point-to-point is
     exactly the traffic that tolerates the slow inter-pod link — the paper's
     geo-distributed finding), then splits the data axis if more stages are
     requested.
+
+    ``stage_order``: permutation of the pod blocks (one block per site, see
+    ``core.plans.Placement.pod_permutation``) giving the stage→site
+    assignment from the plan search — stage k runs on pod block
+    ``stage_order[k]``, so the pipeline crosses the topology's links in
+    the order the search priced, not in raw site numbering.
     """
     names = devices_mesh.axis_names
     shape = dict(zip(names, devices_mesh.devices.shape))
@@ -48,8 +55,19 @@ def pipeline_mesh(devices_mesh: Mesh, n_stages: int) -> Mesh:
     if data % rest != 0:
         raise ValueError(
             f"cannot split data={data} into {rest} pipeline sub-stages")
-    devs = devices_mesh.devices.reshape(n_stages, (pod * data) // n_stages,
-                                        model)
+    devices = devices_mesh.devices
+    if stage_order is not None:
+        order = tuple(stage_order)
+        if sorted(order) != list(range(pod)):
+            raise ValueError(
+                f"stage_order {order} is not a permutation of the "
+                f"{pod} pod blocks")
+        if "pod" in names:
+            import numpy as np
+            devices = np.take(devices, order, axis=names.index("pod"))
+        elif order != (0,):
+            raise ValueError("stage_order given but mesh has no pod axis")
+    devs = devices.reshape(n_stages, (pod * data) // n_stages, model)
     return jax.sharding.Mesh(devs, (STAGE_AXIS, "data", "model"))
 
 
@@ -103,12 +121,16 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
         # in_specs: only the manual (stage) axis is mentioned; data/model
         # sharding of the same arrays stays in auto-SPMD land.
         stack_spec = jax.tree.map(lambda _: P(STAGE_AXIS), stack)
+        # stage id as a stage-sharded input rather than lax.axis_index:
+        # axis_index lowers to partition-id, which the jax-0.4.x SPMD
+        # partitioner rejects inside partial-auto shard_map regions.
+        stage_ids = jnp.arange(n_stages, dtype=jnp.int32)
 
         @partial(jax.shard_map, mesh=mesh, axis_names={STAGE_AXIS},
-                 in_specs=(stack_spec, P(), P(), P(), P()),
+                 in_specs=(P(STAGE_AXIS), stack_spec, P(), P(), P(), P()),
                  out_specs=P(STAGE_AXIS), check_vma=False)
-        def run_pipeline(stack_local, xm, pos_mb, enc_mb, shared):
-            stage = jax.lax.axis_index(STAGE_AXIS)
+        def run_pipeline(stage_ids, stack_local, xm, pos_mb, enc_mb, shared):
+            stage = stage_ids[0]
             T = n_micro + n_stages - 1
             state0 = jnp.zeros_like(xm[0])
             buf0 = jnp.zeros_like(xm)
@@ -142,8 +164,8 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
             # leading (length-1 per shard) stage axis; caller slices [-1]
             return buf[None], jnp.sum(auxs)[None]
 
-        buf_staged, aux_staged = run_pipeline(stack, xm, pos_mb, enc_mb,
-                                              shared)
+        buf_staged, aux_staged = run_pipeline(stage_ids, stack, xm, pos_mb,
+                                              enc_mb, shared)
         hidden = buf_staged[-1].reshape(B, S, d).astype(model.compute_dtype)
         aux = aux_staged[-1]
         logits = model._head(params, hidden)

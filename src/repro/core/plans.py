@@ -177,6 +177,36 @@ class Plan:
                             is_leaf=lambda x: isinstance(x, P))
 
 
+@dataclass(frozen=True)
+class Placement:
+    """Where a plan runs on an N-site topology (core/topology.py): the
+    participating site subset and, for pipeline plans, the stage→site
+    assignment produced by ``core.search.PlanSearch`` — stages follow
+    ``stage_order``, not the raw site numbering, so an asymmetric-link
+    topology can be crossed in its cheapest order (DESIGN.md §5)."""
+    sites: Tuple[int, ...]
+    stage_order: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.stage_order is not None and \
+                sorted(self.stage_order) != sorted(self.sites):
+            raise ValueError(
+                f"stage_order {self.stage_order} is not a permutation "
+                f"of sites {self.sites}")
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_order or self.sites)
+
+    def pod_permutation(self) -> Tuple[int, ...]:
+        """Order of the mesh's pod blocks (one per site, in ``sites``
+        order) realizing the stage order — what pipeline_mesh consumes."""
+        if self.stage_order is None:
+            return tuple(range(len(self.sites)))
+        pos = {s: k for k, s in enumerate(self.sites)}
+        return tuple(pos[s] for s in self.stage_order)
+
+
 PLANS: Dict[str, Plan] = {
     "data": Plan("data", shards_weights=False, zero_sharding=False,
                  pipeline=False),

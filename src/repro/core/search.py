@@ -1,0 +1,210 @@
+"""General plan search over an N-site topology (DESIGN.md §5).
+
+``PlanSearch`` enumerates (technique × site-subset × stage-assignment)
+candidates on a ``core.topology.Topology`` and prices each with the
+cost model — the general machine behind the paper's Algorithm 1:
+
+  * ``search()``/``best()`` rank the *full* candidate space: every
+    non-empty site subset for every technique, and for Pipeshard every
+    stage→site order (paths, deduplicated up to reversal).  This is what
+    the two-VM API could not express — e.g. "Data over the two nearby
+    sites of a three-site ring, ignoring the far one".
+  * ``select()`` runs the generalized Algorithm 1 (paper §IV-H) over the
+    restricted probe set the paper defines — Pipeshard on everything,
+    Data/Shard per single site, ZeRO2-on-everything fallback — with the
+    same δ-threshold decision structure.  For ``n_sites == 2`` it is
+    *exactly* the paper's Algorithm 1; ``core.selector.select_technique``
+    is now a thin wrapper over it.
+
+Probing is pluggable exactly like the selector's: the default evaluator
+prices candidates analytically, while a ``probe_fn`` (technique, sites)
+hook lets live ε-epoch training measurements drive the same search.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+from repro.core.costmodel import (ClusterLike, TECHNIQUES, Workload,
+                                  as_topology, avg_tflops)
+from repro.core.plans import Placement
+from repro.core.topology import Topology
+
+ProbeFn = Callable[[str, Optional[List[int]]], Optional[float]]
+
+
+# --------------------------------------------------------------------- #
+# candidates
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point of the search space: a technique placed on a site subset,
+    plus (Pipeshard only) the stage→site order."""
+    technique: str
+    sites: Tuple[int, ...]
+    stage_order: Optional[Tuple[int, ...]] = None
+
+    def placement(self) -> Placement:
+        return Placement(self.sites, self.stage_order)
+
+    @property
+    def key(self) -> str:
+        s = "+".join(f"V{i + 1}" for i in self.sites)
+        if self.stage_order and self.stage_order != self.sites:
+            s += "|" + ">".join(f"V{i + 1}" for i in self.stage_order)
+        return f"{self.technique}@{s}"
+
+
+@dataclass(frozen=True)
+class Scored:
+    candidate: Candidate
+    tflops: Optional[float]          # None => OOM / probe failure
+
+    @property
+    def feasible(self) -> bool:
+        return bool(self.tflops)
+
+
+def stage_orders(sites: Sequence[int],
+                 max_orders: int = 24) -> Iterator[Tuple[int, ...]]:
+    """Pipeline stage orders over `sites`: all site orderings up to
+    reversal (a pipeline crossed backwards pays the same links), capped —
+    beyond ~5 sites an exhaustive path enumeration stops paying for
+    itself and the first `max_orders` lexicographic paths stand in."""
+    seen = 0
+    for perm in itertools.permutations(sites):
+        if perm[0] > perm[-1]:           # canonical: keep one direction
+            continue
+        yield perm
+        seen += 1
+        if seen >= max_orders:
+            return
+
+
+# --------------------------------------------------------------------- #
+# the search
+# --------------------------------------------------------------------- #
+
+@dataclass
+class PlanSearch:
+    """Enumerate + price candidate plans for a workload on a topology."""
+    wl: Workload
+    topology: Topology
+    techniques: Tuple[str, ...] = TECHNIQUES
+    max_sites: Optional[int] = None      # cap subset size (None = all N)
+    max_stage_orders: int = 24
+    probe_fn: Optional[ProbeFn] = None   # live prober; ignores stage_order
+
+    @classmethod
+    def for_cluster(cls, wl: Workload, cluster: ClusterLike,
+                    **kw) -> "PlanSearch":
+        return cls(wl, as_topology(cluster), **kw)
+
+    # ------------------------------------------------------------- #
+    def candidates(self) -> Iterator[Candidate]:
+        n = self.topology.n_sites
+        limit = n if self.max_sites is None else min(self.max_sites, n)
+        for k in range(1, limit + 1):
+            for subset in itertools.combinations(range(n), k):
+                for tech in self.techniques:
+                    if tech == "pipeshard":
+                        if k == 1:
+                            continue     # 1-stage pipeline degenerates
+                        # live probes can't pin a stage order (and each is
+                        # an epsilon-epoch training run): one per subset
+                        orders = [tuple(subset)] if self.probe_fn \
+                            else stage_orders(subset, self.max_stage_orders)
+                        for order in orders:
+                            yield Candidate(tech, subset, order)
+                    else:
+                        yield Candidate(tech, subset)
+
+    def evaluate(self, cand: Candidate) -> Optional[float]:
+        """Avg TFLOP/s of a candidate; None/0 on infeasibility (OOM)."""
+        if self.probe_fn is not None:
+            return self.probe_fn(cand.technique, list(cand.sites))
+        return avg_tflops(cand.technique, self.wl, self.topology,
+                          cand.sites, stage_order=cand.stage_order)
+
+    def search(self) -> List[Scored]:
+        """All candidates, best first (infeasible ones at the tail)."""
+        scored = [Scored(c, self.evaluate(c)) for c in self.candidates()]
+        return sorted(scored, key=lambda s: -(s.tflops or 0.0))
+
+    def best(self) -> Optional[Scored]:
+        top = self.search()
+        return top[0] if top and top[0].feasible else None
+
+    # ------------------------------------------------------------- #
+    def select(self, *, delta: float = 0.1) -> "Selection":
+        """Generalized Algorithm 1 over this topology (paper probe set +
+        δ decision rule); the N=2 case is the paper's algorithm verbatim."""
+        return algorithm1_select(self._probe, self.topology.n_sites,
+                                 delta=delta)
+
+    def _probe(self, technique: str, sites: Optional[List[int]]
+               ) -> Optional[float]:
+        if self.probe_fn is not None:
+            return self.probe_fn(technique, sites)
+        return avg_tflops(technique, self.wl, self.topology, sites)
+
+
+# --------------------------------------------------------------------- #
+# Algorithm 1, generalized to N sites
+# --------------------------------------------------------------------- #
+
+def algorithm1_select(probe: ProbeFn, n_sites: int, *,
+                      delta: float = 0.1) -> "Selection":
+    """Algorithm 1 (paper §IV-H), lines 1-36, for N sites.
+
+    Probes Pipeshard on all sites, Data/Shard on each site alone, and
+    keeps the paper's decision structure: Pipeshard must beat the best
+    single-site plan by more than δ; the tie region takes the absolute
+    best; ZeRO2-on-everything is the memory-pressure fallback.  For
+    ``n_sites == 2`` the probe keys, comparisons and tie-breaks are
+    exactly the original two-VM algorithm's.
+    """
+    from repro.core.selector import Selection
+
+    probes: Dict[str, Optional[float]] = {}
+    all_key = "both" if n_sites == 2 else "all"
+
+    def run(tech: str, sites: Optional[List[int]], key: str) -> float:
+        perf = probe(tech, sites)
+        probes[key] = perf
+        return perf if perf else 0.0          # line convention: 0 on failure
+
+    # lines 1-2: Pipeshard on the union of all sites
+    t_p = run("pipeshard", None, f"pipeshard@{all_key}")
+    # lines 3-10: Data and Shard on each site separately
+    t_d = [run("data", [i], f"data@V{i + 1}") for i in range(n_sites)]
+    t_s = [run("shard", [i], f"shard@V{i + 1}") for i in range(n_sites)]
+    # line 11
+    t_z = max(t_d + t_s)
+
+    def best_single() -> Selection:
+        # argmax over sites with first-wins ties (the paper prefers V1)
+        i = max(range(n_sites), key=lambda k: (max(t_d[k], t_s[k]), -k))
+        tech = "data" if t_d[i] >= t_s[i] else "shard"
+        return Selection(tech, [i], probes)
+
+    every = list(range(n_sites))
+    # lines 12-13: Pipeshard wins by more than δ
+    if t_z > 0 and (t_p - t_z) / t_z > delta:
+        return Selection("pipeshard", every, probes)
+    # lines 14-27: a single-site plan wins by more than δ
+    if t_p > 0 and (t_z - t_p) / t_p > delta:
+        return best_single()
+    # tie region but something ran: prefer the absolute best measured
+    if t_p > 0 or t_z > 0:
+        if t_p >= t_z:
+            return Selection("pipeshard", every, probes)
+        return best_single()
+    # lines 29-35: ZeRO2 fallback on the whole cluster
+    t_z2 = run("zero2", None, f"zero2@{all_key}")
+    if t_z2 > 0:
+        return Selection("zero2", every, probes)
+    return Selection("none", None, probes)    # need more GPU memory

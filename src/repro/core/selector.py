@@ -6,6 +6,11 @@ user threshold δ controlling how much better Pipeshard-on-everything must
 be before it wins over the best single-VM plan; ZeRO2-on-everything is the
 memory-pressure fallback.
 
+``select_technique`` is now a thin wrapper over the generalized N-site
+``core.search.algorithm1_select`` — the two-VM algorithm is its N=2
+special case, and ``core.search.PlanSearch`` explores the full
+(technique × site-subset × stage-order) space beyond it (DESIGN.md §5).
+
 Probes are pluggable: ``CostModelProber`` prices them analytically (this is
 how benchmarks reproduce the paper's conclusions), while ``LiveProber``
 actually runs ε epochs through repro.train.loop — the shape the algorithm
@@ -16,7 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
-from repro.core.costmodel import Cluster, Workload, avg_tflops
+from repro.core.costmodel import ClusterLike, Workload, as_topology, \
+    avg_tflops
 
 
 class Prober(Protocol):
@@ -28,7 +34,11 @@ class Prober(Protocol):
 @dataclass
 class CostModelProber:
     wl: Workload
-    cluster: Cluster
+    cluster: ClusterLike              # legacy two-VM Cluster or a Topology
+
+    @property
+    def n_sites(self) -> int:
+        return as_topology(self.cluster).n_sites
 
     def probe(self, technique: str, vms: Optional[List[int]]
               ) -> Optional[float]:
@@ -40,6 +50,7 @@ class LiveProber:
     """Runs ε epochs of real training per probe (used on live hardware;
     exercised in tests with a tiny model on host devices)."""
     run_fn: Callable[[str, Optional[List[int]]], Optional[float]]
+    n_sites: int = 2
 
     def probe(self, technique, vms):
         try:
@@ -60,41 +71,8 @@ class Selection:
 
 
 def select_technique(prober: Prober, *, delta: float = 0.1) -> Selection:
-    """Algorithm 1, lines 1-36."""
-    probes: Dict[str, Optional[float]] = {}
-
-    def run(tech: str, vms: Optional[List[int]], key: str) -> float:
-        perf = prober.probe(tech, vms)
-        probes[key] = perf
-        return perf if perf else 0.0          # line convention: 0 on failure
-
-    # lines 1-2: Pipeshard on V1 ∪ V2
-    t_p = run("pipeshard", None, "pipeshard@both")
-    # lines 3-10: Data and Shard on each VM separately
-    t_d1 = run("data", [0], "data@V1")
-    t_s1 = run("shard", [0], "shard@V1")
-    t_d2 = run("data", [1], "data@V2")
-    t_s2 = run("shard", [1], "shard@V2")
-    # line 11
-    t_z = max(t_d1, t_d2, t_s1, t_s2)
-
-    # lines 12-13: Pipeshard wins by more than δ
-    if t_z > 0 and (t_p - t_z) / t_z > delta:
-        return Selection("pipeshard", [0, 1], probes)
-    # lines 14-27: a single-VM plan wins by more than δ
-    if t_p > 0 and (t_z - t_p) / t_p > delta:
-        if max(t_d1, t_s1) >= max(t_d2, t_s2):
-            return Selection("data" if t_d1 >= t_s1 else "shard", [0], probes)
-        return Selection("data" if t_d2 >= t_s2 else "shard", [1], probes)
-    # tie region but something ran: prefer the absolute best measured
-    if t_p > 0 or t_z > 0:
-        if t_p >= t_z:
-            return Selection("pipeshard", [0, 1], probes)
-        if max(t_d1, t_s1) >= max(t_d2, t_s2):
-            return Selection("data" if t_d1 >= t_s1 else "shard", [0], probes)
-        return Selection("data" if t_d2 >= t_s2 else "shard", [1], probes)
-    # lines 29-35: ZeRO2 fallback on the whole cluster
-    t_z2 = run("zero2", None, "zero2@both")
-    if t_z2 > 0:
-        return Selection("zero2", [0, 1], probes)
-    return Selection("none", None, probes)    # need more GPU memory
+    """Algorithm 1, lines 1-36 — the N=2 (or prober-declared N) case of
+    ``core.search.algorithm1_select``."""
+    from repro.core.search import algorithm1_select
+    n_sites = getattr(prober, "n_sites", 2)
+    return algorithm1_select(prober.probe, n_sites, delta=delta)

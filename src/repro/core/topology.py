@@ -1,0 +1,254 @@
+"""N-site cluster topology: the generalization of the paper's two-VM world.
+
+The paper's experiments are all two-VM FABRIC slices joined by one WAN
+link; ``core/costmodel.Cluster`` reproduced exactly that shape.  This
+module models the general case — a *graph* of sites:
+
+  * a ``Site`` is a co-located GPU pool (the paper's "VM"): a list of
+    (possibly heterogeneous) GPU names plus an intra-site link (PCIe);
+  * a ``Topology`` is N sites plus per-pair inter-site ``Link``s, each
+    with its own latency and bandwidth, subject to the same
+    TCP-window-effective-throughput rule the paper measured (§II-C:
+    NCCL over TCP/IP, no GPUDirect);
+  * pairs without a direct link are routed over the latency-shortest
+    multi-hop path (latencies add, bandwidth is the min along the path),
+    so rings, stars/hubs and lines are all expressible.
+
+``Cluster.topology()`` (core/costmodel.py) embeds every legacy two-VM
+slice as the N=2 special case; ``core/search.PlanSearch`` enumerates
+plans over arbitrary site subsets of a Topology.  See DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+
+# --------------------------------------------------------------------- #
+# hardware vocabulary (moved here from core/costmodel.py, which re-exports)
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class GPUSpec:
+    name: str
+    tflops: float          # achievable mixed-precision TFLOP/s for GEMMs
+    mem_gb: float
+    mem_bw_gbps: float
+
+
+# Achievable (not peak-marketing) numbers for the paper's cards:
+GPUS = {
+    # Quadro RTX 6000: 16.3 fp32 / ~32 fp16-ish; achievable trainer ~20
+    "RTX": GPUSpec("RTX", 20.0, 24.0, 672.0),
+    # Tesla T4: 8.1 fp32, 65 fp16 peak but bandwidth-starved; ~10 achievable
+    "T4": GPUSpec("T4", 10.0, 16.0, 320.0),
+    # A30: 10.3 fp32 / 165 bf16 peak; ~25 achievable with its 933 GB/s
+    "A30": GPUSpec("A30", 25.0, 24.0, 933.0),
+}
+
+
+TCP_WINDOW_BYTES = 8e6   # effective socket window of NCCL-over-TCP streams
+
+
+@dataclass(frozen=True)
+class Link:
+    latency_s: float
+    bandwidth_gbps: float  # GB/s usable at zero RTT
+
+    @property
+    def effective_gbps(self) -> float:
+        """Single-stream TCP throughput is window/RTT-limited (paper §II-C:
+        NCCL uses TCP/IP between VMs, no GPUDirect) — this is what makes
+        Data/ZeRO2/Shard collapse on high-latency slices (Table II)."""
+        if self.latency_s <= 0:
+            return self.bandwidth_gbps
+        return min(self.bandwidth_gbps,
+                   TCP_WINDOW_BYTES / self.latency_s / 1e9)
+
+
+PCIE = Link(5e-6, 12.0)   # default intra-site interconnect
+
+
+@dataclass(frozen=True)
+class Site:
+    """A co-located GPU pool — the paper's 'VM', one node of the graph."""
+    gpus: Tuple[str, ...]                 # e.g. ("RTX", "RTX")
+    intra: Link = PCIE                    # link within the site (PCIe)
+    name: str = ""
+
+    def specs(self) -> List[GPUSpec]:
+        return [GPUS[g] for g in self.gpus]
+
+
+def _key(i: int, j: int) -> Tuple[int, int]:
+    return (i, j) if i <= j else (j, i)
+
+
+@dataclass(frozen=True, eq=False)
+class Topology:
+    """N sites + inter-site link graph.
+
+    ``links`` maps canonical ``(i, j)`` pairs (``i < j``) to Links; any
+    pair not present is priced over the latency-shortest multi-hop path.
+    """
+    name: str
+    sites: Tuple[Site, ...]
+    links: Mapping[Tuple[int, int], Link] = field(default_factory=dict)
+
+    # ----------------------------------------------------------------- #
+    @property
+    def n_sites(self) -> int:
+        return len(self.sites)
+
+    def select(self, sites: Optional[Sequence[int]] = None) -> Tuple[int, ...]:
+        """Normalize a site-subset argument (None => all sites)."""
+        idx = tuple(range(self.n_sites)) if sites is None else tuple(sites)
+        for i in idx:
+            if not 0 <= i < self.n_sites:
+                raise IndexError(f"site {i} not in topology "
+                                 f"{self.name!r} (n={self.n_sites})")
+        if len(set(idx)) != len(idx):
+            raise ValueError(f"duplicate sites in selection {idx}")
+        return idx
+
+    def all_gpus(self, sites: Optional[Sequence[int]] = None) -> List[GPUSpec]:
+        return [GPUS[g] for i in self.select(sites)
+                for g in self.sites[i].gpus]
+
+    def direct(self, i: int, j: int) -> Optional[Link]:
+        return self.links.get(_key(i, j))
+
+    def link(self, i: int, j: int) -> Link:
+        """Link between sites i and j: the site's intra link when i == j,
+        the direct link if present, else the latency-shortest routed path
+        (latencies add, bandwidth is the min hop)."""
+        if i == j:
+            return self.sites[i].intra
+        d = self.direct(i, j)
+        if d is not None:
+            return d
+        return self._route(i, j)
+
+    def _route(self, src: int, dst: int) -> Link:
+        """Dijkstra on latency; the routed 'link' keeps the path's total
+        latency and its narrowest hop bandwidth — the TCP window rule then
+        applies to the end-to-end RTT, which is conservative and matches
+        how a single NCCL TCP stream behaves across a relay."""
+        done = set()
+        q = [(0.0, src, float("inf"))]
+        while q:
+            lat, node, bw = heapq.heappop(q)
+            if node in done:
+                continue
+            done.add(node)
+            if node == dst:
+                return Link(lat, bw)
+            for (a, b), l in self.links.items():
+                if node not in (a, b):
+                    continue
+                nxt = b if a == node else a
+                if nxt not in done:
+                    heapq.heappush(q, (lat + l.latency_s, nxt,
+                                       min(bw, l.bandwidth_gbps)))
+        raise ValueError(f"sites {src} and {dst} are not connected "
+                         f"in topology {self.name!r}")
+
+    def spanning_links(self, sites: Sequence[int]) -> List[Link]:
+        """Every pairwise link a collective over `sites` must cross."""
+        idx = self.select(sites)
+        return [self.link(i, j) for i, j in itertools.combinations(idx, 2)]
+
+    def worst_link(self, sites: Sequence[int]) -> Link:
+        """Bottleneck link on the spanning set: minimal effective
+        throughput, ties broken by larger latency.  For a single site this
+        is its intra link — the N=2 special case reduces to the legacy
+        ``Cluster.wan`` field."""
+        idx = self.select(sites)
+        if len(idx) <= 1:
+            return self.sites[idx[0]].intra if idx else PCIE
+        return min(self.spanning_links(idx),
+                   key=lambda l: (l.effective_gbps, -l.latency_s))
+
+    # ----------------------------------------------------------------- #
+    def describe(self) -> str:
+        parts = [f"{self.name}: {self.n_sites} sites"]
+        for i, s in enumerate(self.sites):
+            parts.append(f"  S{i} {s.name or '?'}: {'+'.join(s.gpus)}")
+        for (i, j), l in sorted(self.links.items()):
+            parts.append(f"  S{i}--S{j}: {l.latency_s * 1e3:.1f}ms "
+                         f"{l.bandwidth_gbps:.1f}GB/s "
+                         f"(eff {l.effective_gbps:.2f})")
+        return "\n".join(parts)
+
+
+# --------------------------------------------------------------------- #
+# builders
+# --------------------------------------------------------------------- #
+
+def _norm_links(links: Mapping[Tuple[int, int], Link]
+                ) -> Dict[Tuple[int, int], Link]:
+    out: Dict[Tuple[int, int], Link] = {}
+    for (i, j), l in links.items():
+        if i == j:
+            raise ValueError(f"self-link on site {i}")
+        k = _key(i, j)
+        if k in out and out[k] != l:
+            raise ValueError(
+                f"conflicting links for site pair {k}: {out[k]} vs {l}")
+        out[k] = l
+    return out
+
+
+def make_topology(name: str, sites: Sequence[Site],
+                  links: Mapping[Tuple[int, int], Link]) -> Topology:
+    return Topology(name, tuple(sites), _norm_links(links))
+
+
+def two_site(name: str, gpus1: Sequence[str], gpus2: Sequence[str],
+             latency_ms: float, wan_gbps: float = 3.0) -> Topology:
+    """The paper's shape: two sites, one WAN link (Table I)."""
+    return make_topology(
+        name,
+        (Site(tuple(gpus1), name="V1"), Site(tuple(gpus2), name="V2")),
+        {(0, 1): Link(latency_ms * 1e-3, wan_gbps)})
+
+
+def fully_connected(name: str, sites: Sequence[Site],
+                    link: Link) -> Topology:
+    n = len(sites)
+    return make_topology(name, sites, {
+        (i, j): link for i in range(n) for j in range(i + 1, n)})
+
+
+def ring(name: str, sites: Sequence[Site],
+         links: Sequence[Link]) -> Topology:
+    """N sites on a cycle; ``links[k]`` joins site k and (k+1) % N."""
+    n = len(sites)
+    if n < 3:
+        raise ValueError(f"a ring needs >= 3 sites (got {n}); two sites "
+                         f"have a single edge — use two_site/line")
+    if len(links) != n:
+        raise ValueError(f"ring of {n} sites needs {n} links, "
+                         f"got {len(links)}")
+    return make_topology(name, sites, {
+        (k, (k + 1) % n): links[k] for k in range(n)})
+
+
+def line(name: str, sites: Sequence[Site],
+         links: Sequence[Link]) -> Topology:
+    n = len(sites)
+    if len(links) != n - 1:
+        raise ValueError(f"line of {n} sites needs {n - 1} links")
+    return make_topology(name, sites, {
+        (k, k + 1): links[k] for k in range(n - 1)})
+
+
+def hub(name: str, hub_site: Site, leaves: Sequence[Site],
+        spoke: Link) -> Topology:
+    """Star topology: site 0 is the hub, leaf↔leaf traffic relays
+    through it (two spoke hops)."""
+    sites = (hub_site,) + tuple(leaves)
+    return make_topology(name, sites, {
+        (0, k): spoke for k in range(1, len(sites))})

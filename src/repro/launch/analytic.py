@@ -113,6 +113,28 @@ def analytic_cost(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
                         model_flops=float(model_flops))
 
 
+def placement_degrees(plan, topo, placement, global_batch: int, *,
+                      model: int = 1) -> Tuple[int, int, int]:
+    """(dp, tp, zero_deg) for a plan *placed on topology sites* — the
+    device-free twin of ``plan_degrees`` for ``core.search`` candidates:
+    degrees come from the (pod, data, model) shape the placement's sites
+    map to (launch/mesh.topology_mesh_spec), so the analytic roofline can
+    price a searched plan before any mesh exists."""
+    from repro.launch.mesh import topology_mesh_spec
+    (pod, data, m), _ = topology_mesh_spec(topo, placement.sites,
+                                           model=model)
+    sizes = {"pod": pod, "data": data, "model": m}
+    cand = ("pod", "data") if (plan.shards_weights or plan.pipeline) \
+        else ("pod", "data", "model")
+    dp = 1
+    for a in cand:
+        if global_batch > 0 and global_batch % (dp * sizes[a]) == 0:
+            dp *= sizes[a]
+    tp = m if (plan.shards_weights or plan.pipeline) else 1
+    zdeg = pod * data if plan.zero_sharding else 1
+    return max(dp, 1), max(tp, 1), max(zdeg, 1)
+
+
 def plan_degrees(plan, mesh, global_batch: int) -> Tuple[int, int, int]:
     """(dp, tp, zero_deg) for a plan on a mesh."""
     axes = plan.batch_axes(mesh, global_batch)

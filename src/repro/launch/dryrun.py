@@ -128,6 +128,8 @@ def run_one(arch: str, shape_name: str, plan_name: str, *,
         print(f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
         print("memory_analysis:", mem)
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax 0.4.x: list per device
+            cost = cost[0] if cost else {}
         keys = ("flops", "bytes accessed")
         print("cost_analysis:", {k: cost.get(k) for k in keys})
     roof = rl.from_compiled(

@@ -1,9 +1,15 @@
-"""Production meshes.
+"""Production meshes, and topology→mesh mapping.
 
 Single pod: 16x16 = 256 chips, axes ("data", "model").
 Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
 axis is the slow (DCN) dimension, the TPU analogue of the paper's
 site-to-site WAN links.
+
+``make_topology_mesh`` maps an N-site ``core.topology.Topology`` selection
+onto the same axis vocabulary: one pod block per selected site, intra-site
+GPUs split over (data, model).  Pipeshard's ``pipeline_mesh`` then absorbs
+the pod axis into stages, so a ``core.search`` stage→site assignment lands
+each stage on its site's devices (DESIGN.md §5).
 
 ``make_production_mesh`` is a FUNCTION (not a module constant) so importing
 this module never touches jax device state; only launch/dryrun.py forces
@@ -11,21 +17,66 @@ the 512-device host platform.
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence, Tuple
+
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh as _compat_make_mesh
+from repro.core.topology import Topology
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(shape, axes) -> Mesh:
     """Small explicit meshes for tests (host devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(tuple(shape), tuple(axes))
+
+
+# --------------------------------------------------------------------- #
+# topology sites -> mesh axes
+# --------------------------------------------------------------------- #
+
+def topology_mesh_spec(topo: Topology,
+                       sites: Optional[Sequence[int]] = None, *,
+                       model: int = 1
+                       ) -> Tuple[Tuple[int, int, int],
+                                  Tuple[str, str, str]]:
+    """(shape, axes) of the mesh realizing a site selection: pod = one
+    block per site (the slow inter-site dimension), each site's GPUs split
+    into (data, model).  Pure function of the topology — unit-testable
+    without devices; ``make_topology_mesh`` materializes it."""
+    sel = topo.select(sites)
+    if not sel:
+        raise ValueError("empty site selection")
+    per = {len(topo.sites[i].gpus) for i in sel}
+    if len(per) != 1:
+        raise ValueError(
+            f"sites {sel} have unequal GPU counts {sorted(per)}; meshes "
+            f"are rectangular — select equal-sized sites per mesh")
+    n_per = per.pop()
+    if n_per % model != 0:
+        raise ValueError(f"model={model} does not divide the {n_per} GPUs "
+                         f"per site")
+    return (len(sel), n_per // model, model), ("pod", "data", "model")
+
+
+def make_topology_mesh(topo: Topology,
+                       sites: Optional[Sequence[int]] = None, *,
+                       model: int = 1, devices=None) -> Mesh:
+    """Mesh over `devices` (default: all local) shaped after a topology
+    site selection; device blocks follow the order of `sites`."""
+    shape, axes = topology_mesh_spec(topo, sites, model=model)
+    n = shape[0] * shape[1] * shape[2]
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if len(devs) < n:
+        raise ValueError(f"topology selection needs {n} devices, "
+                         f"have {len(devs)}")
+    return _compat_make_mesh(shape, axes, devices=devs[:n])
 
 
 # TPU v5e roofline constants (per chip) — see EXPERIMENTS.md §Roofline.

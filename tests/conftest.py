@@ -17,7 +17,11 @@ def rng():
     return np.random.default_rng(0)
 
 
-def subprocess_env():
+@pytest.fixture(scope="session")
+def subproc_env():
+    """Environment for subprocess-based multi-device tests (PYTHONPATH
+    pointing at src/).  Fixture (pytest conftest auto-discovery) rather
+    than `import conftest`, which breaks under importlib import mode."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     return env

@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim for property-based tests.
+
+``hypothesis`` is a test extra (see pyproject.toml ``[test]``).  Test
+modules import ``given/settings/st`` from here instead of from
+``hypothesis`` directly, so that when the extra is not installed the
+property tests collect and *skip* cleanly instead of failing the whole
+module at import time (pytest finds this module through the tests
+directory on sys.path, same as conftest auto-discovery).
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        """Replace the property test with a zero-arg skipper (no fixture
+        lookup on the strategy parameter names)."""
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed — property test "
+                            "(install the [test] extra to run)")
+            skipper.__name__ = getattr(fn, "__name__", "property_test")
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """st.<anything>(...) is only evaluated at decoration time; the
+        value is never drawn from, so an inert placeholder suffices."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

@@ -3,7 +3,7 @@ claims C1–C5 (orderings, latency degradation, OOM boundaries, Algorithm 1
 selections) — these are the EXPERIMENTS.md §Paper-validation gates."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from prophelpers import given, settings, st
 
 from repro.configs import get_config
 from repro.core.costmodel import (GPUS, PAPER_CLUSTERS, Cluster, Link, VM,

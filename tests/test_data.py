@@ -2,7 +2,7 @@
 invariants, loader determinism and shard-partition properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from prophelpers import given, settings, st
 
 from repro.data import (Loader, Tokenizer, build_dataset, pack_documents,
                         synthetic_wikipedia)

@@ -52,8 +52,8 @@ def test_real_module_scaling_with_depth():
     from functools import partial
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("model",))
 
     def make(n):
         def f(w, x):

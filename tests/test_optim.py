@@ -3,7 +3,7 @@ schedule properties (hypothesis)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from prophelpers import given, settings, st
 
 from repro.configs.base import TrainConfig
 from repro.optim import adamw_update, global_norm, init_adamw, lr_at

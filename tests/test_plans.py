@@ -8,22 +8,28 @@ import sys
 import numpy as np
 import pytest
 
-from conftest import subprocess_env
+from repro.compat import NATIVE_SHARD_MAP
+
+needs_partial_auto = pytest.mark.skipif(
+    not NATIVE_SHARD_MAP,
+    reason="pipeshard needs partial-auto shard_map; the jax-0.4.x SPMD "
+           "partitioner rejects it (repro.compat.NATIVE_SHARD_MAP)")
 
 
-def _run_plan_check(extra_args=()):
+def _run_plan_check(env, extra_args=()):
     cmd = [sys.executable, "-m", "repro.launch.plan_check",
            "--devices", "8", *extra_args]
     out = subprocess.run(cmd, capture_output=True, text=True, timeout=560,
-                         env=subprocess_env())
+                         env=env)
     assert out.returncode == 0, out.stderr[-2000:]
     line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
     return json.loads(line)
 
 
 @pytest.mark.slow
-def test_all_plans_equivalent_dense():
-    res = _run_plan_check()
+@needs_partial_auto
+def test_all_plans_equivalent_dense(subproc_env):
+    res = _run_plan_check(subproc_env)
     assert set(res) == {"data", "zero2", "shard", "shard_zero", "pipeshard"}
     base = res["data"]
     for name, r in res.items():
@@ -34,20 +40,20 @@ def test_all_plans_equivalent_dense():
 
 
 @pytest.mark.slow
-def test_plans_equivalent_moe():
+def test_plans_equivalent_moe(subproc_env):
     # rtol 6e-3: the shard plan's per-data-shard MoE dispatch casts its
     # shard_map boundary to fp32 (XLA CPU bug workaround), so rounding
     # differs slightly from the data plan's global dispatch; no-drop
     # capacity in the reduced config keeps the math otherwise identical.
-    res = _run_plan_check(["--arch", "phi3.5-moe-42b-a6.6b",
+    res = _run_plan_check(subproc_env, ["--arch", "phi3.5-moe-42b-a6.6b",
                            "--plans", "data,shard", "--layers", "2"])
     np.testing.assert_allclose(res["shard"]["losses"], res["data"]["losses"],
                                rtol=6e-3)
 
 
 @pytest.mark.slow
-def test_plans_equivalent_ssm():
-    res = _run_plan_check(["--arch", "falcon-mamba-7b",
+def test_plans_equivalent_ssm(subproc_env):
+    res = _run_plan_check(subproc_env, ["--arch", "falcon-mamba-7b",
                            "--plans", "data,zero2,shard", "--layers", "2"])
     for name in ("zero2", "shard"):
         np.testing.assert_allclose(res[name]["losses"],
@@ -55,8 +61,9 @@ def test_plans_equivalent_ssm():
 
 
 @pytest.mark.slow
-def test_pipeshard_four_stages():
+@needs_partial_auto
+def test_pipeshard_four_stages(subproc_env):
     """4-stage pipeline (stage absorbs the whole 'pod'+'data' axes)."""
-    res = _run_plan_check(["--plans", "data,pipeshard", "--layers", "8"])
+    res = _run_plan_check(subproc_env, ["--plans", "data,pipeshard", "--layers", "8"])
     np.testing.assert_allclose(res["pipeshard"]["losses"],
                                res["data"]["losses"], rtol=2e-3)

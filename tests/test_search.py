@@ -1,0 +1,223 @@
+"""PlanSearch: the general (technique × site-subset × stage-order) search,
+its Algorithm-1 equivalence on two-VM topologies, and the selector's
+tie-region / ZeRO2-fallback branches (paper §IV-H)."""
+import itertools
+
+import pytest
+
+from prophelpers import given, settings, st
+
+from repro.configs import get_config
+from repro.core.costmodel import (PAPER_CLUSTERS, fabric_cluster,
+                                  paper_workload)
+from repro.core.search import (Candidate, PlanSearch, algorithm1_select,
+                               stage_orders)
+from repro.core.selector import CostModelProber, select_technique
+from repro.core.topology import Link, Site, make_topology, ring
+
+WL_M = paper_workload(get_config("gpt2m"))
+WL_L = paper_workload(get_config("gpt2L"))
+
+
+def _sites(n, gpu="A30"):
+    return [Site((gpu, gpu), name=f"S{i}") for i in range(n)]
+
+
+# ------------------------------------------------------------------ #
+# enumeration
+# ------------------------------------------------------------------ #
+
+def test_candidate_enumeration_3_sites():
+    t = make_topology("f", _sites(3), {
+        (i, j): Link(1e-3, 3.0)
+        for i, j in itertools.combinations(range(3), 2)})
+    cands = list(PlanSearch(WL_M, t).candidates())
+    # singles: 3 sites x {data, zero2, shard}; pairs: 3 x (3 + 1 order);
+    # triple: 3 + 3 stage orders
+    assert len(cands) == 9 + 12 + 6
+    assert all(c.technique != "pipeshard" or len(c.sites) > 1
+               for c in cands)
+
+
+def test_stage_orders_dedupe_reversals():
+    assert list(stage_orders((0, 1))) == [(0, 1)]
+    assert set(stage_orders((0, 1, 2))) == {(0, 1, 2), (0, 2, 1), (1, 0, 2)}
+    assert len(list(stage_orders(tuple(range(5)), max_orders=10))) == 10
+
+
+def test_candidate_key_and_placement():
+    c = Candidate("pipeshard", (0, 2), (2, 0))
+    assert c.key == "pipeshard@V1+V3|V3>V1"
+    assert c.placement().pod_permutation() == (1, 0)
+    assert Candidate("data", (1,)).key == "data@V2"
+
+
+# ------------------------------------------------------------------ #
+# Algorithm 1 as the N=2 special case (satellite: PlanSearch must
+# reproduce select_technique on every paper cluster)
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("mname", ["gpt2m", "gpt2L"])
+@pytest.mark.parametrize("cname", sorted(PAPER_CLUSTERS))
+def test_plansearch_select_equals_algorithm1_on_paper_clusters(cname, mname):
+    wl = paper_workload(get_config(mname))
+    cluster = PAPER_CLUSTERS[cname]
+    legacy = select_technique(CostModelProber(wl, cluster), delta=0.1)
+    searched = PlanSearch.for_cluster(wl, cluster).select(delta=0.1)
+    assert (searched.technique, searched.vms) == (legacy.technique,
+                                                  legacy.vms)
+    assert searched.probes == legacy.probes
+
+
+@settings(max_examples=25, deadline=None)
+@given(lat=st.floats(0.1, 150.0),
+       g1=st.sampled_from(["RTX", "T4", "A30"]),
+       g2=st.sampled_from(["RTX", "T4", "A30"]),
+       delta=st.floats(0.01, 0.5))
+def test_plansearch_select_equals_algorithm1_property(lat, g1, g2, delta):
+    """PlanSearch on any 2-site topology makes Algorithm 1's exact call."""
+    c = fabric_cluster("x", (g1, g1), (g2, g2), lat)
+    for wl in (WL_M, WL_L):
+        legacy = select_technique(CostModelProber(wl, c), delta=delta)
+        searched = PlanSearch.for_cluster(wl, c).select(delta=delta)
+        assert (searched.technique, searched.vms) == (legacy.technique,
+                                                      legacy.vms)
+
+
+# ------------------------------------------------------------------ #
+# selector tie-region and fallback branches (core/selector.py lines
+# 90-100 of the seed — now core/search.algorithm1_select)
+# ------------------------------------------------------------------ #
+
+class FakeProber:
+    """Scripted probe table: (technique, vms-tuple-or-None) -> TFLOP/s."""
+
+    def __init__(self, table, n_sites=2):
+        self.table = table
+        self.n_sites = n_sites
+
+    def probe(self, technique, vms):
+        key = (technique, None if vms is None else tuple(vms))
+        return self.table.get(key)
+
+
+def test_tie_region_prefers_pipeshard_when_at_least_equal():
+    # (t_p - t_z)/t_z = 5% < delta and t_p >= t_z: tie region -> pipeshard
+    sel = select_technique(FakeProber({
+        ("pipeshard", None): 10.5, ("data", (0,)): 10.0,
+        ("shard", (0,)): 1.0, ("data", (1,)): 1.0, ("shard", (1,)): 1.0,
+    }), delta=0.1)
+    assert (sel.technique, sel.vms) == ("pipeshard", [0, 1])
+
+
+def test_tie_region_picks_best_single_vm_when_it_edges_out():
+    # within delta but t_z > t_p: the absolute best measured plan wins
+    sel = select_technique(FakeProber({
+        ("pipeshard", None): 10.0, ("data", (0,)): 1.0,
+        ("shard", (0,)): 1.0, ("data", (1,)): 2.0, ("shard", (1,)): 10.5,
+    }), delta=0.1)
+    assert (sel.technique, sel.vms) == ("shard", [1])
+
+
+def test_tie_region_vm1_wins_exact_ties():
+    sel = select_technique(FakeProber({
+        ("pipeshard", None): 9.0, ("data", (0,)): 10.0,
+        ("shard", (0,)): 1.0, ("data", (1,)): 10.0, ("shard", (1,)): 1.0,
+    }), delta=0.5)
+    assert (sel.technique, sel.vms) == ("data", [0])
+
+
+def test_pipeshard_wins_beyond_delta():
+    sel = select_technique(FakeProber({
+        ("pipeshard", None): 12.0, ("data", (0,)): 10.0,
+        ("shard", (0,)): 1.0, ("data", (1,)): 1.0, ("shard", (1,)): 1.0,
+    }), delta=0.1)
+    assert (sel.technique, sel.vms) == ("pipeshard", [0, 1])
+
+
+def test_zero2_fallback_when_everything_ooms():
+    sel = select_technique(FakeProber({
+        ("zero2", None): 3.0,
+    }), delta=0.1)
+    assert (sel.technique, sel.vms) == ("zero2", [0, 1])
+    assert "zero2@both" in sel.probes
+
+
+def test_none_when_even_zero2_ooms():
+    sel = select_technique(FakeProber({}), delta=0.1)
+    assert sel.technique == "none"
+    assert sel.vms is None
+    assert sel.feasible
+
+
+def test_wrapper_respects_prober_site_count():
+    sel = select_technique(FakeProber({
+        ("data", (2,)): 5.0,
+    }, n_sites=3), delta=0.1)
+    assert (sel.technique, sel.vms) == ("data", [2])
+    assert "data@V3" in sel.probes and "pipeshard@all" in sel.probes
+
+
+# ------------------------------------------------------------------ #
+# beyond the two-VM API: selections the paper's shape cannot express
+# ------------------------------------------------------------------ #
+
+def edge3():
+    """Two metro-adjacent sites + one transatlantic site."""
+    return make_topology(
+        "edge3", _sites(3),
+        {(0, 1): Link(0.5e-3, 3.0), (1, 2): Link(60e-3, 3.0),
+         (0, 2): Link(100e-3, 3.0)})
+
+
+def test_search_spans_the_cheap_pair_of_three_sites():
+    search = PlanSearch(WL_M, edge3())
+    best = search.best()
+    # Data over the two nearby sites: a (technique, subset) pair Algorithm
+    # 1 never probes and the two-VM Cluster cannot even represent.
+    assert best.candidate.technique == "data"
+    assert best.candidate.sites == (0, 1)
+    # ... and it strictly beats what the generalized Algorithm 1 picks
+    # from the paper's restricted probe set.
+    alg1 = search.select(delta=0.1)
+    alg1_perf = search.evaluate(
+        Candidate(alg1.technique, tuple(alg1.vms)))
+    assert best.tflops > alg1_perf
+
+
+def test_search_orders_pipeline_stages_around_dear_links():
+    # asymmetric ring: A-B and B-C at 5ms, C-A at 120ms.  The best
+    # 3-stage pipeline crosses the two cheap links (order A>B>C); any
+    # order crossing the 120ms edge prices strictly worse.
+    topo = ring("ring3", _sites(3),
+                [Link(5e-3, 3.0), Link(5e-3, 3.0), Link(120e-3, 3.0)])
+    search = PlanSearch(WL_L, topo)
+    scored = {s.candidate.stage_order: s.tflops for s in search.search()
+              if s.candidate.technique == "pipeshard"
+              and len(s.candidate.sites) == 3}
+    assert set(scored) == {(0, 1, 2), (0, 2, 1), (1, 0, 2)}
+    assert max(scored, key=scored.get) == (0, 1, 2)
+    assert scored[(0, 1, 2)] > scored[(0, 2, 1)]
+
+
+def test_live_probe_fn_probes_pipeshard_once_per_subset():
+    """Each live probe is an epsilon-epoch training run: the search must
+    not replay it per stage order (orders are indistinguishable live)."""
+    calls = []
+
+    def probe(tech, sites):
+        calls.append((tech, tuple(sites)))
+        return 1.0
+
+    search = PlanSearch(WL_M, edge3(), probe_fn=probe)
+    search.search()
+    pipe = [c for c in calls if c[0] == "pipeshard"]
+    assert len(pipe) == len(set(pipe)) == 4   # 3 pairs + 1 triple
+
+
+def test_search_best_feasibility_and_ranking():
+    search = PlanSearch(WL_M, edge3(), max_sites=1)
+    ranked = search.search()
+    perfs = [s.tflops or 0.0 for s in ranked]
+    assert perfs == sorted(perfs, reverse=True)
+    assert all(len(s.candidate.sites) == 1 for s in ranked)

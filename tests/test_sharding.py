@@ -3,7 +3,7 @@ divisibility invariant (hypothesis)."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from prophelpers import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, get_config

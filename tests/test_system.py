@@ -9,7 +9,6 @@ import jax
 import numpy as np
 import pytest
 
-from conftest import subprocess_env
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.core.plans import get_plan
@@ -83,13 +82,13 @@ def test_engine_generates(tiny_setup):
 
 
 @pytest.mark.slow
-def test_dryrun_cli_smoke():
+def test_dryrun_cli_smoke(subproc_env):
     """The dry-run entrypoint itself (512 forced devices, reduced to one
     combo) must lower + compile + emit a roofline record."""
     cmd = [sys.executable, "-m", "repro.launch.dryrun",
            "--arch", "whisper-small", "--shape", "decode_32k"]
     out = subprocess.run(cmd, capture_output=True, text=True, timeout=560,
-                         env=subprocess_env())
+                         env=subproc_env)
     assert out.returncode == 0, out.stderr[-2000:]
     rec = json.loads([l for l in out.stdout.splitlines()
                       if l.startswith("{")][-1])

@@ -1,0 +1,166 @@
+"""N-site topology subsystem: link graph routing, spanning-set bottleneck,
+the legacy two-VM Cluster as the exact N=2 special case, and site→mesh
+mapping (DESIGN.md §5)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import (PAPER_CLUSTERS, fabric_cluster,
+                                  paper_workload, technique_step_cost)
+from repro.core.plans import Placement
+from repro.core.topology import (GPUS, Link, Site, Topology, fully_connected,
+                                 hub, line, make_topology, ring, two_site)
+from repro.launch.mesh import topology_mesh_spec
+
+WL = paper_workload(get_config("gpt2m"))
+
+
+def _sites(n, gpu="A30"):
+    return [Site((gpu, gpu), name=f"S{i}") for i in range(n)]
+
+
+# ------------------------------------------------------------------ #
+# graph mechanics
+# ------------------------------------------------------------------ #
+
+def test_link_effective_throughput_tcp_window_rule():
+    assert Link(0.0, 3.0).effective_gbps == 3.0
+    # 100ms RTT, 8MB window: 0.08 GB/s regardless of raw bandwidth
+    assert Link(0.1, 3.0).effective_gbps == pytest.approx(0.08)
+
+
+def test_intra_link_for_same_site():
+    t = two_site("t", ("RTX", "RTX"), ("T4", "T4"), 10.0)
+    assert t.link(0, 0) is t.sites[0].intra
+    assert t.link(0, 1).latency_s == pytest.approx(10e-3)
+
+
+def test_hub_routes_leaf_to_leaf_through_hub():
+    t = hub("h", Site(("A30", "A30")), _sites(2), Link(20e-3, 3.0))
+    direct = t.link(0, 1)                  # hub -> leaf: one spoke
+    relayed = t.link(1, 2)                 # leaf -> leaf: two spokes
+    assert direct.latency_s == pytest.approx(20e-3)
+    assert relayed.latency_s == pytest.approx(40e-3)
+    assert relayed.bandwidth_gbps == 3.0   # min along the path
+
+
+def test_route_prefers_lower_latency_path():
+    # 0-1-2 cheap relay vs 0-2 expensive direct: link() must return the
+    # direct edge when present, routing only fills missing pairs
+    t = make_topology("m", _sites(3), {
+        (0, 1): Link(1e-3, 3.0), (1, 2): Link(1e-3, 3.0)})
+    routed = t.link(0, 2)
+    assert routed.latency_s == pytest.approx(2e-3)
+
+
+def test_disconnected_sites_raise():
+    t = make_topology("d", _sites(3), {(0, 1): Link(1e-3, 3.0)})
+    with pytest.raises(ValueError, match="not connected"):
+        t.link(0, 2)
+
+
+def test_worst_link_is_spanning_bottleneck():
+    t = make_topology("w", _sites(3), {
+        (0, 1): Link(1e-3, 3.0), (1, 2): Link(1e-3, 3.0),
+        (0, 2): Link(90e-3, 3.0)})
+    # subset {0,1}: only the cheap link
+    assert t.worst_link([0, 1]).latency_s == pytest.approx(1e-3)
+    # all three: the 90ms edge caps the collective
+    assert t.worst_link(None).latency_s == pytest.approx(90e-3)
+    # single site: its intra link
+    assert t.worst_link([1]) is t.sites[1].intra
+
+
+def test_select_validates():
+    t = fully_connected("f", _sites(2), Link(1e-3, 3.0))
+    with pytest.raises(IndexError):
+        t.select([2])
+    with pytest.raises(ValueError):
+        t.select([0, 0])
+
+
+def test_ring_builder_validates_link_count():
+    with pytest.raises(ValueError):
+        ring("r", _sites(3), [Link(1e-3, 3.0)] * 2)
+    with pytest.raises(ValueError):
+        line("l", _sites(3), [Link(1e-3, 3.0)] * 3)
+    # a 2-site "ring" would silently merge its two parallel edges
+    with pytest.raises(ValueError, match=">= 3 sites"):
+        ring("r2", _sites(2), [Link(1e-3, 3.0), Link(200e-3, 3.0)])
+
+
+def test_conflicting_duplicate_links_rejected():
+    with pytest.raises(ValueError, match="conflicting links"):
+        make_topology("dup", _sites(2), {
+            (0, 1): Link(1e-3, 3.0), (1, 0): Link(200e-3, 3.0)})
+
+
+# ------------------------------------------------------------------ #
+# the N=2 special case is the legacy Cluster, bit for bit
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("cname", sorted(PAPER_CLUSTERS))
+@pytest.mark.parametrize("tech", ["data", "zero2", "shard", "pipeshard"])
+def test_cluster_topology_embedding_preserves_costs(cname, tech):
+    cluster = PAPER_CLUSTERS[cname]
+    topo = cluster.topology()
+    for vms in (None, [0], [1]):
+        a = technique_step_cost(tech, WL, cluster, vms)
+        b = technique_step_cost(tech, WL, topo, vms)
+        assert a.compute_s == pytest.approx(b.compute_s)
+        assert a.comm_s == pytest.approx(b.comm_s)
+        assert a.mem_required_gb == pytest.approx(b.mem_required_gb)
+        assert a.mem_available_gb == pytest.approx(b.mem_available_gb)
+
+
+def test_two_site_builder_matches_fabric_cluster():
+    c = fabric_cluster("x", ("A30", "A30"), ("T4", "T4"), 20.0)
+    t = two_site("x", ("A30", "A30"), ("T4", "T4"), 20.0)
+    for tech in ("data", "zero2", "shard", "pipeshard"):
+        assert technique_step_cost(tech, WL, c).total_s == pytest.approx(
+            technique_step_cost(tech, WL, t).total_s)
+
+
+def test_pipeshard_stage_order_prices_crossed_links():
+    # line A--B--C with one dear edge: order (0,1,2) crosses two cheap
+    # links; order (0,2,1) must route 0->2 through B and pay double
+    t = line("ln", _sites(3), [Link(2e-3, 3.0), Link(2e-3, 3.0)])
+    natural = technique_step_cost("pipeshard", WL, t, stage_order=[0, 1, 2])
+    crossed = technique_step_cost("pipeshard", WL, t, stage_order=[0, 2, 1])
+    assert crossed.comm_s > natural.comm_s
+
+
+def test_stage_order_must_be_permutation():
+    t = fully_connected("f", _sites(3), Link(1e-3, 3.0))
+    with pytest.raises(ValueError, match="permutation"):
+        technique_step_cost("pipeshard", WL, t, vms=[0, 1],
+                            stage_order=[0, 2])
+
+
+# ------------------------------------------------------------------ #
+# site -> mesh mapping
+# ------------------------------------------------------------------ #
+
+def test_topology_mesh_spec_shapes():
+    t = fully_connected("f", _sites(3), Link(1e-3, 3.0))
+    shape, axes = topology_mesh_spec(t)
+    assert shape == (3, 2, 1)
+    assert axes == ("pod", "data", "model")
+    shape, _ = topology_mesh_spec(t, [0, 2], model=2)
+    assert shape == (2, 1, 2)
+
+
+def test_topology_mesh_spec_rejects_ragged_sites():
+    t = make_topology("rag", [Site(("A30", "A30")), Site(("T4",))],
+                      {(0, 1): Link(1e-3, 3.0)})
+    with pytest.raises(ValueError, match="unequal GPU counts"):
+        topology_mesh_spec(t)
+
+
+def test_placement_pod_permutation():
+    p = Placement(sites=(1, 3, 4), stage_order=(4, 1, 3))
+    assert p.pod_permutation() == (2, 0, 1)
+    assert p.n_stages == 3
+    assert Placement(sites=(0, 1)).pod_permutation() == (0, 1)
+    with pytest.raises(ValueError, match="permutation"):
+        Placement(sites=(0, 1), stage_order=(0, 2))
