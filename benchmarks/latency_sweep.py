@@ -1,0 +1,227 @@
+"""Benchmark: Fig. 5-style degradation curves over an N-site topology.
+
+Sweeps ONE edge's latency while every other edge stays metro-local and
+tracks what the pruned ``core.search.PlanSearch`` picks at each point —
+the N-site analogue of the paper's latency-degradation figure:
+
+    PYTHONPATH=src python benchmarks/latency_sweep.py --smoke
+    PYTHONPATH=src python benchmarks/latency_sweep.py                # line4
+    PYTHONPATH=src python benchmarks/latency_sweep.py --kind ring
+
+Two machine-checked findings come out of the default configs
+(docs/benchmarks.md):
+
+  * ``line`` (swept middle edge — the pipeline MUST cross it): the
+    winner flips data@all → pipeshard@all → data on the cheap pair as
+    latency grows; the flip points are reported.
+  * ``ring`` (swept closing edge): all-sites Pipeshard is *immune* —
+    a ring minus one edge is still a Hamiltonian path, so the search
+    routes the pipeline around the dear edge and its TFLOP/s stays flat
+    while every collective plan spanning the edge collapses.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.sweep_common import (GPU_MIXES, LATENCY_REGIMES, WAN_GBPS,
+                                     md_table, mix_sites, write_outputs)
+from repro.configs import get_config
+from repro.core.costmodel import avg_tflops, paper_workload
+from repro.core.search import PlanSearch
+from repro.core.topology import Link, Topology, line, make_topology, ring
+
+METRO_MS = LATENCY_REGIMES["metro"]  # the paper's TACC-TACC RTT
+
+
+def swept_topology(kind: str, n: int, mix_name: str,
+                   lat_ms: float) -> Topology:
+    """`kind` topology with one swept edge: the middle edge of a line
+    (every all-sites pipeline crosses it), the closing edge of a ring
+    (a pipeline can route around it)."""
+    sites = mix_sites(n, GPU_MIXES[mix_name])
+    metro = Link(METRO_MS * 1e-3, WAN_GBPS)
+    swept = Link(lat_ms * 1e-3, WAN_GBPS)
+    name = f"{kind}{n}-{mix_name}-swept"
+    if kind == "line":
+        links = [metro] * (n - 1)
+        links[(n - 1) // 2] = swept
+        return line(name, sites, links)
+    if kind == "ring":
+        links = [metro] * n
+        links[n - 1] = swept         # edge (n-1, 0)
+        return ring(name, sites, links)
+    raise ValueError(f"latency sweep supports line/ring, not {kind!r}")
+
+
+def sweep_point(lat_ms: float, *, kind: str, n: int, mix: str,
+                wl, balance: str) -> dict:
+    """Winner + reference series at one swept-edge latency."""
+    topo = swept_topology(kind, n, mix, lat_ms)
+    search = PlanSearch(wl, topo, stage_balance=balance)
+    ranked = search.search()
+    best = ranked[0] if ranked and ranked[0].feasible else None
+    pipe_all = max((s.tflops for s in ranked
+                    if s.candidate.technique == "pipeshard"
+                    and len(s.candidate.sites) == n and s.feasible),
+                   default=None)
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    data_pair = max((avg_tflops("data", wl, topo, [i, j]) or 0.0
+                     for i, j in pairs), default=0.0) or None
+    data_all = avg_tflops("data", wl, topo)
+    single = max((avg_tflops(t, wl, topo, [i]) or 0.0
+                  for i in range(n)
+                  for t in ("data", "shard", "zero2")), default=0.0) or None
+    return {
+        "latency_ms": lat_ms,
+        "winner": None if best is None else {
+            "key": best.candidate.key,
+            "technique": best.candidate.technique,
+            "sites": list(best.candidate.sites),
+            "tflops": round(best.tflops, 4)},
+        "pipeshard_all": None if pipe_all is None else round(pipe_all, 4),
+        "data_all": None if data_all is None else round(data_all, 4),
+        "data_best_pair": None if data_pair is None else round(data_pair, 4),
+        "best_single_site": None if single is None else round(single, 4),
+    }
+
+
+def latencies(points: int, lo_ms: float = 0.1,
+              hi_ms: float = 200.0) -> List[float]:
+    """Log-spaced swept-edge RTTs covering Table I and beyond."""
+    if points == 1:
+        return [lo_ms]
+    r = math.log(hi_ms / lo_ms) / (points - 1)
+    return [round(lo_ms * math.exp(r * k), 3) for k in range(points)]
+
+
+def find_flips(rows: List[dict]) -> List[dict]:
+    """Winner changes along the sweep, as (latency interval, from, to)."""
+    flips = []
+    for prev, cur in zip(rows[:-1], rows[1:]):
+        a = (prev["winner"] or {}).get("key")
+        b = (cur["winner"] or {}).get("key")
+        if a != b:
+            flips.append({"from": a, "to": b,
+                          "between_ms": [prev["latency_ms"],
+                                         cur["latency_ms"]]})
+    return flips
+
+
+def check_claims(rows: List[dict], flips: List[dict], kind: str,
+                 n: int) -> List[str]:
+    """The two machine-checked findings of the default configs."""
+    failures = []
+    winners = [(r["winner"] or {}).get("key", "") for r in rows]
+    if kind == "line":
+        # pipeshard-on-all-sites must win somewhere in the mid-range ...
+        pipe_wins = [w.startswith("pipeshard@") and
+                     w.count("+") == n - 1 for w in winners]
+        if not any(pipe_wins):
+            failures.append("line: all-sites pipeshard never wins")
+        # ... and the search must flip to a 2-site data plan at the tail
+        last = winners[-1]
+        if not (last.startswith("data@") and last.count("+") == 1):
+            failures.append(f"line: no flip to cheap-pair data "
+                            f"(final winner {last})")
+    if kind == "ring":
+        # routing immunity: pipeshard@all TFLOP/s flat across the sweep
+        pa = [r["pipeshard_all"] for r in rows
+              if r["pipeshard_all"] is not None]
+        if pa and (max(pa) - min(pa)) / max(pa) > 0.01:
+            failures.append(f"ring: pipeshard@all not flat "
+                            f"({min(pa):.2f}..{max(pa):.2f} TFLOP/s)")
+    return failures
+
+
+def to_markdown(rows: List[dict], flips: List[dict], *, kind: str, n: int,
+                mix: str, model: str, balance: str) -> str:
+    out = [f"# Latency sweep: {kind}{n} / {mix} / {model}", "",
+           f"One {'middle' if kind == 'line' else 'closing'} edge swept; "
+           f"all other edges at {METRO_MS} ms.  TFLOP/s per series, "
+           f"`stage_balance={balance!r}`.", ""]
+    headers = ["swept RTT (ms)", "winner", "winner TF", "pipeshard@all",
+               "data@all", "best data@pair", "best single site"]
+    fmt = lambda v: "-" if v is None else f"{v:.2f}"
+    body = []
+    for r in rows:
+        w = r["winner"]
+        body.append([f"{r['latency_ms']:g}",
+                     "OOM" if w is None else w["key"],
+                     "-" if w is None else f"{w['tflops']:.2f}",
+                     fmt(r["pipeshard_all"]), fmt(r["data_all"]),
+                     fmt(r["data_best_pair"]), fmt(r["best_single_site"])])
+    out.append(md_table(headers, body))
+    out.append("\n## Winner flips\n")
+    if not flips:
+        out.append("(none — one plan wins across the whole sweep)\n")
+    for f in flips:
+        lo, hi = f["between_ms"]
+        out.append(f"- `{f['from']}` → `{f['to']}` between {lo:g} ms "
+                   f"and {hi:g} ms\n")
+    return "\n".join(out)
+
+
+def run(*, smoke: bool = False, out: Optional[str] = None,
+        kind: str = "line", n: int = 4, mix: str = "a30",
+        model: str = "gpt2m", balance: str = "tflops",
+        points: Optional[int] = None, print_fn=print) -> int:
+    """Run the sweep; returns the number of failed claim checks."""
+    npts = points if points is not None else (5 if smoke else 13)
+    wl = paper_workload(get_config(model))
+    t0 = time.perf_counter()
+    rows = [sweep_point(lat, kind=kind, n=n, mix=mix, wl=wl,
+                        balance=balance)
+            for lat in latencies(npts)]
+    elapsed = time.perf_counter() - t0
+    flips = find_flips(rows)
+    failures = check_claims(rows, flips, kind, n)
+    md = to_markdown(rows, flips, kind=kind, n=n, mix=mix, model=model,
+                     balance=balance)
+    mode = "smoke" if smoke else "full"
+    record = {"mode": mode, "kind": kind, "n": n, "mix": mix,
+              "model": model, "balance": balance,
+              "elapsed_s": round(elapsed, 2), "points": rows,
+              "flips": flips}
+    if out is None:
+        out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "out")
+    write_outputs(out, f"latency_sweep_{kind}{n}_{mode}", record, md,
+                  print_fn=print_fn)
+    for line_ in md.splitlines():
+        print_fn(line_)
+    for f in failures:
+        print_fn(f"CLAIM-FAIL: {f}")
+    return len(failures)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="5 sweep points instead of 13")
+    ap.add_argument("--out", default=None,
+                    help="output dir (default: benchmarks/out)")
+    ap.add_argument("--kind", choices=("line", "ring"), default="line")
+    ap.add_argument("--n", type=int, default=4, help="number of sites")
+    ap.add_argument("--mix", choices=sorted(GPU_MIXES), default="a30")
+    ap.add_argument("--model", default="gpt2m")
+    ap.add_argument("--balance", choices=("even", "tflops"),
+                    default="tflops")
+    ap.add_argument("--points", type=int, default=None)
+    args = ap.parse_args(argv)
+    return run(smoke=args.smoke, out=args.out, kind=args.kind, n=args.n,
+               mix=args.mix, model=args.model, balance=args.balance,
+               points=args.points)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

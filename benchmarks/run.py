@@ -20,10 +20,12 @@ def main() -> None:
     args = ap.parse_args()
 
     import benchmarks.kernel_bench as kernel_bench
+    import benchmarks.latency_sweep as latency_sweep
     import benchmarks.paper_alg1 as paper_alg1
     import benchmarks.paper_figs as paper_figs
     import benchmarks.paper_table2 as paper_table2
     import benchmarks.roofline_table as roofline_table
+    import benchmarks.topology_sweep as topology_sweep
 
     n_fail = 0
     for name, mod in (("paper_figs (Figs 3-7)", paper_figs),
@@ -32,6 +34,11 @@ def main() -> None:
                       ("kernel_bench", kernel_bench)):
         print(f"\n===== {name} =====")
         n_fail += mod.run()
+
+    print("\n===== topology_sweep (winner maps, smoke) =====")
+    n_fail += topology_sweep.run(smoke=True)
+    print("\n===== latency_sweep (Fig.5-style curves, smoke) =====")
+    n_fail += latency_sweep.run(smoke=True)
 
     if args.sweep:
         import subprocess

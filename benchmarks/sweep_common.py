@@ -1,0 +1,92 @@
+"""Shared vocabulary for the multi-site sweep benchmarks
+(topology_sweep.py / latency_sweep.py): the paper's GPU cards arranged
+into N-site ring/hub/line topologies at Table-I latency regimes, plus
+JSON/markdown emitters.  See docs/benchmarks.md."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Sequence
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.topology import (Link, Site, Topology, hub, line, ring,
+                                 two_site)
+
+# Two GPUs per site of one card type, cycling through the mix — the
+# paper's VM shape (Table I) generalized to N sites.
+GPU_MIXES: Dict[str, Sequence[str]] = {
+    "a30": ("A30",),
+    "rtx": ("RTX",),
+    "t4": ("T4",),
+    "a30+t4": ("A30", "T4"),
+    "rtx+t4": ("RTX", "T4"),
+    "a30+rtx": ("A30", "RTX"),
+}
+
+# Inter-site RTTs measured by the paper (Table I), in ms.
+LATENCY_REGIMES: Dict[str, float] = {
+    "metro": 0.1,            # TACC-TACC
+    "regional": 20.2,        # UTAH-GPN
+    "continental": 57.4,     # UTAH-MASS
+    "transatlantic": 103.0,  # GAT-AMST
+}
+
+# NCCL-over-TCP achievable bandwidth on FABRIC's 100 Gbps links (§II-C).
+WAN_GBPS = 3.0
+
+TOPOLOGY_KINDS = ("ring", "hub", "line")
+
+
+def mix_sites(n: int, mix: Sequence[str]) -> List[Site]:
+    """N two-GPU sites cycling through the mix's card types."""
+    return [Site((mix[i % len(mix)],) * 2, name=f"S{i}") for i in range(n)]
+
+
+def build_topology(kind: str, n: int, mix_name: str, lat_ms: float, *,
+                   wan_gbps: float = WAN_GBPS) -> Topology:
+    """An N-site `kind` topology with every inter-site edge at `lat_ms`.
+
+    ring needs >= 3 sites and hub >= 3 (hub + 2 leaves); at N=2 both
+    degenerate to the paper's single-edge two-site shape, which is what
+    this returns so winner maps can cover N=2 uniformly.
+    """
+    mix = GPU_MIXES[mix_name]
+    sites = mix_sites(n, mix)
+    name = f"{kind}{n}-{mix_name}"
+    if n < 2:
+        raise ValueError("need at least 2 sites")
+    if n == 2:
+        return two_site(name, sites[0].gpus, sites[1].gpus, lat_ms,
+                        wan_gbps=wan_gbps)
+    edge = Link(lat_ms * 1e-3, wan_gbps)
+    if kind == "ring":
+        return ring(name, sites, [edge] * n)
+    if kind == "hub":
+        return hub(name, sites[0], sites[1:], edge)
+    if kind == "line":
+        return line(name, sites, [edge] * (n - 1))
+    raise ValueError(f"unknown topology kind {kind!r}; "
+                     f"expected one of {TOPOLOGY_KINDS}")
+
+
+def write_outputs(out_dir: str, stem: str, record: dict, markdown: str,
+                  print_fn=print) -> None:
+    """Write `<stem>.json` + `<stem>.md` under `out_dir`."""
+    os.makedirs(out_dir, exist_ok=True)
+    jpath = os.path.join(out_dir, f"{stem}.json")
+    mpath = os.path.join(out_dir, f"{stem}.md")
+    with open(jpath, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+        f.write("\n")
+    with open(mpath, "w") as f:
+        f.write(markdown)
+    print_fn(f"wrote {jpath} and {mpath}")
+
+
+def md_table(headers: Sequence[str], rows: Sequence[Sequence[str]]) -> str:
+    lines = ["| " + " | ".join(headers) + " |",
+             "|" + "|".join("---" for _ in headers) + "|"]
+    lines += ["| " + " | ".join(r) + " |" for r in rows]
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,191 @@
+"""Benchmark: multi-site winner maps — the N-site analogue of paper
+Table II / Algorithm 1.
+
+Runs the pruned ``core.search.PlanSearch`` over N∈{2..6} ring/hub/line
+topologies × the paper's GPU mixes (A30/T4/RTX) × GPT-2 medium/large ×
+Table-I latency regimes, and emits per-regime winner maps
+(technique × site-subset × stage-order) as JSON + markdown tables:
+
+    PYTHONPATH=src python benchmarks/topology_sweep.py --smoke
+    PYTHONPATH=src python benchmarks/topology_sweep.py            # full
+    PYTHONPATH=src python benchmarks/topology_sweep.py --exact    # no pruning
+
+``--smoke`` covers N∈{2,3} ring+hub in seconds (the CI gate) and
+cross-checks every pruned winner against the exhaustive search; the
+full grid covers N∈{2..6} × 3 kinds × 4 mixes × 2 models × 4 regimes.
+Pipeshard stages are TFLOP-weighted by default (``--balance even``
+restores the paper's equal splits).  See docs/benchmarks.md.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.sweep_common import (LATENCY_REGIMES, TOPOLOGY_KINDS,
+                                     build_topology, md_table,
+                                     write_outputs)
+from repro.configs import get_config
+from repro.core.costmodel import paper_workload
+from repro.core.search import PlanSearch, Scored
+
+SMOKE_GRID = dict(ns=(2, 3), kinds=("ring", "hub"), mixes=("a30+t4",),
+                  models=("gpt2m",), regimes=("metro", "transatlantic"))
+FULL_GRID = dict(ns=(2, 3, 4, 5, 6), kinds=TOPOLOGY_KINDS,
+                 mixes=("a30", "a30+t4", "rtx+t4", "a30+rtx"),
+                 models=("gpt2m", "gpt2L"),
+                 regimes=tuple(LATENCY_REGIMES))
+
+
+def _scored_record(search: PlanSearch, s: Optional[Scored]) -> Optional[dict]:
+    if s is None:
+        return None
+    placement = search.placement(s.candidate)
+    return {
+        "key": s.candidate.key,
+        "technique": s.candidate.technique,
+        "sites": list(s.candidate.sites),
+        "stage_order": (None if s.candidate.stage_order is None
+                        else list(s.candidate.stage_order)),
+        "stage_layers": (None if placement.stage_layers is None
+                         else list(placement.stage_layers)),
+        "tflops": round(s.tflops, 4),
+    }
+
+
+def sweep_entry(kind: str, n: int, mix: str, model: str, regime: str, *,
+                balance: str, exact: bool, check: bool) -> dict:
+    """Search one grid point; returns the winner-map entry."""
+    topo = build_topology(kind, n, mix, LATENCY_REGIMES[regime])
+    wl = paper_workload(get_config(model))
+    search = PlanSearch(wl, topo, stage_balance=balance, prune=not exact)
+    t0 = time.perf_counter()
+    ranked = search.search()
+    elapsed_ms = (time.perf_counter() - t0) * 1e3
+    best = ranked[0] if ranked and ranked[0].feasible else None
+    alg1 = search.select()
+    entry = {
+        "kind": kind, "n": n, "mix": mix, "model": model, "regime": regime,
+        "latency_ms": LATENCY_REGIMES[regime],
+        "winner": _scored_record(search, best),
+        "runner_up": _scored_record(
+            search, ranked[1] if len(ranked) > 1 and ranked[1].feasible
+            else None),
+        "algorithm1": {"technique": alg1.technique, "sites": alg1.vms},
+        "n_candidates": len(ranked),
+        "elapsed_ms": round(elapsed_ms, 2),
+    }
+    if check:   # pruned result must equal the exhaustive search's
+        exb = search.best(prune=False)
+        ok = (best is None) == (exb is None) and (
+            best is None or abs(best.tflops - exb.tflops) < 1e-9)
+        entry["matches_exhaustive"] = ok
+    return entry
+
+
+def _cell(entry: dict) -> str:
+    w = entry["winner"]
+    if w is None:
+        return "OOM"
+    sites = "+".join(str(i) for i in w["sites"])
+    return f"{w['technique']}@{sites} ({w['tflops']:.0f})"
+
+
+def to_markdown(entries: List[dict], grid: dict, *, balance: str) -> str:
+    """Winner-map tables: one per (model, regime), rows = topology,
+    cols = GPU mix, cell = winning technique@sites (TFLOP/s)."""
+    by_key: Dict[tuple, dict] = {
+        (e["model"], e["regime"], e["kind"], e["n"], e["mix"]): e
+        for e in entries}
+    out = ["# Multi-site winner maps",
+           "",
+           f"Winning plan per (topology × GPU mix), from the pruned "
+           f"`PlanSearch` with `stage_balance={balance!r}`.  Cells are "
+           f"`technique@sites (TFLOP/s)`; site GPUs cycle through the mix "
+           f"(two cards per site).  N=2 ring/hub degenerate to the paper's "
+           f"two-VM single-edge shape.", ""]
+    for model in grid["models"]:
+        out.append(f"## {model}")
+        for regime in grid["regimes"]:
+            out.append(f"\n### {regime} "
+                       f"({LATENCY_REGIMES[regime]:g} ms inter-site)\n")
+            headers = ["topology"] + list(grid["mixes"])
+            rows = []
+            for kind in grid["kinds"]:
+                for n in grid["ns"]:
+                    cells = [f"{kind}{n}"]
+                    for mix in grid["mixes"]:
+                        e = by_key.get((model, regime, kind, n, mix))
+                        cells.append("-" if e is None else _cell(e))
+                    rows.append(cells)
+            out.append(md_table(headers, rows))
+    return "\n".join(out)
+
+
+def run(*, smoke: bool = False, out: Optional[str] = None,
+        balance: str = "tflops", exact: bool = False,
+        print_fn=print) -> int:
+    """Run the sweep; returns the number of failures (pruned/exhaustive
+    winner mismatches in smoke mode, or grid points that errored)."""
+    grid = SMOKE_GRID if smoke else FULL_GRID
+    entries, n_fail = [], 0
+    t0 = time.perf_counter()
+    for model in grid["models"]:
+        for regime in grid["regimes"]:
+            for kind in grid["kinds"]:
+                for n in grid["ns"]:
+                    for mix in grid["mixes"]:
+                        e = sweep_entry(kind, n, mix, model, regime,
+                                        balance=balance, exact=exact,
+                                        check=smoke and not exact)
+                        entries.append(e)
+                        if e.get("matches_exhaustive") is False:
+                            n_fail += 1
+                            print_fn(f"CLAIM-FAIL: pruned winner != "
+                                     f"exhaustive at {e['kind']}{e['n']} "
+                                     f"{e['mix']} {e['model']} "
+                                     f"{e['regime']}")
+    elapsed = time.perf_counter() - t0
+    mode = "smoke" if smoke else "full"
+    print_fn(f"# topology sweep ({mode}): {len(entries)} grid points, "
+             f"{elapsed:.1f}s, balance={balance}, "
+             f"{'exhaustive' if exact else 'pruned'}")
+    md = to_markdown(entries, grid, balance=balance)
+    record = {"mode": mode, "balance": balance, "exact": exact,
+              "elapsed_s": round(elapsed, 2), "entries": entries}
+    if out is None:
+        out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "out")
+    write_outputs(out, f"topology_sweep_{mode}", record, md,
+                  print_fn=print_fn)
+    for line_ in md.splitlines():
+        print_fn(line_)
+    return n_fail
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid (N∈{2,3} ring+hub), seconds, with "
+                         "pruned==exhaustive cross-check")
+    ap.add_argument("--out", default=None,
+                    help="output dir (default: benchmarks/out)")
+    ap.add_argument("--balance", choices=("even", "tflops"),
+                    default="tflops", help="pipeline stage-size policy")
+    ap.add_argument("--exact", action="store_true",
+                    help="exactness escape hatch: exhaustive search, "
+                         "no pruning")
+    args = ap.parse_args(argv)
+    return run(smoke=args.smoke, out=args.out, balance=args.balance,
+               exact=args.exact)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

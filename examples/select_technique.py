@@ -22,7 +22,17 @@ ap.add_argument("--topology", choices=["edge3", "ring3", "hub4"],
                 help="full PlanSearch over an example N-site topology")
 ap.add_argument("--devices", type=int, default=8)
 ap.add_argument("--delta", type=float, default=0.1)
+ap.add_argument("--balance", choices=["even", "tflops"], default="even",
+                help="[--topology only] pipeline stage sizing: even "
+                     "(paper-faithful) or TFLOP-weighted "
+                     "(docs/topology-and-search.md)")
+ap.add_argument("--exact", action="store_true",
+                help="[--topology only] exhaustive PlanSearch "
+                     "(no pruning)")
 args = ap.parse_args()
+if (args.balance != "even" or args.exact) and not args.topology:
+    ap.error("--balance/--exact only apply to the --topology PlanSearch "
+             "modes (Algorithm 1 probes the paper's fixed plan set)")
 
 if args.live:
     os.environ["XLA_FLAGS"] = (
@@ -79,7 +89,8 @@ def topology_search():
     topo = EXAMPLE_TOPOLOGIES[args.topology]()
     wl = paper_workload(get_config(args.model))
     print(topo.describe())
-    search = PlanSearch(wl, topo)
+    search = PlanSearch(wl, topo, stage_balance=args.balance,
+                        prune=not args.exact)
     ranked = search.search()
     print(f"\nPlanSearch over {len(ranked)} candidates ({args.model}):")
     for s in ranked[:8]:
@@ -98,11 +109,15 @@ def topology_search():
           f"(probe set restricted to the paper's)")
     plan_name = "shard_zero" if best.candidate.technique == "shard" \
         else best.candidate.technique
+    placement = search.placement(best.candidate)
     dp, tp, zdeg = placement_degrees(
-        get_plan(plan_name), topo, best.candidate.placement(),
-        wl.global_batch)
+        get_plan(plan_name), topo, placement, wl.global_batch)
     print(f"mesh degrees : dp={dp} tp={tp} zero={zdeg} over sites "
           f"{best.candidate.sites}")
+    if placement.stage_layers is not None:
+        print(f"stage layers : {placement.stage_layers} "
+              f"(TFLOP-weighted; even would be "
+              f"{wl.cfg.n_layers // placement.n_stages} per stage)")
 
 
 def live():

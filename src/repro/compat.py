@@ -41,9 +41,15 @@ _HAS_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
 # Native modern shard_map implies a partitioner that supports the
 # partial-manual (ManualSubgroup) SPMD pattern; the 0.4.x experimental
 # shard_map accepts `auto=` but its XLA CHECK-fails partitioning the
-# surrounding auto region (pipeshard pipeline, per-shard MoE dispatch).
-# Paths needing partial-auto gate on this flag (evaluated before the
-# shims below are installed, so it reflects the real jax).
+# surrounding auto region (pipeshard pipeline, per-shard MoE dispatch):
+# on jax 0.4.37 the process aborts with
+#   F xla/hlo/utils/hlo_sharding_util.cc:2750]
+#   Check failed: sharding.IsManualSubgroup()
+# — a fatal C++ CHECK, not a Python exception, so it cannot be caught
+# and turned into a skip at runtime.  Paths needing partial-auto gate on
+# this flag instead (evaluated before the shims below are installed, so
+# it reflects the real jax).  Full triage: docs/architecture.md
+# §"Slow tests and the jax 0.4.x gate".
 NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
 
 

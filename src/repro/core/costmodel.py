@@ -141,6 +141,64 @@ LOG2E = 1.4426950408889634
 
 TECHNIQUES = ("data", "zero2", "shard", "pipeshard")
 
+# Pipeline stage-size policies: "even" reproduces the paper's measured
+# Alpa behavior (equal meshes -> equal layer slices, what Table II and
+# Algorithm 1 were run with); "tflops" weights stage sizes by per-site
+# compute so a T4 site gets fewer layers than an A30 site (ROADMAP
+# "heterogeneous stage balancing", docs/topology-and-search.md).
+STAGE_BALANCE_MODES = ("even", "tflops")
+
+
+def stage_compute_tflops(topo: Topology, order: Sequence[int]
+                         ) -> List[float]:
+    """Achievable TFLOP/s of each pipeline stage's site, in stage order.
+
+    Args:
+        topo: the topology the stages are placed on.
+        order: site index per stage (a ``Placement.stage_order`` or plain
+            site subset).
+
+    Returns:
+        One entry per stage: the site's GPU count times its slowest GPU's
+        achievable TFLOP/s (meshes are paced by their slowest member).
+    """
+    return [min(GPUS[g].tflops for g in topo.sites[i].gpus)
+            * len(topo.sites[i].gpus) for i in order]
+
+
+def balanced_stage_layers(n_layers: int, stage_tflops: Sequence[float]
+                          ) -> Tuple[int, ...]:
+    """Split ``n_layers`` across stages proportionally to stage TFLOP/s.
+
+    Largest-remainder allocation with one layer reserved per stage, so the
+    result always sums to ``n_layers``, every stage gets >= 1 layer, and a
+    faster stage never gets fewer layers than a slower one.  Homogeneous
+    stages degrade to the even split.
+
+    Args:
+        n_layers: total layers to distribute (>= number of stages).
+        stage_tflops: per-stage achievable TFLOP/s (all > 0).
+
+    Returns:
+        Per-stage layer counts, in stage order.
+    """
+    k = len(stage_tflops)
+    if k < 1:
+        raise ValueError("need at least one stage")
+    if n_layers < k:
+        raise ValueError(f"cannot fill {k} stages with {n_layers} layers")
+    if min(stage_tflops) <= 0:
+        raise ValueError(f"non-positive stage TFLOP/s in {stage_tflops}")
+    total = float(sum(stage_tflops))
+    spare = n_layers - k
+    quotas = [spare * t / total for t in stage_tflops]
+    layers = [1 + int(q) for q in quotas]
+    # leftover goes to the largest fractional parts (ties: earliest stage)
+    order = sorted(range(k), key=lambda i: (-(quotas[i] - int(quotas[i])), i))
+    for i in order[:n_layers - sum(layers)]:
+        layers[i] += 1
+    return tuple(layers)
+
 
 @dataclass
 class StepCost:
@@ -180,7 +238,9 @@ def _collective_time(bytes_total: float, n: int, topo: Topology,
 
 def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                         vms: Optional[Sequence[int]] = None, *,
-                        stage_order: Optional[Sequence[int]] = None
+                        stage_order: Optional[Sequence[int]] = None,
+                        stage_balance: str = "even",
+                        stage_layers: Optional[Sequence[int]] = None
                         ) -> StepCost:
     """Model one optimizer step of `technique` (paper §III) on a cluster
     or N-site topology.
@@ -191,6 +251,12 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
     stage_order (Pipeshard only): explicit stage→site assignment — the
     pipeline crosses exactly the links between consecutive sites in this
     order, so on an asymmetric topology the order matters.
+    stage_balance (Pipeshard only): "even" splits layers equally across
+    stages (the paper's measured Alpa behavior — the default, so every
+    paper artifact keeps its numbers); "tflops" weights stage sizes by
+    per-site compute via ``balanced_stage_layers``.
+    stage_layers (Pipeshard only): explicit per-stage layer counts,
+    overriding ``stage_balance``; must sum to the model's layer count.
     """
     topo = as_topology(cluster)
     sel = topo.select(vms)
@@ -236,11 +302,31 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                 f"stage_order {order} is not a permutation of sites {sel}")
         n_stages = max(len(order), 1)
         stage_sites = [topo.sites[i] for i in order]
-        stage_flops = flops / n_stages
-        mesh_tflops = [min(GPUS[g].tflops for g in s.gpus) * 1e12
-                       * len(s.gpus) for s in stage_sites]
+        stage_tf = stage_compute_tflops(topo, order)
+        mesh_tflops = [t * 1e12 for t in stage_tf]
         bubble = (n_stages - 1) / wl.microbatches
-        compute = max(stage_flops / t for t in mesh_tflops) * (1 + bubble)
+        if stage_layers is not None:
+            split: Optional[Tuple[int, ...]] = tuple(stage_layers)
+            if len(split) != n_stages or min(split, default=0) < 1 \
+                    or sum(split) != wl.cfg.n_layers:
+                raise ValueError(
+                    f"stage_layers {split} does not partition "
+                    f"{wl.cfg.n_layers} layers into {n_stages} stages")
+        elif stage_balance == "tflops":
+            split = balanced_stage_layers(wl.cfg.n_layers, stage_tf)
+        elif stage_balance == "even":
+            split = None        # legacy continuous flops/n_stages split
+        else:
+            raise ValueError(f"stage_balance {stage_balance!r} not in "
+                             f"{STAGE_BALANCE_MODES}")
+        if split is None:
+            compute = max(flops / n_stages / t for t in mesh_tflops) \
+                * (1 + bubble)
+        else:
+            # the slowest (layers-weighted) stage paces every tick
+            compute = max(li / wl.cfg.n_layers * flops / t
+                          for li, t in zip(split, mesh_tflops)) \
+                * (1 + bubble)
         act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
         # each microbatch crosses each stage boundary twice (fwd + bwd),
         # paying that boundary's own link (N=2: the single WAN link)
@@ -249,10 +335,15 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                  / (topo.link(a, b).effective_gbps * 1e9)
                  + wl.microbatches * topo.link(a, b).latency_s)
             for a, b in zip(order[:-1], order[1:]))
-        intra_comm = max(
-            4 * wl.cfg.n_layers / n_stages * _allreduce_time(
-                act_bytes, len(s.gpus), s.intra)
-            for s in stage_sites)
+        if split is None:       # keep the legacy expression bit-for-bit
+            intra_comm = max(
+                4 * wl.cfg.n_layers / n_stages * _allreduce_time(
+                    act_bytes, len(s.gpus), s.intra)
+                for s in stage_sites)
+        else:
+            intra_comm = max(
+                4 * li * _allreduce_time(act_bytes, len(s.gpus), s.intra)
+                for li, s in zip(split, stage_sites))
         comm = p2p + intra_comm
         # in-flight microbatches make Pipeshard the memory-hungry plan
         # (paper §IV-G observation 3)
@@ -264,12 +355,13 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
 
 def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
                   vms: Optional[Sequence[int]] = None, *,
-                  stage_order: Optional[Sequence[int]] = None
-                  ) -> Optional[float]:
+                  stage_order: Optional[Sequence[int]] = None,
+                  stage_balance: str = "even") -> Optional[float]:
     """Minutes per `epochs` epochs; None when the technique OOMs (the
     paper's '×' bars)."""
     c = technique_step_cost(technique, wl, cluster, vms,
-                            stage_order=stage_order)
+                            stage_order=stage_order,
+                            stage_balance=stage_balance)
     if not c.fits:
         return None
     return c.total_s * wl.steps_per_epoch * wl.epochs / 60.0
@@ -277,10 +369,11 @@ def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
 
 def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                vms: Optional[Sequence[int]] = None, *,
-               stage_order: Optional[Sequence[int]] = None
-               ) -> Optional[float]:
+               stage_order: Optional[Sequence[int]] = None,
+               stage_balance: str = "even") -> Optional[float]:
     c = technique_step_cost(technique, wl, cluster, vms,
-                            stage_order=stage_order)
+                            stage_order=stage_order,
+                            stage_balance=stage_balance)
     if not c.fits:
         return None
     return wl.flops_per_step / c.total_s / 1e12

@@ -30,7 +30,7 @@ from repro.core.plans import Plan, STAGE_AXIS
 
 
 def pipeline_mesh(devices_mesh: Mesh, n_stages: int,
-                  stage_order=None) -> Mesh:
+                  stage_order=None, stage_layers=None) -> Mesh:
     """Reshape a (pod?, data, model) mesh into (stage, data, model).
 
     The stage axis absorbs the pod axis first (inter-stage point-to-point is
@@ -43,7 +43,22 @@ def pipeline_mesh(devices_mesh: Mesh, n_stages: int,
     assignment from the plan search — stage k runs on pod block
     ``stage_order[k]``, so the pipeline crosses the topology's links in
     the order the search priced, not in raw site numbering.
+
+    ``stage_layers``: per-stage layer counts from the TFLOP-weighted
+    balancer (``core.plans.Placement.stage_layers``).  The device mesh
+    itself does not depend on how layers are split, so this only
+    validates the split's shape (one positive entry per stage); the
+    split is realized by ``make_pipeline_loss``/``validate_stages``.
     """
+    if stage_layers is not None:
+        layers = tuple(stage_layers)
+        if len(layers) != n_stages:
+            raise ValueError(
+                f"stage_layers {layers} has {len(layers)} entries for "
+                f"n_stages={n_stages}")
+        if any(l < 1 for l in layers):
+            raise ValueError(f"every stage needs >= 1 layer, "
+                             f"got {layers}")
     names = devices_mesh.axis_names
     shape = dict(zip(names, devices_mesh.devices.shape))
     pod = shape.get("pod", 1)
@@ -76,8 +91,34 @@ def stack_length(cfg, stack) -> int:
     return leaf.shape[0]
 
 
-def validate_stages(cfg, stack, n_stages: int) -> None:
+def validate_stages(cfg, stack, n_stages: int, stage_layers=None) -> None:
+    """Check the layer stack can be cut into ``n_stages`` pipeline slices.
+
+    Args:
+        cfg: model config (names the stack in error messages).
+        stack: the stacked ``[L, ...]`` layer params (groups for hybrid).
+        n_stages: number of pipeline stages.
+        stage_layers: optional per-stage layer counts (a TFLOP-weighted
+            split from ``core.costmodel.balanced_stage_layers``).  Must
+            partition the stack; an *uneven* split is additionally
+            rejected here because the shard_map stack sharding realizes
+            equal blocks only (docs/topology-and-search.md §Balancing).
+    """
     L = stack_length(cfg, stack)
+    if stage_layers is not None:
+        layers = tuple(stage_layers)
+        if len(layers) != n_stages or sum(layers) != L \
+                or any(l < 1 for l in layers):
+            raise ValueError(
+                f"{cfg.name}: stage_layers {layers} does not partition the "
+                f"{L}-entry stack into {n_stages} stages")
+        if len(set(layers)) != 1:
+            raise NotImplementedError(
+                f"{cfg.name}: uneven stage_layers {layers} — the GPipe "
+                f"runtime shards the stack in equal blocks per stage; "
+                f"TFLOP-weighted splits are priced analytically "
+                f"(core/costmodel.py) but not yet realized at runtime "
+                f"(docs/topology-and-search.md §Balancing)")
     if L % n_stages != 0:
         raise ValueError(
             f"{cfg.name}: stack length {L} (groups for hybrid) not divisible "
@@ -85,9 +126,14 @@ def validate_stages(cfg, stack, n_stages: int) -> None:
 
 
 def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
-                       remat: bool = True, carrier_dtype=jnp.float32):
+                       remat: bool = True, carrier_dtype=jnp.float32,
+                       stage_layers=None):
     """Build loss(params, batch) running the stacked layers as a GPipe
     pipeline over the mesh's ``stage`` axis.
+
+    ``stage_layers``: optional per-stage layer counts from a
+    ``core.plans.Placement`` — validated against the stack (see
+    ``validate_stages``; uneven splits are analytic-only today).
 
     ``carrier_dtype``: dtype of the inter-stage activation carriers (scan
     state / ppermute payload / bank buffer).  Defaults to fp32 because the
@@ -113,7 +159,7 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
         enc_mb = jnp.zeros((), x.dtype) if enc_out is None else \
             enc_out.reshape(n_micro, mb, *enc_out.shape[1:])
         stack = params["layers"]
-        validate_stages(cfg, stack, n_stages)
+        validate_stages(cfg, stack, n_stages, stage_layers)
         shared = params.get("shared")
         if shared is None:
             shared = jnp.zeros(())

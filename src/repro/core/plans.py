@@ -38,6 +38,18 @@ STAGE_AXIS = "stage"
 
 @dataclass(frozen=True)
 class Plan:
+    """A hardware-independent execution plan: how params, optimizer
+    state, and the batch are sharded over a mesh, keyed by the paper's
+    technique names (see ``PLANS`` / ``get_plan``).
+
+    Attributes:
+        name: plan name (``PLANS`` key).
+        shards_weights: tensor parallelism over the ``model`` axis.
+        zero_sharding: grads/opt-state sharded over the data axes.
+        pipeline: stage axis + microbatch pipelining (Pipeshard).
+        fsdp: params ALSO sharded over the data axes (ZeRO-3; beyond
+            the paper).
+    """
     name: str
     shards_weights: bool        # tensor parallelism over `model`
     zero_sharding: bool         # grads/opt-state sharded over data axes
@@ -179,13 +191,27 @@ class Plan:
 
 @dataclass(frozen=True)
 class Placement:
-    """Where a plan runs on an N-site topology (core/topology.py): the
-    participating site subset and, for pipeline plans, the stage→site
-    assignment produced by ``core.search.PlanSearch`` — stages follow
-    ``stage_order``, not the raw site numbering, so an asymmetric-link
-    topology can be crossed in its cheapest order (DESIGN.md §5)."""
+    """Where a plan runs on an N-site topology (core/topology.py).
+
+    Produced by ``core.search.PlanSearch`` and consumed by the launch
+    layer (``launch.mesh.make_topology_mesh`` +
+    ``core.pipeline.pipeline_mesh``); see docs/topology-and-search.md.
+
+    Attributes:
+        sites: the participating site subset (topology site indices).
+        stage_order: for pipeline plans, the stage→site assignment —
+            stages follow this order, not the raw site numbering, so an
+            asymmetric-link topology can be crossed in its cheapest order
+            (DESIGN.md §5).  ``None`` means stages follow ``sites`` order
+            (non-pipeline plans always leave it ``None``).
+        stage_layers: for pipeline plans, per-stage layer counts from the
+            TFLOP-weighted balancer (``core.costmodel
+            .balanced_stage_layers``), in stage order.  ``None`` means the
+            even split.
+    """
     sites: Tuple[int, ...]
     stage_order: Optional[Tuple[int, ...]] = None
+    stage_layers: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.stage_order is not None and \
@@ -193,14 +219,29 @@ class Placement:
             raise ValueError(
                 f"stage_order {self.stage_order} is not a permutation "
                 f"of sites {self.sites}")
+        if self.stage_layers is not None:
+            if len(self.stage_layers) != self.n_stages:
+                raise ValueError(
+                    f"stage_layers {self.stage_layers} has "
+                    f"{len(self.stage_layers)} entries for "
+                    f"{self.n_stages} stages")
+            if any(l < 1 for l in self.stage_layers):
+                raise ValueError(f"every stage needs >= 1 layer, got "
+                                 f"{self.stage_layers}")
 
     @property
     def n_stages(self) -> int:
+        """Number of pipeline stages (one per participating site)."""
         return len(self.stage_order or self.sites)
 
     def pod_permutation(self) -> Tuple[int, ...]:
         """Order of the mesh's pod blocks (one per site, in ``sites``
-        order) realizing the stage order — what pipeline_mesh consumes."""
+        order) realizing the stage order — what pipeline_mesh consumes.
+
+        Returns:
+            Tuple ``p`` with ``p[k]`` = index into ``sites`` of the site
+            that runs stage ``k``.
+        """
         if self.stage_order is None:
             return tuple(range(len(self.sites)))
         pos = {s: k for k, s in enumerate(self.sites)}
@@ -229,6 +270,18 @@ PLANS: Dict[str, Plan] = {
 
 
 def get_plan(name: str) -> Plan:
+    """Look up an execution plan by technique name.
+
+    Args:
+        name: a ``PLANS`` key (``data``, ``zero2``, ``shard``,
+            ``shard_zero``, ``pipeshard``, ``fsdp``).
+
+    Returns:
+        The immutable ``Plan``.
+
+    Raises:
+        KeyError: unknown plan name (message lists the options).
+    """
     try:
         return PLANS[name]
     except KeyError:

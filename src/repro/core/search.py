@@ -1,14 +1,22 @@
-"""General plan search over an N-site topology (DESIGN.md §5).
+"""General plan search over an N-site topology (DESIGN.md §5,
+docs/topology-and-search.md).
 
 ``PlanSearch`` enumerates (technique × site-subset × stage-assignment)
 candidates on a ``core.topology.Topology`` and prices each with the
 cost model — the general machine behind the paper's Algorithm 1:
 
-  * ``search()``/``best()`` rank the *full* candidate space: every
-    non-empty site subset for every technique, and for Pipeshard every
-    stage→site order (paths, deduplicated up to reversal).  This is what
-    the two-VM API could not express — e.g. "Data over the two nearby
-    sites of a three-site ring, ignoring the far one".
+  * ``search()``/``best()`` rank the candidate space: every non-empty
+    site subset for every technique, and for Pipeshard every stage→site
+    order (paths, deduplicated up to reversal).  This is what the two-VM
+    API could not express — e.g. "Data over the two nearby sites of a
+    three-site ring, ignoring the far one".
+  * by default the space is *pruned* — dominated site subsets are
+    eliminated for the collective techniques and pipeline stage orders
+    are explored with a beam over boundary-link costs — which keeps the
+    search interactive up to N≈8 sites.  ``prune=False`` is the
+    exactness escape hatch: it restores the exhaustive enumeration.
+    Pruning is lossless for the best plan (and property-tested equal to
+    exhaustive search on small N, tests/test_search.py).
   * ``select()`` runs the generalized Algorithm 1 (paper §IV-H) over the
     restricted probe set the paper defines — Pipeshard on everything,
     Data/Shard per single site, ZeRO2-on-everything fallback — with the
@@ -18,7 +26,9 @@ cost model — the general machine behind the paper's Algorithm 1:
 
 Probing is pluggable exactly like the selector's: the default evaluator
 prices candidates analytically, while a ``probe_fn`` (technique, sites)
-hook lets live ε-epoch training measurements drive the same search.
+hook lets live ε-epoch training measurements drive the same search (with
+pruning disabled — structural dominance arguments only hold for the
+analytic cost model, not for live measurements).
 """
 from __future__ import annotations
 
@@ -28,9 +38,11 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
 from repro.core.costmodel import (ClusterLike, TECHNIQUES, Workload,
-                                  as_topology, avg_tflops)
+                                  as_topology, avg_tflops,
+                                  balanced_stage_layers,
+                                  stage_compute_tflops)
 from repro.core.plans import Placement
-from repro.core.topology import Topology
+from repro.core.topology import Link, Topology
 
 ProbeFn = Callable[[str, Optional[List[int]]], Optional[float]]
 
@@ -41,17 +53,26 @@ ProbeFn = Callable[[str, Optional[List[int]]], Optional[float]]
 
 @dataclass(frozen=True)
 class Candidate:
-    """One point of the search space: a technique placed on a site subset,
-    plus (Pipeshard only) the stage→site order."""
+    """One point of the search space.
+
+    Attributes:
+        technique: one of ``core.costmodel.TECHNIQUES``.
+        sites: the site subset the technique runs on.
+        stage_order: Pipeshard only — the stage→site order the pipeline
+            crosses the topology in.
+    """
     technique: str
     sites: Tuple[int, ...]
     stage_order: Optional[Tuple[int, ...]] = None
 
     def placement(self) -> Placement:
+        """The bare ``core.plans.Placement`` (no stage balancing; use
+        ``PlanSearch.placement`` for TFLOP-weighted stage layers)."""
         return Placement(self.sites, self.stage_order)
 
     @property
     def key(self) -> str:
+        """Human-readable id, e.g. ``pipeshard@V1+V3|V3>V1``."""
         s = "+".join(f"V{i + 1}" for i in self.sites)
         if self.stage_order and self.stage_order != self.sites:
             s += "|" + ">".join(f"V{i + 1}" for i in self.stage_order)
@@ -60,6 +81,12 @@ class Candidate:
 
 @dataclass(frozen=True)
 class Scored:
+    """A candidate plus its measured/modelled performance.
+
+    Attributes:
+        candidate: the scored candidate.
+        tflops: average TFLOP/s; ``None`` on OOM / probe failure.
+    """
     candidate: Candidate
     tflops: Optional[float]          # None => OOM / probe failure
 
@@ -69,19 +96,74 @@ class Scored:
 
 
 def stage_orders(sites: Sequence[int],
-                 max_orders: int = 24) -> Iterator[Tuple[int, ...]]:
-    """Pipeline stage orders over `sites`: all site orderings up to
-    reversal (a pipeline crossed backwards pays the same links), capped —
-    beyond ~5 sites an exhaustive path enumeration stops paying for
-    itself and the first `max_orders` lexicographic paths stand in."""
+                 max_orders: Optional[int] = 24, *,
+                 dedupe_reversals: bool = True
+                 ) -> Iterator[Tuple[int, ...]]:
+    """Exhaustive pipeline stage orders over ``sites``.
+
+    Args:
+        sites: the site subset the pipeline spans.
+        max_orders: optional cap on yielded orders (None = unbounded —
+            required for a true exactness oracle); a cap truncates to
+            the first lexicographic paths, so prefer
+            ``PlanSearch.beam_stage_orders``, which caps by link cost
+            rather than lexicographic accident.
+        dedupe_reversals: keep only the direction with
+            ``perm[0] < perm[-1]`` of each reversal pair — correct
+            whenever the cost model prices both directions identically
+            (links are symmetric and even splits are
+            direction-invariant).  TFLOP-weighted balancing breaks the
+            symmetry in rare exact-tie cases, so searches running with
+            ``stage_balance="tflops"`` pass False.
+
+    Yields:
+        Site orderings.
+    """
     seen = 0
     for perm in itertools.permutations(sites):
-        if perm[0] > perm[-1]:           # canonical: keep one direction
-            continue
+        if dedupe_reversals and perm[0] > perm[-1]:
+            continue                     # canonical: keep one direction
         yield perm
         seen += 1
-        if seen >= max_orders:
+        if max_orders is not None and seen >= max_orders:
             return
+
+
+# --------------------------------------------------------------------- #
+# subset dominance (pruning, collective techniques)
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class _SubsetStats:
+    """What the collective cost model can see of a site subset: the GPU
+    pool size, the pace-setting GPU, the memory floor, and the
+    spanning-link extremes.  For subsets with equal pool sizes these
+    numbers bound the step cost of every collective technique
+    (data/zero2/shard) from both sides."""
+    subset: Tuple[int, ...]
+    n_gpus: int
+    min_tflops: float
+    min_mem: float
+    max_lat: float
+    min_eff: float
+    span: Tuple[Link, ...]
+
+
+def _dominates(a: _SubsetStats, b: _SubsetStats) -> bool:
+    """True when subset ``a`` is provably at least as good as ``b`` for
+    every collective technique: the pools are the same size (collective
+    time and per-GPU memory are not monotone in pool size), ``a``'s
+    slowest GPU and smallest memory are no worse, and ``b``'s spanning
+    set contains a link at least as bad as ``a``'s worst-case
+    (max-latency, min-throughput) corner — so ``b``'s collective time is
+    >= ``a``'s for any message size, and anything that fits on ``b``
+    fits on ``a``."""
+    if a.n_gpus != b.n_gpus:
+        return False
+    if a.min_tflops < b.min_tflops or a.min_mem < b.min_mem:
+        return False
+    return any(l.latency_s >= a.max_lat and l.effective_gbps <= a.min_eff
+               for l in b.span)
 
 
 # --------------------------------------------------------------------- #
@@ -90,21 +172,57 @@ def stage_orders(sites: Sequence[int],
 
 @dataclass
 class PlanSearch:
-    """Enumerate + price candidate plans for a workload on a topology."""
+    """Enumerate + price candidate plans for a workload on a topology.
+
+    Attributes:
+        wl: the workload being placed.
+        topology: the N-site topology (or use ``for_cluster`` to lift a
+            legacy two-VM ``Cluster``).
+        techniques: techniques to consider (default: the paper's four).
+        max_sites: cap subset size (None = up to all N sites).
+        max_stage_orders: optional cap on stage orders per subset.  None
+            (the default) keeps ``prune=False`` a true exactness oracle
+            — every canonical order is enumerated.  When set, it bounds
+            both paths: the exhaustive enumeration truncates (no longer
+            exact!) and the beam width is clamped to it.
+        probe_fn: live prober ``(technique, sites) -> TFLOP/s`` replacing
+            the analytic evaluator; disables pruning and stage-order
+            search (live probes cannot pin a stage order).
+        prune: eliminate dominated site subsets and beam-search stage
+            orders (default).  ``prune=False`` is the exactness escape
+            hatch — exhaustive enumeration, identical results, slower
+            beyond N≈6.
+        beam_width: beam size for stage-order search; 24 keeps subsets
+            of <= 4 sites exhaustive (4!/2 = 12 canonical orders), so
+            pruning only approximates on 5+-site pipelines.
+        stage_balance: "even" (paper-faithful equal layer slices) or
+            "tflops" (stage sizes weighted by per-site compute,
+            ``core.costmodel.balanced_stage_layers``) — applied when
+            pricing Pipeshard candidates and attached to placements.
+    """
     wl: Workload
     topology: Topology
     techniques: Tuple[str, ...] = TECHNIQUES
     max_sites: Optional[int] = None      # cap subset size (None = all N)
-    max_stage_orders: int = 24
+    max_stage_orders: Optional[int] = None
     probe_fn: Optional[ProbeFn] = None   # live prober; ignores stage_order
+    prune: bool = True
+    beam_width: int = 24
+    stage_balance: str = "even"
 
     @classmethod
     def for_cluster(cls, wl: Workload, cluster: ClusterLike,
                     **kw) -> "PlanSearch":
+        """Lift a legacy two-VM ``Cluster`` (or pass through a
+        ``Topology``) and search it."""
         return cls(wl, as_topology(cluster), **kw)
 
     # ------------------------------------------------------------- #
     def candidates(self) -> Iterator[Candidate]:
+        """The *exhaustive* candidate space (no pruning): every
+        technique on every non-empty site subset, every canonical stage
+        order for Pipeshard.  ``search(prune=True)`` consumes the pruned
+        twin ``pruned_candidates`` instead."""
         n = self.topology.n_sites
         limit = n if self.max_sites is None else min(self.max_sites, n)
         for k in range(1, limit + 1):
@@ -116,26 +234,168 @@ class PlanSearch:
                         # live probes can't pin a stage order (and each is
                         # an epsilon-epoch training run): one per subset
                         orders = [tuple(subset)] if self.probe_fn \
-                            else stage_orders(subset, self.max_stage_orders)
+                            else stage_orders(
+                                subset, self.max_stage_orders,
+                                dedupe_reversals=self._reversible())
                         for order in orders:
                             yield Candidate(tech, subset, order)
                     else:
                         yield Candidate(tech, subset)
+
+    def pruned_candidates(self) -> Iterator[Candidate]:
+        """The pruned candidate space: per subset size, collective
+        techniques skip dominated subsets (``_dominates`` — lossless for
+        the best plan); Pipeshard explores stage orders via
+        ``beam_stage_orders`` instead of exhaustively."""
+        n = self.topology.n_sites
+        limit = n if self.max_sites is None else min(self.max_sites, n)
+        for k in range(1, limit + 1):
+            subsets = list(itertools.combinations(range(n), k))
+            keep = self._prune_dominated(subsets)
+            for subset in subsets:
+                for tech in self.techniques:
+                    if tech == "pipeshard":
+                        if k == 1:
+                            continue
+                        for order in self.beam_stage_orders(subset):
+                            yield Candidate(tech, subset, order)
+                    elif subset in keep:
+                        yield Candidate(tech, subset)
+
+    def _reversible(self) -> bool:
+        """Whether a stage order and its reversal are guaranteed the same
+        price, so one canonical direction suffices.  True for even splits
+        (links are symmetric); TFLOP-weighted splits can differ under
+        exact quota ties (the tie-break is by stage position), so both
+        directions must be priced."""
+        return self.stage_balance != "tflops"
+
+    def _subset_stats(self, subset: Tuple[int, ...]) -> _SubsetStats:
+        topo = self.topology
+        gpus = topo.all_gpus(subset)
+        span = tuple(topo.spanning_links(subset)) if len(subset) > 1 \
+            else (topo.sites[subset[0]].intra,)
+        return _SubsetStats(
+            subset=subset,
+            n_gpus=len(gpus),
+            min_tflops=min(g.tflops for g in gpus),
+            min_mem=min(g.mem_gb for g in gpus),
+            max_lat=max(l.latency_s for l in span),
+            min_eff=min(l.effective_gbps for l in span),
+            span=span)
+
+    def _prune_dominated(self, subsets: Sequence[Tuple[int, ...]]
+                         ) -> set:
+        """Subsets (all the same size) worth pricing for the collective
+        techniques: drop every subset strictly dominated by another, and
+        keep only the lexicographically-first of exact-tie groups."""
+        stats = [self._subset_stats(s) for s in subsets]
+        keep = set()
+        for b in stats:
+            dominated = any(
+                _dominates(a, b) and
+                (not _dominates(b, a) or a.subset < b.subset)
+                for a in stats if a.subset != b.subset)
+            if not dominated:
+                keep.add(b.subset)
+        return keep
+
+    def beam_stage_orders(self, subset: Sequence[int],
+                          beam_width: Optional[int] = None
+                          ) -> List[Tuple[int, ...]]:
+        """Stage orders for a Pipeshard subset via beam search.
+
+        Grows stage→site paths one site at a time, scoring partials by
+        the accumulated boundary cost (the cost model's own p2p term,
+        which is additive over crossed links while every other Pipeshard
+        term is order-invariant up to reversal ties), and keeps the
+        ``beam_width`` cheapest at each depth.  When the subset's full
+        path count fits the beam this is exhaustive — with the default
+        width, subsets of <= 4 sites always are.
+
+        Args:
+            subset: the site subset the pipeline spans.
+            beam_width: overrides ``self.beam_width``.
+
+        Returns:
+            Orders cheapest-first; reversal pairs are deduplicated to
+            the canonical direction except under ``stage_balance=
+            "tflops"``, where both directions are kept (see
+            ``stage_orders``).
+        """
+        sites = tuple(subset)
+        if len(sites) <= 2:
+            if len(sites) == 2 and not self._reversible():
+                return [sites, sites[::-1]]
+            return [sites]
+        w = self.beam_width if beam_width is None else beam_width
+        if self.max_stage_orders is not None:
+            w = min(w, self.max_stage_orders)
+        act = self.wl.tokens_per_step * self.wl.cfg.d_model * 2
+        micro = self.wl.microbatches
+
+        def edge_cost(a: int, b: int) -> float:
+            l = self.topology.link(a, b)
+            return 2 * (act / (l.effective_gbps * 1e9)
+                        + micro * l.latency_s)
+
+        frontier: List[Tuple[float, Tuple[int, ...]]] = \
+            [(0.0, (s,)) for s in sites]
+        for _ in range(len(sites) - 1):
+            grown = [(cost + edge_cost(path[-1], s), path + (s,))
+                     for cost, path in frontier
+                     for s in sites if s not in path]
+            grown.sort()
+            frontier = grown[:w]
+        dedupe = self._reversible()
+        out: Dict[Tuple[int, ...], float] = {}
+        for cost, path in frontier:
+            canon = path if not dedupe or path[0] < path[-1] \
+                else path[::-1]
+            out.setdefault(canon, cost)
+        return sorted(out, key=lambda p: (out[p], p))
 
     def evaluate(self, cand: Candidate) -> Optional[float]:
         """Avg TFLOP/s of a candidate; None/0 on infeasibility (OOM)."""
         if self.probe_fn is not None:
             return self.probe_fn(cand.technique, list(cand.sites))
         return avg_tflops(cand.technique, self.wl, self.topology,
-                          cand.sites, stage_order=cand.stage_order)
+                          cand.sites, stage_order=cand.stage_order,
+                          stage_balance=self.stage_balance)
 
-    def search(self) -> List[Scored]:
-        """All candidates, best first (infeasible ones at the tail)."""
-        scored = [Scored(c, self.evaluate(c)) for c in self.candidates()]
+    def placement(self, cand: Candidate) -> Placement:
+        """The ``core.plans.Placement`` realizing a candidate, with
+        TFLOP-weighted ``stage_layers`` attached when this search runs
+        with ``stage_balance="tflops"`` on a Pipeshard candidate."""
+        if cand.technique != "pipeshard" or self.stage_balance != "tflops":
+            return cand.placement()
+        order = cand.stage_order or cand.sites
+        layers = balanced_stage_layers(
+            self.wl.cfg.n_layers,
+            stage_compute_tflops(self.topology, order))
+        return Placement(cand.sites, cand.stage_order, layers)
+
+    def search(self, *, prune: Optional[bool] = None) -> List[Scored]:
+        """All candidates, best first (infeasible ones at the tail).
+
+        Args:
+            prune: override the instance's ``prune`` flag for this call
+                (``False`` = exhaustive exactness escape hatch).  Live
+                ``probe_fn`` searches are never pruned.
+
+        Returns:
+            ``Scored`` candidates sorted by descending TFLOP/s.
+        """
+        do_prune = self.prune if prune is None else prune
+        if self.probe_fn is not None:
+            do_prune = False
+        cands = self.pruned_candidates() if do_prune else self.candidates()
+        scored = [Scored(c, self.evaluate(c)) for c in cands]
         return sorted(scored, key=lambda s: -(s.tflops or 0.0))
 
-    def best(self) -> Optional[Scored]:
-        top = self.search()
+    def best(self, *, prune: Optional[bool] = None) -> Optional[Scored]:
+        """The best feasible candidate, or None when everything OOMs."""
+        top = self.search(prune=prune)
         return top[0] if top and top[0].feasible else None
 
     # ------------------------------------------------------------- #
@@ -149,7 +409,8 @@ class PlanSearch:
                ) -> Optional[float]:
         if self.probe_fn is not None:
             return self.probe_fn(technique, sites)
-        return avg_tflops(technique, self.wl, self.topology, sites)
+        return avg_tflops(technique, self.wl, self.topology, sites,
+                          stage_balance=self.stage_balance)
 
 
 # --------------------------------------------------------------------- #
@@ -166,6 +427,17 @@ def algorithm1_select(probe: ProbeFn, n_sites: int, *,
     best; ZeRO2-on-everything is the memory-pressure fallback.  For
     ``n_sites == 2`` the probe keys, comparisons and tie-breaks are
     exactly the original two-VM algorithm's.
+
+    Args:
+        probe: ``(technique, sites) -> TFLOP/s`` (None/0 = infeasible);
+            ``sites=None`` means all sites.
+        n_sites: number of sites the probe understands.
+        delta: the paper's δ threshold — how much better
+            Pipeshard-on-everything must be before it wins.
+
+    Returns:
+        A ``core.selector.Selection`` with the chosen technique, its
+        site list, and every probe taken.
     """
     from repro.core.selector import Selection
 

@@ -32,6 +32,14 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 @dataclass(frozen=True)
 class GPUSpec:
+    """One GPU model's achievable (not peak-marketing) capabilities.
+
+    Attributes:
+        name: short card name, a key of ``GPUS``.
+        tflops: achievable mixed-precision TFLOP/s for training GEMMs.
+        mem_gb: usable HBM/GDDR capacity.
+        mem_bw_gbps: memory bandwidth in GB/s.
+    """
     name: str
     tflops: float          # achievable mixed-precision TFLOP/s for GEMMs
     mem_gb: float
@@ -54,6 +62,14 @@ TCP_WINDOW_BYTES = 8e6   # effective socket window of NCCL-over-TCP streams
 
 @dataclass(frozen=True)
 class Link:
+    """A (intra- or inter-site) interconnect edge.
+
+    Attributes:
+        latency_s: one-way latency in seconds (the paper reports RTTs in
+            ms; builders take ``latency_ms`` and convert).
+        bandwidth_gbps: GB/s usable at zero RTT — what NCCL-over-TCP
+            achieves on the raw link, not the marketing line rate.
+    """
     latency_s: float
     bandwidth_gbps: float  # GB/s usable at zero RTT
 
@@ -73,12 +89,20 @@ PCIE = Link(5e-6, 12.0)   # default intra-site interconnect
 
 @dataclass(frozen=True)
 class Site:
-    """A co-located GPU pool — the paper's 'VM', one node of the graph."""
+    """A co-located GPU pool — the paper's 'VM', one node of the graph.
+
+    Attributes:
+        gpus: card names (keys of ``GPUS``), e.g. ``("RTX", "RTX")``;
+            possibly heterogeneous.
+        intra: the link within the site (default: PCIe).
+        name: optional display name.
+    """
     gpus: Tuple[str, ...]                 # e.g. ("RTX", "RTX")
     intra: Link = PCIE                    # link within the site (PCIe)
     name: str = ""
 
     def specs(self) -> List[GPUSpec]:
+        """The ``GPUSpec`` of every GPU in this site, in order."""
         return [GPUS[g] for g in self.gpus]
 
 
@@ -103,7 +127,18 @@ class Topology:
         return len(self.sites)
 
     def select(self, sites: Optional[Sequence[int]] = None) -> Tuple[int, ...]:
-        """Normalize a site-subset argument (None => all sites)."""
+        """Normalize a site-subset argument.
+
+        Args:
+            sites: site indices, or None for all sites.
+
+        Returns:
+            The validated tuple of site indices (order preserved).
+
+        Raises:
+            IndexError: a site index is out of range.
+            ValueError: the selection contains duplicates.
+        """
         idx = tuple(range(self.n_sites)) if sites is None else tuple(sites)
         for i in idx:
             if not 0 <= i < self.n_sites:
@@ -114,10 +149,12 @@ class Topology:
         return idx
 
     def all_gpus(self, sites: Optional[Sequence[int]] = None) -> List[GPUSpec]:
+        """Every GPU of the selected sites (None = all), in site order."""
         return [GPUS[g] for i in self.select(sites)
                 for g in self.sites[i].gpus]
 
     def direct(self, i: int, j: int) -> Optional[Link]:
+        """The direct edge between sites i and j, or None if unlinked."""
         return self.links.get(_key(i, j))
 
     def link(self, i: int, j: int) -> Link:
@@ -156,7 +193,14 @@ class Topology:
                          f"in topology {self.name!r}")
 
     def spanning_links(self, sites: Sequence[int]) -> List[Link]:
-        """Every pairwise link a collective over `sites` must cross."""
+        """Every pairwise link a collective over `sites` must cross.
+
+        Args:
+            sites: the participating site subset.
+
+        Returns:
+            One (direct or routed) ``Link`` per site pair.
+        """
         idx = self.select(sites)
         return [self.link(i, j) for i, j in itertools.combinations(idx, 2)]
 
@@ -173,6 +217,7 @@ class Topology:
 
     # ----------------------------------------------------------------- #
     def describe(self) -> str:
+        """Multi-line human-readable summary (sites, links, eff GB/s)."""
         parts = [f"{self.name}: {self.n_sites} sites"]
         for i, s in enumerate(self.sites):
             parts.append(f"  S{i} {s.name or '?'}: {'+'.join(s.gpus)}")
@@ -203,12 +248,31 @@ def _norm_links(links: Mapping[Tuple[int, int], Link]
 
 def make_topology(name: str, sites: Sequence[Site],
                   links: Mapping[Tuple[int, int], Link]) -> Topology:
+    """Build a topology from an explicit link map.
+
+    Args:
+        name: display name.
+        sites: the N sites.
+        links: ``(i, j) -> Link`` in either index order; duplicate pairs
+            with conflicting links are rejected.
+
+    Returns:
+        A ``Topology`` with links normalized to canonical ``i < j`` keys.
+    """
     return Topology(name, tuple(sites), _norm_links(links))
 
 
 def two_site(name: str, gpus1: Sequence[str], gpus2: Sequence[str],
              latency_ms: float, wan_gbps: float = 3.0) -> Topology:
-    """The paper's shape: two sites, one WAN link (Table I)."""
+    """The paper's shape: two sites, one WAN link (Table I).
+
+    Args:
+        name: display name.
+        gpus1: card names of site V1's GPUs.
+        gpus2: card names of site V2's GPUs.
+        latency_ms: WAN RTT in milliseconds.
+        wan_gbps: achievable NCCL-over-TCP bandwidth in GB/s.
+    """
     return make_topology(
         name,
         (Site(tuple(gpus1), name="V1"), Site(tuple(gpus2), name="V2")),
@@ -217,6 +281,7 @@ def two_site(name: str, gpus1: Sequence[str], gpus2: Sequence[str],
 
 def fully_connected(name: str, sites: Sequence[Site],
                     link: Link) -> Topology:
+    """N sites, every pair joined directly by the same ``link``."""
     n = len(sites)
     return make_topology(name, sites, {
         (i, j): link for i in range(n) for j in range(i + 1, n)})
@@ -224,7 +289,14 @@ def fully_connected(name: str, sites: Sequence[Site],
 
 def ring(name: str, sites: Sequence[Site],
          links: Sequence[Link]) -> Topology:
-    """N sites on a cycle; ``links[k]`` joins site k and (k+1) % N."""
+    """N sites on a cycle; ``links[k]`` joins site k and (k+1) % N.
+
+    Args:
+        name: display name.
+        sites: >= 3 sites (two sites have a single edge — use
+            ``two_site``/``line``).
+        links: exactly N links, one per cycle edge.
+    """
     n = len(sites)
     if n < 3:
         raise ValueError(f"a ring needs >= 3 sites (got {n}); two sites "
@@ -238,6 +310,8 @@ def ring(name: str, sites: Sequence[Site],
 
 def line(name: str, sites: Sequence[Site],
          links: Sequence[Link]) -> Topology:
+    """N sites on a path; ``links[k]`` joins site k and k+1.  Non-adjacent
+    pairs are priced over the (unique) routed path."""
     n = len(sites)
     if len(links) != n - 1:
         raise ValueError(f"line of {n} sites needs {n - 1} links")
@@ -248,7 +322,14 @@ def line(name: str, sites: Sequence[Site],
 def hub(name: str, hub_site: Site, leaves: Sequence[Site],
         spoke: Link) -> Topology:
     """Star topology: site 0 is the hub, leaf↔leaf traffic relays
-    through it (two spoke hops)."""
+    through it (two spoke hops).
+
+    Args:
+        name: display name.
+        hub_site: the central site (index 0 of the result).
+        leaves: the spoke sites (indices 1..N-1).
+        spoke: the hub↔leaf link, shared by every spoke.
+    """
     sites = (hub_site,) + tuple(leaves)
     return make_topology(name, sites, {
         (0, k): spoke for k in range(1, len(sites))})

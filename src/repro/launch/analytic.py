@@ -119,7 +119,10 @@ def placement_degrees(plan, topo, placement, global_batch: int, *,
     device-free twin of ``plan_degrees`` for ``core.search`` candidates:
     degrees come from the (pod, data, model) shape the placement's sites
     map to (launch/mesh.topology_mesh_spec), so the analytic roofline can
-    price a searched plan before any mesh exists."""
+    price a searched plan before any mesh exists.  The placement's
+    ``stage_order``/``stage_layers`` do not change the degrees (they
+    permute pod blocks and re-slice the layer stack, not the axis
+    sizes), so any ``core.plans.Placement`` is accepted as-is."""
     from repro.launch.mesh import topology_mesh_spec
     (pod, data, m), _ = topology_mesh_spec(topo, placement.sites,
                                            model=model)

@@ -79,6 +79,34 @@ def make_topology_mesh(topo: Topology,
     return _compat_make_mesh(shape, axes, devices=devs[:n])
 
 
+def placement_pipeline_mesh(topo: Topology, placement, *,
+                            model: int = 1, devices=None) -> Mesh:
+    """Realize a searched pipeline ``core.plans.Placement`` as a staged
+    mesh: one pod block per placed site, pod blocks permuted into the
+    placement's stage order, and the TFLOP-weighted ``stage_layers``
+    (when present) validated against the stage count — the full
+    Placement → ``make_topology_mesh`` → ``pipeline_mesh`` wiring of
+    DESIGN.md §5 in one call.
+
+    Args:
+        topo: the N-site topology the placement was searched on.
+        placement: a ``core.plans.Placement`` (site subset, stage order,
+            optional per-stage layer counts).
+        model: tensor-parallel degree inside each site.
+        devices: explicit device list (default: all local devices).
+
+    Returns:
+        A ``(stage, data, model)`` mesh with stage k on the devices of
+        the site the search assigned to stage k.
+    """
+    from repro.core.pipeline import pipeline_mesh
+    base = make_topology_mesh(topo, placement.sites, model=model,
+                              devices=devices)
+    return pipeline_mesh(base, placement.n_stages,
+                         stage_order=placement.pod_permutation(),
+                         stage_layers=placement.stage_layers)
+
+
 # TPU v5e roofline constants (per chip) — see EXPERIMENTS.md §Roofline.
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # bytes/s

@@ -13,7 +13,7 @@ from repro.core.costmodel import (PAPER_CLUSTERS, fabric_cluster,
 from repro.core.search import (Candidate, PlanSearch, algorithm1_select,
                                stage_orders)
 from repro.core.selector import CostModelProber, select_technique
-from repro.core.topology import Link, Site, make_topology, ring
+from repro.core.topology import Link, Site, line, make_topology, ring
 
 WL_M = paper_workload(get_config("gpt2m"))
 WL_L = paper_workload(get_config("gpt2L"))
@@ -221,3 +221,100 @@ def test_search_best_feasibility_and_ranking():
     perfs = [s.tflops or 0.0 for s in ranked]
     assert perfs == sorted(perfs, reverse=True)
     assert all(len(s.candidate.sites) == 1 for s in ranked)
+
+
+# ------------------------------------------------------------------ #
+# pruning: dominated-subset elimination + stage-order beam must be
+# lossless for the best plan (the --exact escape hatch is the oracle)
+# ------------------------------------------------------------------ #
+
+def _best_by_technique(scored):
+    out = {}
+    for s in scored:
+        if s.feasible:
+            out.setdefault(s.candidate.technique, s.tflops)
+    return out
+
+
+def _assert_prune_lossless(search):
+    exact = search.search(prune=False)
+    pruned = search.search(prune=True)
+    assert len(pruned) <= len(exact)
+    ex_best = _best_by_technique(exact)
+    pr_best = _best_by_technique(pruned)
+    assert set(pr_best) == set(ex_best)
+    for tech, tf in ex_best.items():
+        assert pr_best[tech] == pytest.approx(tf, rel=1e-12), tech
+
+
+def test_pruned_equals_exhaustive_on_example_topologies():
+    topos = [edge3(),
+             ring("r3", _sites(3),
+                  [Link(5e-3, 3.0), Link(5e-3, 3.0), Link(120e-3, 3.0)]),
+             make_topology("het4", [Site(("A30", "A30")), Site(("T4", "T4")),
+                                    Site(("RTX", "RTX")),
+                                    Site(("A30", "A30"))],
+                           {(0, 1): Link(1e-3, 3.0), (1, 2): Link(30e-3, 3.0),
+                            (2, 3): Link(1e-3, 3.0),
+                            (0, 3): Link(90e-3, 3.0)})]
+    for topo in topos:
+        for wl in (WL_M, WL_L):
+            _assert_prune_lossless(PlanSearch(wl, topo))
+            _assert_prune_lossless(
+                PlanSearch(wl, topo, stage_balance="tflops"))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 4),
+       gpus=st.lists(st.sampled_from(["RTX", "T4", "A30"]),
+                     min_size=4, max_size=4),
+       lats=st.lists(st.floats(0.05, 150.0), min_size=6, max_size=6),
+       shape=st.sampled_from(["full", "ring", "line"]))
+def test_pruned_equals_exhaustive_property(n, gpus, lats, shape):
+    """Pruned search == exhaustive search on random topologies, N <= 4
+    (the acceptance gate: dominance is provably lossless and the default
+    beam is exhaustive below 5 sites)."""
+    sites = [Site((gpus[i], gpus[i]), name=f"S{i}") for i in range(n)]
+    links = [Link(l * 1e-3, 3.0) for l in lats]
+    if shape == "ring" and n >= 3:
+        topo = ring("t", sites, links[:n])
+    elif shape == "line":
+        topo = line("t", sites, links[:n - 1])
+    else:
+        topo = make_topology("t", sites, {
+            (i, j): links[(i * n + j) % len(links)]
+            for i, j in itertools.combinations(range(n), 2)})
+    for wl in (WL_M, WL_L):
+        _assert_prune_lossless(PlanSearch(wl, topo))
+
+
+def test_beam_stage_orders_exhaustive_below_five_sites():
+    topo = make_topology("f4", _sites(4), {
+        (i, j): Link((1 + i + j) * 1e-3, 3.0)
+        for i, j in itertools.combinations(range(4), 2)})
+    search = PlanSearch(WL_M, topo)
+    for subset in [(0, 1), (0, 1, 2), (0, 1, 2, 3), (1, 2, 3)]:
+        beam = search.beam_stage_orders(subset)
+        assert set(beam) == set(stage_orders(subset))
+    # beyond the beam: truncated to the cheapest, still canonical orders
+    topo5 = make_topology("f5", _sites(5), {
+        (i, j): Link((1 + i + j) * 1e-3, 3.0)
+        for i, j in itertools.combinations(range(5), 2)})
+    beam5 = PlanSearch(WL_M, topo5, beam_width=6).beam_stage_orders(
+        tuple(range(5)))
+    assert len(beam5) <= 6
+    assert all(p[0] < p[-1] for p in beam5)
+
+
+def test_beam_orders_ranked_by_boundary_cost():
+    # asymmetric ring: the cheapest order crosses the two 5ms links
+    topo = ring("r3", _sites(3),
+                [Link(5e-3, 3.0), Link(5e-3, 3.0), Link(120e-3, 3.0)])
+    beam = PlanSearch(WL_L, topo).beam_stage_orders((0, 1, 2))
+    assert beam[0] == (0, 1, 2)
+
+
+def test_exact_escape_hatch_restores_full_enumeration():
+    search = PlanSearch(WL_M, edge3())
+    assert len(search.search(prune=False)) == 27
+    assert len(PlanSearch(WL_M, edge3(), prune=False).search()) == 27

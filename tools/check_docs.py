@@ -1,0 +1,132 @@
+"""Docs link + symbol checker (CI: docs-and-benchmarks job; also run as
+a tier-1 test via tests/test_docs.py).
+
+Checks, over README.md, DESIGN.md, and docs/*.md:
+
+  * every relative markdown link resolves to an existing file, and its
+    ``#anchor`` (if any) matches a heading in the target;
+  * every backticked dotted ``repro.*`` reference imports/resolves to a
+    real module or attribute — so the docs can't name symbols the
+    package doesn't have;
+  * every backticked repo path (``src/...``, ``benchmarks/...``,
+    ``examples/...``, ``tools/...``, ``docs/...``) exists.
+
+Usage: ``python tools/check_docs.py [repo_root]`` — exits non-zero with
+one line per problem.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+from typing import List
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`]+)`")
+DOTTED_RE = re.compile(r"^(repro(?:\.\w+)+)")
+PATH_RE = re.compile(r"^(?:src|benchmarks|examples|tools|docs|tests)/"
+                     r"[\w./-]+$")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def doc_files(root: str) -> List[str]:
+    files = [os.path.join(root, "README.md"), os.path.join(root, "DESIGN.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces to hyphens, punctuation
+    (except hyphens) dropped."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: str) -> set:
+    with open(md_path) as f:
+        text = f.read()
+    return {github_slug(m) for m in HEADING_RE.findall(text)}
+
+
+def check_links(md_path: str, root: str) -> List[str]:
+    errors = []
+    with open(md_path) as f:
+        text = f.read()
+    base = os.path.dirname(md_path)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, anchor = target.partition("#")
+        full = os.path.normpath(os.path.join(base, path)) if path \
+            else md_path
+        rel = os.path.relpath(md_path, root)
+        if not os.path.exists(full):
+            errors.append(f"{rel}: broken link -> {target}")
+            continue
+        if anchor and full.endswith(".md") \
+                and anchor not in anchors_of(full):
+            errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def resolve_dotted(dotted: str) -> bool:
+    """Import the longest module prefix, then getattr the rest."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_symbols(md_path: str, root: str) -> List[str]:
+    errors = []
+    with open(md_path) as f:
+        text = f.read()
+    rel = os.path.relpath(md_path, root)
+    for span in CODE_RE.findall(text):
+        span = span.strip()
+        m = DOTTED_RE.match(span)
+        if m and not resolve_dotted(m.group(1)):
+            errors.append(f"{rel}: unresolvable symbol `{m.group(1)}`")
+        elif PATH_RE.match(span) and "*" not in span \
+                and not os.path.exists(os.path.join(root, span)):
+            errors.append(f"{rel}: missing path `{span}`")
+    return errors
+
+
+def check_all(root: str) -> List[str]:
+    sys.path.insert(0, os.path.join(root, "src"))
+    errors = []
+    for md in doc_files(root):
+        errors += check_links(md, root)
+        errors += check_symbols(md, root)
+    return errors
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    root = os.path.abspath(args[0]) if args else \
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    errors = check_all(root)
+    for e in errors:
+        print(e)
+    n = len(doc_files(root))
+    print(f"check_docs: {n} files, {len(errors)} problems")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
