@@ -4,11 +4,16 @@ a model + cluster, three ways:
   1. analytically, over the paper's five FABRIC slices (cost model),
   2. live, probing epsilon-epochs of real training on host devices,
   3. beyond the paper: full PlanSearch over an N-site topology — site
-     subsets and pipeline stage orders the two-VM algorithm can't express.
+     subsets and pipeline stage orders the two-VM algorithm can't express,
+  4. live + topology: a searched heterogeneous Placement (uneven
+     TFLOP-weighted stage split) probed end-to-end by a LiveProber on
+     forced host devices — the probe realizes the exact staged mesh.
 
     PYTHONPATH=src python examples/select_technique.py --model gpt2m
     PYTHONPATH=src python examples/select_technique.py --live
     PYTHONPATH=src python examples/select_technique.py --topology edge3
+    PYTHONPATH=src python examples/select_technique.py --live \\
+        --topology line3 --devices 3 --balance tflops
 """
 import argparse
 import os
@@ -18,8 +23,9 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--model", default="gpt2m")
 ap.add_argument("--live", action="store_true",
                 help="probe with real epsilon-epoch training runs")
-ap.add_argument("--topology", choices=["edge3", "ring3", "hub4"],
-                help="full PlanSearch over an example N-site topology")
+ap.add_argument("--topology", choices=["edge3", "ring3", "hub4", "line3"],
+                help="full PlanSearch over an example N-site topology "
+                     "(with --live: probe the searched placement live)")
 ap.add_argument("--devices", type=int, default=8)
 ap.add_argument("--delta", type=float, default=0.1)
 ap.add_argument("--balance", choices=["even", "tflops"], default="even",
@@ -33,6 +39,9 @@ args = ap.parse_args()
 if (args.balance != "even" or args.exact) and not args.topology:
     ap.error("--balance/--exact only apply to the --topology PlanSearch "
              "modes (Algorithm 1 probes the paper's fixed plan set)")
+if args.live and args.topology and args.topology != "line3":
+    ap.error("--live --topology currently supports line3 (single-GPU "
+             "sites, so the staged mesh fits forced host devices)")
 
 if args.live:
     os.environ["XLA_FLAGS"] = (
@@ -45,7 +54,7 @@ from repro.core.costmodel import PAPER_CLUSTERS, paper_workload
 from repro.core.search import PlanSearch
 from repro.core.selector import (CostModelProber, LiveProber,
                                  select_technique)
-from repro.core.topology import Link, Site, hub, make_topology, ring
+from repro.core.topology import Link, Site, hub, line, make_topology, ring
 
 
 def analytic():
@@ -79,6 +88,14 @@ EXAMPLE_TOPOLOGIES = {
         "hub4", Site(("A30", "A30"), name="HUB"),
         [Site(("RTX", "RTX"), name=f"L{k}") for k in range(3)],
         Link(25e-3, 3.0)),
+    # heterogeneous A30+T4 line with single-GPU sites: the TFLOP-weighted
+    # balancer gives the T4 sites strictly fewer layers, and one host
+    # device per site realizes the staged mesh under --live.
+    "line3": lambda: line(
+        "line3",
+        [Site(("A30",), name="A"), Site(("T4",), name="B"),
+         Site(("T4",), name="C")],
+        [Link(20e-3, 3.0), Link(20e-3, 3.0)]),
 }
 
 
@@ -124,7 +141,6 @@ def live():
     """epsilon-epoch probes with real training on host devices: VM1 = first
     half of the mesh, VM2 = second half (the paper's two-VM shape)."""
     import dataclasses
-    import jax
     from repro.configs.base import TrainConfig
     from repro.core.plans import get_plan
     from repro.core.pipeline import pipeline_mesh
@@ -140,9 +156,10 @@ def live():
                               n_layers=4, vocab_size=tok.vocab_size)
     ds = build_dataset(texts, tok, seq_len=64)
 
-    def probe(technique, vms):
+    def probe(technique, placement):
         plan = get_plan("shard_zero" if technique == "shard" else technique)
-        n = args.devices if vms is None else args.devices // 2
+        both = placement is None or len(placement.sites) > 1
+        n = args.devices if both else args.devices // 2
         base = make_host_mesh((max(n // 4, 1), 2, 2),
                               ("pod", "data", "model"))
         mesh = pipeline_mesh(base, 2) if plan.pipeline else base
@@ -153,15 +170,84 @@ def live():
                     loader, steps=6, log_every=0)
         flops = model_flops_per_step(cfg, 8 * 64)
         tf = res.tflops(flops)
-        print(f"  probe {technique}@{vms or 'both'}: {tf:.4f} TFLOP/s")
+        where = "both" if both else f"V{placement.sites[0] + 1}"
+        print(f"  probe {technique}@{where}: {tf:.4f} TFLOP/s")
         return tf
 
     sel = select_technique(LiveProber(probe), delta=args.delta)
     print(f"live selection: {sel.technique}@VMs{sel.vms}")
 
 
+def live_topology():
+    """A LiveProber-driven placement probe: search the heterogeneous
+    line3 topology with TFLOP-weighted balancing, then *execute* the
+    winning Pipeshard placement — pod blocks in stage order, uneven
+    stage_layers pad-and-masked — on forced host devices (one device per
+    single-GPU site)."""
+    import dataclasses
+    import jax
+    from repro.configs.base import TrainConfig
+    from repro.core.costmodel import Workload
+    from repro.core.plans import get_plan
+    from repro.data import (Loader, Tokenizer, build_dataset,
+                            synthetic_wikipedia)
+    from repro.launch.mesh import placement_pipeline_mesh
+    from repro.models import Model
+    from repro.train import model_flops_per_step, train
+
+    topo = EXAMPLE_TOPOLOGIES[args.topology]()
+    n_gpus = sum(len(s.gpus) for s in topo.sites)
+    assert args.devices >= n_gpus, \
+        f"--devices {args.devices} < {n_gpus} GPUs in {topo.name}"
+    print(topo.describe())
+
+    texts = list(synthetic_wikipedia(200, seed=0))
+    tok = Tokenizer.train(texts, 1024)
+    cfg = dataclasses.replace(get_config("gpt2m").reduced(),
+                              n_layers=6, vocab_size=tok.vocab_size)
+    ds = build_dataset(texts, tok, seq_len=64)
+    wl = Workload(cfg, 64, 8, steps_per_epoch=1, microbatches=4)
+
+    # analytic search proposes; the live probe disposes.  Probe the best
+    # *all-site* pipeline — the placement that exercises every topology
+    # link; under --balance tflops each site gets a weighted (uneven)
+    # layer share.
+    search = PlanSearch(wl, topo, stage_balance=args.balance,
+                        techniques=("pipeshard",))
+    best = next((s for s in search.search()
+                 if len(s.candidate.sites) == topo.n_sites and s.feasible),
+                None)
+    if best is None:
+        print(f"no feasible all-site pipeline on {topo.name} — "
+              f"need more GPU memory")
+        sys.exit(1)
+    placement = search.placement(best.candidate)
+    print(f"searched placement: {best.candidate.key} "
+          f"stage_layers={placement.stage_layers}")
+
+    def run_probe(technique, placement):
+        mesh = placement_pipeline_mesh(topo, placement,
+                                       devices=jax.devices()[:n_gpus])
+        loader = Loader(ds, global_batch=8, seed=0)
+        res = train(Model(cfg), get_plan(technique), mesh,
+                    TrainConfig(warmup_steps=2, total_steps=10,
+                                microbatches=4),
+                    loader, steps=4, log_every=0,
+                    stage_layers=placement.stage_layers)
+        return res.tflops(model_flops_per_step(cfg, 8 * 64))
+
+    prober = LiveProber(run_probe, n_sites=topo.n_sites)
+    tf = prober.probe("pipeshard", placement)
+    print(f"live probe {best.candidate.key}: "
+          f"{'infeasible' if tf is None else f'{tf:.4f} TFLOP/s'}")
+    if tf is None:
+        sys.exit(1)
+
+
 if __name__ == "__main__":
-    if args.topology:
+    if args.topology and args.live:
+        live_topology()
+    elif args.topology:
         topology_search()
     elif args.live:
         live()

@@ -356,12 +356,15 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
 def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
                   vms: Optional[Sequence[int]] = None, *,
                   stage_order: Optional[Sequence[int]] = None,
-                  stage_balance: str = "even") -> Optional[float]:
+                  stage_balance: str = "even",
+                  stage_layers: Optional[Sequence[int]] = None
+                  ) -> Optional[float]:
     """Minutes per `epochs` epochs; None when the technique OOMs (the
     paper's '×' bars)."""
     c = technique_step_cost(technique, wl, cluster, vms,
                             stage_order=stage_order,
-                            stage_balance=stage_balance)
+                            stage_balance=stage_balance,
+                            stage_layers=stage_layers)
     if not c.fits:
         return None
     return c.total_s * wl.steps_per_epoch * wl.epochs / 60.0
@@ -370,10 +373,13 @@ def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
 def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                vms: Optional[Sequence[int]] = None, *,
                stage_order: Optional[Sequence[int]] = None,
-               stage_balance: str = "even") -> Optional[float]:
+               stage_balance: str = "even",
+               stage_layers: Optional[Sequence[int]] = None
+               ) -> Optional[float]:
     c = technique_step_cost(technique, wl, cluster, vms,
                             stage_order=stage_order,
-                            stage_balance=stage_balance)
+                            stage_balance=stage_balance,
+                            stage_layers=stage_layers)
     if not c.fits:
         return None
     return wl.flops_per_step / c.total_s / 1e12

@@ -24,8 +24,10 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import NATIVE_SHARD_MAP
 from repro.core.plans import Plan, STAGE_AXIS
 
 
@@ -48,7 +50,8 @@ def pipeline_mesh(devices_mesh: Mesh, n_stages: int,
     balancer (``core.plans.Placement.stage_layers``).  The device mesh
     itself does not depend on how layers are split, so this only
     validates the split's shape (one positive entry per stage); the
-    split is realized by ``make_pipeline_loss``/``validate_stages``.
+    split — even or uneven — is realized by ``make_pipeline_loss``
+    (pad-and-mask, see ``validate_stages``).
     """
     if stage_layers is not None:
         layers = tuple(stage_layers)
@@ -91,7 +94,8 @@ def stack_length(cfg, stack) -> int:
     return leaf.shape[0]
 
 
-def validate_stages(cfg, stack, n_stages: int, stage_layers=None) -> None:
+def validate_stages(cfg, stack, n_stages: int,
+                    stage_layers=None) -> Optional[tuple]:
     """Check the layer stack can be cut into ``n_stages`` pipeline slices.
 
     Args:
@@ -100,29 +104,30 @@ def validate_stages(cfg, stack, n_stages: int, stage_layers=None) -> None:
         n_stages: number of pipeline stages.
         stage_layers: optional per-stage layer counts (a TFLOP-weighted
             split from ``core.costmodel.balanced_stage_layers``).  Must
-            partition the stack; an *uneven* split is additionally
-            rejected here because the shard_map stack sharding realizes
-            equal blocks only (docs/topology-and-search.md §Balancing).
+            partition the stack; *uneven* splits are fine — they execute
+            via the pad-and-mask stage construction in
+            ``make_pipeline_loss`` (docs/topology-and-search.md
+            §Balancing).
+
+    Returns:
+        The normalized per-stage split as a tuple when ``stage_layers``
+        is given, else ``None`` (the equal-block fast path).
     """
     L = stack_length(cfg, stack)
     if stage_layers is not None:
-        layers = tuple(stage_layers)
+        layers = tuple(int(l) for l in stage_layers)
         if len(layers) != n_stages or sum(layers) != L \
                 or any(l < 1 for l in layers):
             raise ValueError(
                 f"{cfg.name}: stage_layers {layers} does not partition the "
                 f"{L}-entry stack into {n_stages} stages")
-        if len(set(layers)) != 1:
-            raise NotImplementedError(
-                f"{cfg.name}: uneven stage_layers {layers} — the GPipe "
-                f"runtime shards the stack in equal blocks per stage; "
-                f"TFLOP-weighted splits are priced analytically "
-                f"(core/costmodel.py) but not yet realized at runtime "
-                f"(docs/topology-and-search.md §Balancing)")
+        return layers
     if L % n_stages != 0:
         raise ValueError(
             f"{cfg.name}: stack length {L} (groups for hybrid) not divisible "
-            f"by n_stages={n_stages} — pick a divisor (see DESIGN.md §4)")
+            f"by n_stages={n_stages} — pick a divisor or pass an explicit "
+            f"stage_layers split (see DESIGN.md §4)")
+    return None
 
 
 def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
@@ -133,7 +138,11 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
 
     ``stage_layers``: optional per-stage layer counts from a
     ``core.plans.Placement`` — validated against the stack (see
-    ``validate_stages``; uneven splits are analytic-only today).
+    ``validate_stages``).  Uneven splits execute via pad-and-mask: every
+    stage's layer slice is gathered and padded to ``max(stage_layers)``
+    and the padded slots are identity-masked inside ``model.run_stack``
+    (zero aux, activations pass through unchanged), so a TFLOP-weighted
+    heterogeneous split runs with the same equal-block stage sharding.
 
     ``carrier_dtype``: dtype of the inter-stage activation carriers (scan
     state / ppermute payload / bank buffer).  Defaults to fp32 because the
@@ -144,6 +153,17 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
     """
     cfg = model.cfg
     n_stages = mesh.shape[STAGE_AXIS]
+    # Manual axes of the pipeline region.  The stage axis always is; on
+    # jax 0.4.x — whose SPMD partitioner CHECK-fails on partial-auto
+    # shard_map (repro.compat.NATIVE_SHARD_MAP, docs/architecture.md) —
+    # size-1 auto axes are promoted to manual so a degenerate
+    # (stage, 1, 1) mesh compiles as a fully-manual region, which that
+    # partitioner handles fine.  A size-1 axis is unsharded either way,
+    # so the promotion never changes semantics.
+    manual = {STAGE_AXIS}
+    if not NATIVE_SHARD_MAP:
+        manual |= {a for a in mesh.axis_names
+                   if a != STAGE_AXIS and mesh.shape[a] == 1}
 
     def loss_fn(params, batch):
         x, positions, _ = model._embed_inputs(params, batch)
@@ -155,11 +175,31 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
         xm = x.reshape(n_micro, mb, S, d).astype(carrier_dtype)
         xm = jax.lax.with_sharding_constraint(
             xm, P(None, "data", None, None))
-        pos_mb = positions[:mb]
+        # every microbatch keeps its own position rows (packed/ragged
+        # batches have per-example positions, so slicing the first
+        # microbatch's rows for all of them would be wrong)
+        pos_m = positions.reshape(n_micro, mb, S)
         enc_mb = jnp.zeros((), x.dtype) if enc_out is None else \
             enc_out.reshape(n_micro, mb, *enc_out.shape[1:])
         stack = params["layers"]
-        validate_stages(cfg, stack, n_stages, stage_layers)
+        split = validate_stages(cfg, stack, n_stages, stage_layers)
+        layer_valid = None
+        if split is not None:
+            # per-stage gather realizing Placement.stage_layers: stage s
+            # gets its own contiguous slice, padded to the longest stage
+            # by repeating its last layer; padded slots are masked to
+            # identity (and zero aux) inside run_stack, so the where()
+            # never sees uninitialized params.
+            max_l = max(split)
+            offs = np.concatenate(([0], np.cumsum(split)))
+            idx = np.concatenate([
+                offs[s] + np.minimum(np.arange(max_l), split[s] - 1)
+                for s in range(n_stages)]).astype(np.int32)
+            stack = jax.tree.map(
+                lambda leaf: jnp.take(leaf, jnp.asarray(idx), axis=0),
+                stack)
+            layer_valid = jnp.asarray(np.concatenate(
+                [np.arange(max_l) < split[s] for s in range(n_stages)]))
         shared = params.get("shared")
         if shared is None:
             shared = jnp.zeros(())
@@ -167,33 +207,52 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
         # in_specs: only the manual (stage) axis is mentioned; data/model
         # sharding of the same arrays stays in auto-SPMD land.
         stack_spec = jax.tree.map(lambda _: P(STAGE_AXIS), stack)
+        mask_args = () if layer_valid is None else (layer_valid,)
+        mask_specs = () if layer_valid is None else (P(STAGE_AXIS),)
         # stage id as a stage-sharded input rather than lax.axis_index:
         # axis_index lowers to partition-id, which the jax-0.4.x SPMD
         # partitioner rejects inside partial-auto shard_map regions.
         stage_ids = jnp.arange(n_stages, dtype=jnp.int32)
 
-        @partial(jax.shard_map, mesh=mesh, axis_names={STAGE_AXIS},
-                 in_specs=(P(STAGE_AXIS), stack_spec, P(), P(), P(), P()),
+        @partial(jax.shard_map, mesh=mesh, axis_names=manual,
+                 in_specs=(P(STAGE_AXIS), stack_spec, *mask_specs,
+                           P(), P(), P(), P()),
                  out_specs=P(STAGE_AXIS), check_vma=False)
-        def run_pipeline(stage_ids, stack_local, xm, pos_mb, enc_mb, shared):
+        def run_pipeline(stage_ids, stack_local, *rest):
+            if layer_valid is None:
+                valid_local = None
+                xm, pos_m, enc_mb, shared = rest
+            else:
+                valid_local, xm, pos_m, enc_mb, shared = rest
             stage = stage_ids[0]
             T = n_micro + n_stages - 1
             state0 = jnp.zeros_like(xm[0])
             buf0 = jnp.zeros_like(xm)
 
-            def tick(carry, t):
-                state, buf = carry
-                mb_idx = jnp.clip(t - stage, 0, n_micro - 1)
-                inp = jnp.where(stage == 0, xm[jnp.clip(t, 0, n_micro - 1)],
-                                state)
+            def run_stage(inp, pos, mb_idx):
                 kwargs = {}
                 if cfg.family == "encdec":
                     kwargs["enc_out"] = enc_mb[mb_idx]
                 out, aux = model.run_stack(
-                    stack_local, inp.astype(model.compute_dtype), pos_mb,
+                    stack_local, inp.astype(model.compute_dtype), pos,
                     shared=(shared if cfg.family == "hybrid" else None),
-                    remat=remat, **kwargs)
-                out = out.astype(carrier_dtype)
+                    remat=remat, layer_valid=valid_local, **kwargs)
+                return out.astype(carrier_dtype), aux.astype(jnp.float32)
+
+            def tick(carry, t):
+                state, buf = carry
+                mb_idx = jnp.clip(t - stage, 0, n_micro - 1)
+                # a stage only holds a real microbatch for the ticks
+                # t in [stage, stage + n_micro): warm-up and drain ticks
+                # skip the stack entirely instead of burning a full
+                # forward on a stale microbatch and polluting the aux sum
+                active = jnp.logical_and(t >= stage, t - stage < n_micro)
+                inp = jnp.where(stage == 0, xm[mb_idx], state)
+                out, aux = jax.lax.cond(
+                    active,
+                    lambda op: run_stage(*op),
+                    lambda op: (op[0], jnp.float32(0.0)),
+                    (inp, pos_m[mb_idx], mb_idx))
                 # last stage banks its finished microbatch t-(S-1)
                 done_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
                 valid = (t - (n_stages - 1) >= 0)
@@ -210,10 +269,14 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
             # leading (length-1 per shard) stage axis; caller slices [-1]
             return buf[None], jnp.sum(auxs)[None]
 
-        buf_staged, aux_staged = run_pipeline(stage_ids, stack, xm, pos_mb,
-                                              enc_mb, shared)
+        buf_staged, aux_staged = run_pipeline(stage_ids, stack, *mask_args,
+                                              xm, pos_m, enc_mb, shared)
         hidden = buf_staged[-1].reshape(B, S, d).astype(model.compute_dtype)
-        aux = aux_staged[-1]
+        # every stage owns distinct layers, so the model's aux (MoE
+        # load-balance) sums over stages; each stage accumulated one
+        # batch-invariant aux per microbatch, so the microbatch mean is
+        # what matches the reference full-batch aux
+        aux = jnp.sum(aux_staged) / n_micro
         logits = model._head(params, hidden)
         from repro.models.model import lm_loss
         return lm_loss(cfg, logits, batch, aux)

@@ -25,10 +25,15 @@ cost model — the general machine behind the paper's Algorithm 1:
     is now a thin wrapper over it.
 
 Probing is pluggable exactly like the selector's: the default evaluator
-prices candidates analytically, while a ``probe_fn`` (technique, sites)
-hook lets live ε-epoch training measurements drive the same search (with
-pruning disabled — structural dominance arguments only hold for the
-analytic cost model, not for live measurements).
+prices candidates analytically, while a ``probe_fn`` (technique,
+``core.plans.Placement``) hook lets live ε-epoch training measurements
+drive the same search (with pruning disabled — structural dominance
+arguments only hold for the analytic cost model, not for live
+measurements).  Each probe receives the candidate's full placement (site
+subset, stage order, per-stage layer split), so a live probe realizes
+exactly the plan being priced; probe-equivalent candidates — a stage
+order and its reversal assign the same layers to the same sites and
+cross the same links — are measured once via a per-search probe cache.
 """
 from __future__ import annotations
 
@@ -44,7 +49,7 @@ from repro.core.costmodel import (ClusterLike, TECHNIQUES, Workload,
 from repro.core.plans import Placement
 from repro.core.topology import Link, Topology
 
-ProbeFn = Callable[[str, Optional[List[int]]], Optional[float]]
+ProbeFn = Callable[[str, Optional[Placement]], Optional[float]]
 
 
 # --------------------------------------------------------------------- #
@@ -185,9 +190,12 @@ class PlanSearch:
             — every canonical order is enumerated.  When set, it bounds
             both paths: the exhaustive enumeration truncates (no longer
             exact!) and the beam width is clamped to it.
-        probe_fn: live prober ``(technique, sites) -> TFLOP/s`` replacing
-            the analytic evaluator; disables pruning and stage-order
-            search (live probes cannot pin a stage order).
+        probe_fn: live prober ``(technique, Placement) -> TFLOP/s``
+            replacing the analytic evaluator; disables pruning.  Every
+            probe carries the candidate's full placement (stage order +
+            per-stage layers), and probe-equivalent candidates (reversed
+            stage orders, repeated subsets) are measured once — each
+            live probe is an ε-epoch training run.
         prune: eliminate dominated site subsets and beam-search stage
             orders (default).  ``prune=False`` is the exactness escape
             hatch — exhaustive enumeration, identical results, slower
@@ -205,10 +213,13 @@ class PlanSearch:
     techniques: Tuple[str, ...] = TECHNIQUES
     max_sites: Optional[int] = None      # cap subset size (None = all N)
     max_stage_orders: Optional[int] = None
-    probe_fn: Optional[ProbeFn] = None   # live prober; ignores stage_order
+    probe_fn: Optional[ProbeFn] = None   # live prober (takes a Placement)
     prune: bool = True
     beam_width: int = 24
     stage_balance: str = "even"
+    # live probe memo: probe-equivalence key -> measured TFLOP/s
+    _probe_cache: Dict[Tuple, Optional[float]] = field(
+        default_factory=dict, init=False, repr=False, compare=False)
 
     @classmethod
     def for_cluster(cls, wl: Workload, cluster: ClusterLike,
@@ -222,7 +233,12 @@ class PlanSearch:
         """The *exhaustive* candidate space (no pruning): every
         technique on every non-empty site subset, every canonical stage
         order for Pipeshard.  ``search(prune=True)`` consumes the pruned
-        twin ``pruned_candidates`` instead."""
+        twin ``pruned_candidates`` instead.  One exception under a live
+        ``probe_fn``: Pipeshard stage orders are shortlisted by
+        ``beam_stage_orders`` (exhaustive for subsets of <= 4 sites at
+        the default width) — every shortlisted order costs a real
+        ε-epoch training run, so the k!/2 enumeration is not an option;
+        tighten further with ``max_stage_orders``/``beam_width``."""
         n = self.topology.n_sites
         limit = n if self.max_sites is None else min(self.max_sites, n)
         for k in range(1, limit + 1):
@@ -231,10 +247,18 @@ class PlanSearch:
                     if tech == "pipeshard":
                         if k == 1:
                             continue     # 1-stage pipeline degenerates
-                        # live probes can't pin a stage order (and each is
-                        # an epsilon-epoch training run): one per subset
-                        orders = [tuple(subset)] if self.probe_fn \
-                            else stage_orders(
+                        # live probes pin stage orders too — the probe
+                        # receives the full Placement and builds the
+                        # staged mesh from it.  Each live probe is a
+                        # real ε-epoch training run, so live orders are
+                        # shortlisted by the (cheap, analytic) boundary
+                        # -cost beam instead of enumerated k!/2-fold;
+                        # the probe cache additionally keeps reversal
+                        # -equivalent orders from re-measuring.
+                        if self.probe_fn is not None:
+                            orders = self.beam_stage_orders(subset)
+                        else:
+                            orders = stage_orders(
                                 subset, self.max_stage_orders,
                                 dedupe_reversals=self._reversible())
                         for order in orders:
@@ -358,10 +382,37 @@ class PlanSearch:
     def evaluate(self, cand: Candidate) -> Optional[float]:
         """Avg TFLOP/s of a candidate; None/0 on infeasibility (OOM)."""
         if self.probe_fn is not None:
-            return self.probe_fn(cand.technique, list(cand.sites))
+            return self._cached_probe(cand.technique, self.placement(cand))
         return avg_tflops(cand.technique, self.wl, self.topology,
                           cand.sites, stage_order=cand.stage_order,
                           stage_balance=self.stage_balance)
+
+    @staticmethod
+    def probe_key(technique: str, placement: Optional[Placement]) -> Tuple:
+        """Probe-equivalence key: two candidates with the same key are
+        guaranteed the same live measurement.  Non-pipeline techniques
+        are defined by their site subset alone; a pipeline and its
+        reversal assign the same layer counts to the same sites and
+        cross the same boundary links, so reversal pairs share a key."""
+        if placement is None:
+            return (technique, None)
+        sites = tuple(placement.sites)
+        if technique != "pipeshard" or len(sites) < 2:
+            return (technique, sites)
+        order = tuple(placement.stage_order or sites)
+        layers = placement.stage_layers or ()
+        fwd = (order, tuple(layers))
+        rev = (order[::-1], tuple(layers[::-1] if layers else ()))
+        return (technique, sites) + min(fwd, rev)
+
+    def _cached_probe(self, technique: str,
+                      placement: Optional[Placement]) -> Optional[float]:
+        """Run ``probe_fn`` at most once per probe-equivalence class —
+        every live probe is an ε-epoch training run."""
+        key = self.probe_key(technique, placement)
+        if key not in self._probe_cache:
+            self._probe_cache[key] = self.probe_fn(technique, placement)
+        return self._probe_cache[key]
 
     def placement(self, cand: Candidate) -> Placement:
         """The ``core.plans.Placement`` realizing a candidate, with
@@ -405,11 +456,30 @@ class PlanSearch:
         return algorithm1_select(self._probe, self.topology.n_sites,
                                  delta=delta)
 
-    def _probe(self, technique: str, sites: Optional[List[int]]
+    def _probe(self, technique: str, placement: Optional[Placement]
                ) -> Optional[float]:
         if self.probe_fn is not None:
-            return self.probe_fn(technique, sites)
+            if placement is not None and technique == "pipeshard" \
+                    and self.stage_balance == "tflops" \
+                    and placement.stage_layers is None:
+                # attach the same weighted split ``placement()`` would:
+                # the Algorithm-1 probe then shares its cache key with
+                # the search's candidate (no duplicate ε-epoch run) and
+                # a live run_fn never sees an even split that cannot
+                # partition a non-divisible stack
+                order = placement.stage_order or placement.sites
+                placement = Placement(
+                    placement.sites, placement.stage_order,
+                    balanced_stage_layers(
+                        self.wl.cfg.n_layers,
+                        stage_compute_tflops(self.topology, order)))
+            return self._cached_probe(technique, placement)
+        sites = None if placement is None else list(placement.sites)
         return avg_tflops(technique, self.wl, self.topology, sites,
+                          stage_order=None if placement is None
+                          else placement.stage_order,
+                          stage_layers=None if placement is None
+                          else placement.stage_layers,
                           stage_balance=self.stage_balance)
 
 
@@ -429,8 +499,9 @@ def algorithm1_select(probe: ProbeFn, n_sites: int, *,
     exactly the original two-VM algorithm's.
 
     Args:
-        probe: ``(technique, sites) -> TFLOP/s`` (None/0 = infeasible);
-            ``sites=None`` means all sites.
+        probe: ``(technique, Placement) -> TFLOP/s`` (None/0 =
+            infeasible); the paper's probe set pins only site subsets,
+            so the placements carry no stage order or layer split.
         n_sites: number of sites the probe understands.
         delta: the paper's δ threshold — how much better
             Pipeshard-on-everything must be before it wins.
@@ -443,17 +514,20 @@ def algorithm1_select(probe: ProbeFn, n_sites: int, *,
 
     probes: Dict[str, Optional[float]] = {}
     all_key = "both" if n_sites == 2 else "all"
+    all_sites = tuple(range(n_sites))
 
-    def run(tech: str, sites: Optional[List[int]], key: str) -> float:
-        perf = probe(tech, sites)
+    def run(tech: str, placement: Placement, key: str) -> float:
+        perf = probe(tech, placement)
         probes[key] = perf
         return perf if perf else 0.0          # line convention: 0 on failure
 
     # lines 1-2: Pipeshard on the union of all sites
-    t_p = run("pipeshard", None, f"pipeshard@{all_key}")
+    t_p = run("pipeshard", Placement(all_sites), f"pipeshard@{all_key}")
     # lines 3-10: Data and Shard on each site separately
-    t_d = [run("data", [i], f"data@V{i + 1}") for i in range(n_sites)]
-    t_s = [run("shard", [i], f"shard@V{i + 1}") for i in range(n_sites)]
+    t_d = [run("data", Placement((i,)), f"data@V{i + 1}")
+           for i in range(n_sites)]
+    t_s = [run("shard", Placement((i,)), f"shard@V{i + 1}")
+           for i in range(n_sites)]
     # line 11
     t_z = max(t_d + t_s)
 
@@ -476,7 +550,7 @@ def algorithm1_select(probe: ProbeFn, n_sites: int, *,
             return Selection("pipeshard", every, probes)
         return best_single()
     # lines 29-35: ZeRO2 fallback on the whole cluster
-    t_z2 = run("zero2", None, f"zero2@{all_key}")
+    t_z2 = run("zero2", Placement(all_sites), f"zero2@{all_key}")
     if t_z2 > 0:
         return Selection("zero2", every, probes)
     return Selection("none", None, probes)    # need more GPU memory

@@ -14,21 +14,30 @@ special case, and ``core.search.PlanSearch`` explores the full
 Probes are pluggable: ``CostModelProber`` prices them analytically (this is
 how benchmarks reproduce the paper's conclusions), while ``LiveProber``
 actually runs ε epochs through repro.train.loop — the shape the algorithm
-has on a real cluster.
+has on a real cluster.  A probe receives the full ``core.plans.Placement``
+(site subset + stage order + per-stage layer split), so a live probe can
+realize exactly the candidate the search priced —
+``launch.mesh.make_topology_mesh`` → ``core.pipeline.pipeline_mesh
+(stage_order=…, stage_layers=…)``.
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.costmodel import ClusterLike, Workload, as_topology, \
     avg_tflops
+from repro.core.plans import Placement
+
+log = logging.getLogger(__name__)
 
 
 class Prober(Protocol):
-    def probe(self, technique: str, vms: Optional[List[int]]
+    def probe(self, technique: str, placement: Optional[Placement]
               ) -> Optional[float]:
-        """Avg TFLOP/s over ε epochs; None/0 on failure (OOM)."""
+        """Avg TFLOP/s over ε epochs; None/0 on failure (OOM).
+        ``placement=None`` means all sites in default order."""
 
 
 @dataclass
@@ -40,23 +49,67 @@ class CostModelProber:
     def n_sites(self) -> int:
         return as_topology(self.cluster).n_sites
 
-    def probe(self, technique: str, vms: Optional[List[int]]
+    def probe(self, technique: str, placement: Optional[Placement]
               ) -> Optional[float]:
-        return avg_tflops(technique, self.wl, self.cluster, vms)
+        if placement is None:
+            return avg_tflops(technique, self.wl, self.cluster, None)
+        return avg_tflops(technique, self.wl, self.cluster,
+                          list(placement.sites),
+                          stage_order=placement.stage_order,
+                          stage_layers=placement.stage_layers)
+
+
+# Failure modes that mean "this plan cannot run on this hardware" — the
+# OOM/'×' outcome Algorithm 1 expects — as opposed to a programming error.
+# XLA surfaces both through XlaRuntimeError, so the status/message is the
+# only discriminator: resource exhaustion, allocation failure, or a
+# backend that cannot compile the requested collective.
+_INFEASIBLE_MARKERS = (
+    "RESOURCE_EXHAUSTED", "Out of memory", "out of memory",
+    "Unable to allocate", "Allocation failure", "UNIMPLEMENTED",
+)
+
+
+def probe_infeasible(exc: BaseException) -> bool:
+    """True when ``exc`` is a resource/compile failure a probe may treat
+    as 'technique infeasible here' (returning None); everything else —
+    TypeError, bad mesh shapes, assertion failures — is a bug in the
+    probe and must propagate."""
+    if isinstance(exc, MemoryError):
+        return True
+    if type(exc).__name__ in ("XlaRuntimeError", "JaxRuntimeError"):
+        return any(m in str(exc) for m in _INFEASIBLE_MARKERS)
+    return False
 
 
 @dataclass
 class LiveProber:
     """Runs ε epochs of real training per probe (used on live hardware;
-    exercised in tests with a tiny model on host devices)."""
-    run_fn: Callable[[str, Optional[List[int]]], Optional[float]]
+    exercised in tests with a tiny model on host devices).
+
+    ``run_fn(technique, placement)`` receives the full
+    ``core.plans.Placement`` so it can build the exact mesh the search
+    priced.  Only resource/compile failures (``probe_infeasible``) are
+    treated as the paper's OOM outcome; programming errors re-raise —
+    silently mapping a TypeError to an OOM-style None probe would corrupt
+    Algorithm 1's selection.
+    """
+    run_fn: Callable[[str, Optional[Placement]], Optional[float]]
     n_sites: int = 2
 
-    def probe(self, technique, vms):
+    def probe(self, technique: str, placement: Optional[Placement]
+              ) -> Optional[float]:
         try:
-            return self.run_fn(technique, vms)
-        except Exception:
-            return None
+            return self.run_fn(technique, placement)
+        except Exception as e:
+            if probe_infeasible(e):
+                log.warning("probe %s@%s infeasible: %s",
+                            technique, placement, e)
+                return None
+            log.error("probe %s@%s failed with a non-resource error "
+                      "(%s) — re-raising, not treating as OOM",
+                      technique, placement, type(e).__name__)
+            raise
 
 
 @dataclass

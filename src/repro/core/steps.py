@@ -77,10 +77,15 @@ def _set_logits_spec(model: Model, plan: Plan, mesh: Mesh,
 
 def build_train_step(model: Model, plan: Plan, mesh: Mesh,
                      tcfg: TrainConfig, *, params_shapes,
-                     batch_shapes) -> Tuple[Callable, Dict[str, Any]]:
+                     batch_shapes,
+                     stage_layers=None) -> Tuple[Callable, Dict[str, Any]]:
     """Returns (jitted step, shardings dict).
 
     step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+    ``stage_layers``: pipeline plans only — per-stage layer counts from a
+    searched ``core.plans.Placement`` (uneven splits run pad-and-masked,
+    see ``core.pipeline.make_pipeline_loss``).
     """
     cfg = model.cfg
     _set_logits_spec(model, plan, mesh, batch_shapes["tokens"].shape[0])
@@ -94,7 +99,8 @@ def build_train_step(model: Model, plan: Plan, mesh: Mesh,
         model.resid_pspec = None
     if plan.pipeline:
         loss_fn = make_pipeline_loss(model, mesh, tcfg.microbatches,
-                                     remat=tcfg.remat)
+                                     remat=tcfg.remat,
+                                     stage_layers=stage_layers)
     else:
         loss_fn = partial(model.loss, remat=tcfg.remat)
 

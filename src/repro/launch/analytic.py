@@ -121,8 +121,9 @@ def placement_degrees(plan, topo, placement, global_batch: int, *,
     map to (launch/mesh.topology_mesh_spec), so the analytic roofline can
     price a searched plan before any mesh exists.  The placement's
     ``stage_order``/``stage_layers`` do not change the degrees (they
-    permute pod blocks and re-slice the layer stack, not the axis
-    sizes), so any ``core.plans.Placement`` is accepted as-is."""
+    permute pod blocks and re-slice — pad-and-mask at runtime — the
+    layer stack, not the axis sizes), so any ``core.plans.Placement``
+    is accepted as-is."""
     from repro.launch.mesh import topology_mesh_spec
     (pod, data, m), _ = topology_mesh_spec(topo, placement.sites,
                                            model=model)

@@ -84,9 +84,12 @@ def placement_pipeline_mesh(topo: Topology, placement, *,
     """Realize a searched pipeline ``core.plans.Placement`` as a staged
     mesh: one pod block per placed site, pod blocks permuted into the
     placement's stage order, and the TFLOP-weighted ``stage_layers``
-    (when present) validated against the stage count — the full
+    (when present) shape-checked against the stage count — the full
     Placement → ``make_topology_mesh`` → ``pipeline_mesh`` wiring of
-    DESIGN.md §5 in one call.
+    DESIGN.md §5 in one call.  Pass the same ``placement.stage_layers``
+    to ``core.steps.build_train_step`` / ``core.pipeline
+    .make_pipeline_loss`` so the split executes (uneven splits run
+    pad-and-masked).
 
     Args:
         topo: the N-site topology the placement was searched on.

@@ -1,0 +1,130 @@
+"""Uneven-stage-split parity check (used by tests/test_pipeline_uneven.py).
+
+Searches a heterogeneous single-GPU-per-site line topology (A30/T4 mix)
+with TFLOP-weighted stage balancing, realizes the winning Pipeshard
+``Placement`` as a (stage, 1, 1) host-device mesh, and runs the pad-and-
+mask GPipe loss (core/pipeline.py) against the unsharded reference
+``model.loss``.  Prints a JSON report:
+
+    {"stage_layers": [...], "ref_loss": ..., "losses": {...},
+     "ref_gnorm": ..., "gnorms": {...}}
+
+``losses``/``gnorms`` keys: ``searched`` (the searched, possibly uneven
+split), plus — when the layer count divides the stage count — ``legacy``
+(stage_layers=None equal-block fast path) and ``even`` (the same equal
+split passed explicitly, which exercises the gather+mask path; it must be
+bit-identical to ``legacy``).
+
+Must run in its own process: ``--devices`` forces the XLA host platform
+device count, which locks at first jax init.  The (stage, 1, 1) mesh has
+no non-trivial auto axes, so this runs even on jax 0.4.x where the
+partial-auto pipeshard tests must skip (repro.compat.NATIVE_SHARD_MAP).
+"""
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gpus", default="A30,T4",
+                    help="one GPU type per site/stage, comma-separated")
+    ap.add_argument("--arch", default="gpt2m",
+                    help="config name; non-dense families (moe) exercise "
+                         "the aux-loss accounting across stages")
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--micro", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=16)
+    args = ap.parse_args()
+
+    gpus = args.gpus.split(",")
+    n_sites = len(gpus)
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_sites} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.costmodel import Workload
+    from repro.core.pipeline import make_pipeline_loss
+    from repro.core.search import PlanSearch
+    from repro.core.topology import Link, Site, line
+    from repro.launch.mesh import placement_pipeline_mesh
+    from repro.models import Model
+
+    cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                              n_layers=args.layers)
+    model = Model(cfg)
+
+    topo = line("hetline",
+                [Site((g,), name=f"S{i}") for i, g in enumerate(gpus)],
+                [Link(20e-3, 3.0)] * (n_sites - 1))
+    wl = Workload(cfg, args.seq, args.batch, steps_per_epoch=1,
+                  microbatches=args.micro)
+    search = PlanSearch(wl, topo, stage_balance="tflops")
+    cand = next(c for c in search.candidates()
+                if c.technique == "pipeshard"
+                and c.sites == tuple(range(n_sites))
+                and c.stage_order == tuple(range(n_sites)))
+    placement = search.placement(cand)
+
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab_size, (args.batch, args.seq))
+    # ragged/packed-style positions: every example gets its own offset, so
+    # reusing microbatch 0's rows for later microbatches would be visible
+    positions = np.arange(args.seq)[None] \
+        + (np.arange(args.batch)[:, None] % 3)
+    batch = {"tokens": jnp.asarray(tokens, jnp.int32),
+             "labels": jnp.asarray(tokens, jnp.int32),
+             "positions": jnp.asarray(positions, jnp.int32)}
+    params = model.init(jax.random.key(0))
+
+    def gnorm(grads):
+        return float(jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads))))
+
+    # loss from the plain forward (the bit-for-bit comparison), grads from
+    # a separate value_and_grad: under remat the forward recomputed inside
+    # the vjp can differ from the plain forward by an ulp, so mixing the
+    # two would blur the exactness claim.
+    ref_loss, ref_metrics = model.loss(params, batch)
+    ref_grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+
+    splits = {"searched": placement.stage_layers}
+    if args.layers % n_sites == 0:
+        splits["legacy"] = None
+        splits["even"] = (args.layers // n_sites,) * n_sites
+
+    mesh = placement_pipeline_mesh(topo, placement, devices=jax.devices())
+    losses, gnorms, auxes = {}, {}, {}
+    with jax.set_mesh(mesh):
+        for name, split in splits.items():
+            loss_fn = make_pipeline_loss(model, mesh, args.micro,
+                                         stage_layers=split)
+            loss, metrics = jax.jit(loss_fn)(params, batch)
+            grads = jax.jit(jax.grad(
+                lambda p: loss_fn(p, batch)[0]))(params)
+            losses[name] = float(loss)
+            gnorms[name] = gnorm(grads)
+            auxes[name] = float(metrics["aux"])
+
+    print(json.dumps({
+        "stage_layers": list(placement.stage_layers or ()),
+        "ref_loss": float(ref_loss),
+        "losses": losses,
+        "ref_gnorm": gnorm(ref_grads),
+        "gnorms": gnorms,
+        "ref_aux": float(ref_metrics["aux"]),
+        "auxes": auxes,
+    }))
+
+
+if __name__ == "__main__":
+    main()

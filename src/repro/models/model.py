@@ -171,13 +171,21 @@ class Model:
     # full-sequence forward (train)
     # ----------------------------------------------------------------- #
     def run_stack(self, stack, x, positions, *, shared=None, enc_out=None,
-                  window: int = 0, remat: bool = True
+                  window: int = 0, remat: bool = True, layer_valid=None
                   ) -> Tuple[jax.Array, jax.Array]:
         """Run a (slice of the) stacked layer parameters over activations.
 
         ``stack`` is ``params["layers"]`` or a stage-local slice of it
         (Pipeshard); ``shared`` is the hybrid family's shared attention
         block (replicated across stages).  Returns (x, aux_sum).
+
+        ``layer_valid``: optional boolean mask over the stack's leading
+        axis (groups for hybrid).  Slots marked False are identity
+        pass-throughs — the activations skip the layer unchanged and the
+        slot contributes zero aux.  This is how Pipeshard realizes uneven
+        per-stage layer counts: every stage's slice is padded to the
+        longest stage and the padding is masked out here
+        (core/pipeline.make_pipeline_loss).
         """
         cfg = self.cfg
         fwd = _BLOCK[cfg.family][1]
@@ -209,10 +217,20 @@ class Model:
                     lambda hh, lp: block_fn(hh, lp), h, layer_p)
                 return h, jnp.sum(auxs)
 
-            x, auxs = jax.lax.scan(group_fn, x,
-                                   (stack["blocks"], stack["gates"]))
+            body, xs = group_fn, (stack["blocks"], stack["gates"])
         else:
-            x, auxs = jax.lax.scan(block_fn, x, stack)
+            body, xs = block_fn, stack
+
+        if layer_valid is None:
+            x, auxs = jax.lax.scan(body, x, xs)
+        else:
+            def masked_body(h, inp):
+                valid, real = inp
+                out, aux = body(h, real)
+                return (jnp.where(valid, out, h),
+                        jnp.where(valid, aux, jnp.zeros_like(aux)))
+
+            x, auxs = jax.lax.scan(masked_body, x, (layer_valid, xs))
         return x, jnp.sum(auxs)
 
     def forward(self, params, batch, *, window: int = 0,

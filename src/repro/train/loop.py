@@ -45,8 +45,11 @@ def model_flops_per_step(cfg: ModelConfig, tokens_per_step: int) -> float:
 def train(model: Model, plan: Plan, mesh, tcfg: TrainConfig, loader, *,
           steps: int, params=None, opt_state=None,
           log_every: int = 10, ckpt_dir: Optional[str] = None,
-          ckpt_every: int = 0,
+          ckpt_every: int = 0, stage_layers=None,
           log_fn: Callable[[str], None] = print) -> TrainResult:
+    """Plan-aware training driver; ``stage_layers`` threads a searched
+    pipeline ``Placement``'s per-stage layer split into the step builder
+    (uneven splits run pad-and-masked, core/pipeline.py)."""
     cfg = model.cfg
     with jax.set_mesh(mesh):
         if params is None:
@@ -58,7 +61,8 @@ def train(model: Model, plan: Plan, mesh, tcfg: TrainConfig, loader, *,
         b_shapes = jax.eval_shape(lambda: first)
         step_fn, sh = build_train_step(model, plan, mesh, tcfg,
                                        params_shapes=p_shapes,
-                                       batch_shapes=b_shapes)
+                                       batch_shapes=b_shapes,
+                                       stage_layers=stage_layers)
         params = jax.device_put(params, sh["params"])
         opt_state = jax.device_put(opt_state, sh["opt"])
 

@@ -152,13 +152,20 @@ def test_pipeline_mesh_accepts_weighted_splits():
         pipeline_mesh(base, 1, stage_layers=(0,))
 
 
-def test_validate_stages_rejects_unrealizable_splits():
+def test_validate_stages_accepts_uneven_and_rejects_bad_splits():
     import numpy as np
     cfg = get_config("gpt2m")
     stack = {"w": np.zeros((24, 4))}
-    validate_stages(cfg, stack, 2, stage_layers=(12, 12))
+    assert validate_stages(cfg, stack, 2, stage_layers=(12, 12)) == (12, 12)
+    # uneven splits are realized at runtime now (pad-and-mask)
+    assert validate_stages(cfg, stack, 2, stage_layers=(16, 8)) == (16, 8)
+    assert validate_stages(cfg, stack, 3, stage_layers=(10, 10, 4)) \
+        == (10, 10, 4)
+    assert validate_stages(cfg, stack, 2) is None
     with pytest.raises(ValueError, match="partition"):
         validate_stages(cfg, stack, 2, stage_layers=(12, 14))
-    # structurally valid but uneven: analytic-only today, loud about it
-    with pytest.raises(NotImplementedError, match="uneven"):
-        validate_stages(cfg, stack, 2, stage_layers=(16, 8))
+    with pytest.raises(ValueError, match="partition"):
+        validate_stages(cfg, stack, 2, stage_layers=(24, 0))
+    # no explicit split: the stack must divide evenly across stages
+    with pytest.raises(ValueError, match="divisible"):
+        validate_stages(cfg, stack, 5)

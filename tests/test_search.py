@@ -90,14 +90,19 @@ def test_plansearch_select_equals_algorithm1_property(lat, g1, g2, delta):
 # ------------------------------------------------------------------ #
 
 class FakeProber:
-    """Scripted probe table: (technique, vms-tuple-or-None) -> TFLOP/s."""
+    """Scripted probe table: (technique, sites-tuple) -> TFLOP/s.  The
+    paper's 'on everything' probes key on the full site tuple (the probe
+    now always receives an explicit Placement)."""
 
     def __init__(self, table, n_sites=2):
         self.table = table
         self.n_sites = n_sites
 
-    def probe(self, technique, vms):
-        key = (technique, None if vms is None else tuple(vms))
+    def probe(self, technique, placement):
+        every = tuple(range(self.n_sites))
+        sites = every if placement is None else tuple(placement.sites)
+        key = (technique, None if sites == every and technique in
+               ("pipeshard", "zero2") else sites)
         return self.table.get(key)
 
 
@@ -200,19 +205,125 @@ def test_search_orders_pipeline_stages_around_dear_links():
     assert scored[(0, 1, 2)] > scored[(0, 2, 1)]
 
 
-def test_live_probe_fn_probes_pipeshard_once_per_subset():
-    """Each live probe is an epsilon-epoch training run: the search must
-    not replay it per stage order (orders are indistinguishable live)."""
+def test_live_probe_fn_gets_placements_and_dedupes():
+    """Live probes carry the full Placement (stage order pinned, so the
+    probe can build the exact staged mesh), and each probe-equivalence
+    class — reversed orders are the same physical pipeline — is measured
+    exactly once per search instance (every probe is an epsilon-epoch
+    training run)."""
     calls = []
 
-    def probe(tech, sites):
-        calls.append((tech, tuple(sites)))
+    def probe(tech, placement):
+        calls.append((tech, placement))
         return 1.0
 
     search = PlanSearch(WL_M, edge3(), probe_fn=probe)
     search.search()
-    pipe = [c for c in calls if c[0] == "pipeshard"]
-    assert len(pipe) == len(set(pipe)) == 4   # 3 pairs + 1 triple
+    pipe = [p for t, p in calls if t == "pipeshard"]
+    # stage orders are pinned now: 3 pairs + 3 canonical triple orders
+    assert all(p.stage_order is not None for p in pipe)
+    assert len(pipe) == len({(p.sites, p.stage_order)
+                             for p in pipe}) == 6
+    # re-running the search (and Algorithm 1's overlapping probe set)
+    # reuses cached measurements instead of re-training
+    n = len(calls)
+    search.search()
+    search.select(delta=0.1)
+    assert len([c for c in calls[n:] if c[0] == "pipeshard"]) == 0
+
+
+def test_live_probe_dedupes_reversed_orders_under_tflops_balance():
+    """stage_balance='tflops' enumerates both directions of each order
+    (exact-tie layer quotas can break the symmetry), but a reversed
+    placement assigns the same layers to the same sites — one live
+    measurement must serve both."""
+    calls = []
+
+    def probe(tech, placement):
+        calls.append((tech, placement))
+        return 1.0
+
+    het = make_topology(
+        "het3", [Site(("A30", "A30")), Site(("A30", "A30")),
+                 Site(("T4", "T4"))],
+        {(0, 1): Link(0.5e-3, 3.0), (1, 2): Link(60e-3, 3.0),
+         (0, 2): Link(100e-3, 3.0)})
+    search = PlanSearch(WL_M, het, stage_balance="tflops", probe_fn=probe)
+    search.search()
+    pipe = [p for t, p in calls if t == "pipeshard"]
+    # every pipeline probe carries its TFLOP-weighted layer split
+    assert all(p.stage_layers is not None for p in pipe)
+    keys = {PlanSearch.probe_key("pipeshard", p) for p in pipe}
+    assert len(pipe) == len(keys) == 6        # 12 directed orders / 2
+
+
+def test_live_select_shares_tflops_probe_cache_and_valid_splits():
+    """Under stage_balance='tflops', Algorithm 1's all-site pipeline
+    probe gets the same weighted split the search attached: the cache
+    key matches (no duplicate epsilon-epoch run) and a live run_fn
+    never receives an even split that cannot partition a non-divisible
+    stack (gpt2l: 26 layers over 3 stages)."""
+    calls = []
+    wl = paper_workload(get_config("gpt2l"))
+    assert wl.cfg.n_layers % 3 != 0
+
+    def probe(tech, placement):
+        calls.append((tech, placement))
+        if tech == "pipeshard":
+            assert placement.stage_layers is not None
+            assert sum(placement.stage_layers) == wl.cfg.n_layers
+        return 1.0
+
+    het = make_topology(
+        "het3", [Site(("A30", "A30")), Site(("A30", "A30")),
+                 Site(("T4", "T4"))],
+        {(0, 1): Link(0.5e-3, 3.0), (1, 2): Link(60e-3, 3.0),
+         (0, 2): Link(100e-3, 3.0)})
+    search = PlanSearch(wl, het, stage_balance="tflops", probe_fn=probe)
+    search.search()
+    n = len([c for c in calls if c[0] == "pipeshard"])
+    search.select(delta=0.1)
+    assert len([c for c in calls if c[0] == "pipeshard"]) == n
+
+
+def test_live_prober_reraises_programming_errors():
+    """A TypeError / bad mesh shape in the probe's run_fn is a bug, not
+    an OOM — it must propagate instead of becoming a None probe that
+    corrupts Algorithm 1's selection."""
+    from repro.core.plans import Placement
+    from repro.core.selector import LiveProber
+
+    def bad(tech, placement):
+        raise TypeError("pipeline_mesh() got an unexpected keyword")
+
+    with pytest.raises(TypeError):
+        LiveProber(bad).probe("pipeshard", Placement((0, 1)))
+
+    def bad_shape(tech, placement):
+        raise ValueError("cannot split data=3 into 2 pipeline sub-stages")
+
+    with pytest.raises(ValueError):
+        LiveProber(bad_shape).probe("pipeshard", Placement((0, 1)))
+
+
+def test_live_prober_maps_resource_failures_to_infeasible():
+    from repro.core.plans import Placement
+    from repro.core.selector import LiveProber, probe_infeasible
+
+    XlaRuntimeError = type("XlaRuntimeError", (Exception,), {})
+
+    def oom(tech, placement):
+        raise XlaRuntimeError("RESOURCE_EXHAUSTED: Out of memory "
+                              "allocating 12884901888 bytes")
+
+    assert LiveProber(oom).probe("data", Placement((0,))) is None
+
+    def host_oom(tech, placement):
+        raise MemoryError()
+
+    assert LiveProber(host_oom).probe("data", Placement((0,))) is None
+    assert not probe_infeasible(TypeError("x"))
+    assert not probe_infeasible(XlaRuntimeError("INVALID_ARGUMENT: ..."))
 
 
 def test_search_best_feasibility_and_ranking():
