@@ -56,6 +56,7 @@ def _scored_record(search: PlanSearch, s: Optional[Scored]) -> Optional[dict]:
                         else list(s.candidate.stage_order)),
         "stage_layers": (None if placement.stage_layers is None
                          else list(placement.stage_layers)),
+        "schedule": s.candidate.schedule,
         "tflops": round(s.tflops, 4),
     }
 

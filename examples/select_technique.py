@@ -135,6 +135,9 @@ def topology_search():
         print(f"stage layers : {placement.stage_layers} "
               f"(TFLOP-weighted; even would be "
               f"{wl.cfg.n_layers // placement.n_stages} per stage)")
+    if placement.schedule != "gpipe":
+        print(f"schedule     : {placement.schedule} "
+              f"(docs/schedules.md)")
 
 
 def live():
@@ -223,7 +226,8 @@ def live_topology():
         sys.exit(1)
     placement = search.placement(best.candidate)
     print(f"searched placement: {best.candidate.key} "
-          f"stage_layers={placement.stage_layers}")
+          f"stage_layers={placement.stage_layers} "
+          f"schedule={placement.schedule}")
 
     def run_probe(technique, placement):
         mesh = placement_pipeline_mesh(topo, placement,
@@ -233,7 +237,8 @@ def live_topology():
                     TrainConfig(warmup_steps=2, total_steps=10,
                                 microbatches=4),
                     loader, steps=4, log_every=0,
-                    stage_layers=placement.stage_layers)
+                    stage_layers=placement.stage_layers,
+                    schedule=placement.schedule)
         return res.tflops(model_flops_per_step(cfg, 8 * 64))
 
     prober = LiveProber(run_probe, n_sites=topo.n_sites)

@@ -141,6 +141,103 @@ LOG2E = 1.4426950408889634
 
 TECHNIQUES = ("data", "zero2", "shard", "pipeshard")
 
+# Pipeline tick-order schedules (docs/schedules.md).  "gpipe" is the
+# paper's measured Alpa behavior (all forwards, then all backwards —
+# bubble (S-1)/m, m microbatches in flight); "1f1b" is PipeDream-Flush
+# (same bubble, but a stage never holds more than S in-flight
+# microbatches); "interleaved" is the Megatron-LM interleaved 1F1B
+# schedule with v virtual stages (layer chunks) per device — bubble
+# shrinks to (S-1)/(v*m) at the price of v crossings of every stage
+# boundary.  "interleaved" defaults to v=2; "interleaved<k>" (e.g.
+# "interleaved4") sets v explicitly.
+SCHEDULES = ("gpipe", "1f1b", "interleaved")
+
+DEFAULT_INTERLEAVE = 2
+
+
+def parse_schedule(schedule: str) -> Tuple[str, int]:
+    """Split a schedule name into (kind, virtual stages per device).
+
+    Args:
+        schedule: ``"gpipe"``, ``"1f1b"``, ``"interleaved"`` (v=2), or
+            ``"interleaved<v>"`` with an explicit v >= 2 (e.g.
+            ``"interleaved4"``).
+
+    Returns:
+        ``(kind, v)`` with ``kind`` in ``SCHEDULES`` and ``v == 1``
+        except for interleaved schedules.
+
+    Raises:
+        ValueError: unknown schedule name or v < 2 on interleaved.
+    """
+    if schedule in ("gpipe", "1f1b"):
+        return schedule, 1
+    if schedule == "interleaved":
+        return "interleaved", DEFAULT_INTERLEAVE
+    if schedule.startswith("interleaved"):
+        try:
+            v = int(schedule[len("interleaved"):])
+        except ValueError:
+            raise ValueError(f"unknown schedule {schedule!r}; expected one "
+                             f"of {SCHEDULES} or 'interleaved<v>'") from None
+        if v < 2:
+            raise ValueError(f"interleaved needs >= 2 virtual stages, "
+                             f"got {schedule!r}")
+        return "interleaved", v
+    raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                     f"{SCHEDULES} or 'interleaved<v>'")
+
+
+def pipeline_bubble_fraction(schedule: str, n_stages: int,
+                             n_micro: int) -> float:
+    """Idle fraction of the pipeline, relative to ideal compute time.
+
+    GPipe and 1F1B both pay ``(S-1)/m`` — 1F1B reorders backwards
+    between forwards but drains the same warm-up/flush ramps.  The
+    interleaved schedule cuts the ramp by its v virtual stages:
+    ``(S-1)/(v*m)`` (Narayanan et al. 2021).
+
+    Args:
+        schedule: schedule name (see ``parse_schedule``).
+        n_stages: pipeline stages S (devices/meshes in the ring).
+        n_micro: microbatches m per optimizer step.
+
+    Returns:
+        The bubble fraction b, so step compute time scales as (1 + b).
+    """
+    kind, v = parse_schedule(schedule)
+    bubble = (n_stages - 1) / n_micro
+    return bubble / v if kind == "interleaved" else bubble
+
+
+def pipeline_inflight_microbatches(schedule: str, n_stages: int,
+                                   n_micro: int) -> float:
+    """Microbatches of activations a stage holds at the schedule's peak.
+
+    GPipe stashes every forward before the first backward: m in flight.
+    1F1B starts backwards as soon as the pipeline fills, so a stage
+    never holds more than ``min(S, m)``.  The interleaved schedule
+    keeps 1F1B's bound but holds partially-processed chunks of the
+    next wave: ``min(S, m) * (1 + (S-1)/(S*v))`` (Narayanan et al.
+    2021) — slightly above 1F1B, still far below GPipe at large m.
+
+    Args:
+        schedule: schedule name (see ``parse_schedule``).
+        n_stages: pipeline stages S.
+        n_micro: microbatches m per optimizer step.
+
+    Returns:
+        Effective in-flight microbatch count (fractional for
+        interleaved), monotone non-decreasing in m for every schedule.
+    """
+    kind, v = parse_schedule(schedule)
+    if kind == "gpipe":
+        return float(n_micro)
+    inflight = float(min(n_stages, n_micro))
+    if kind == "1f1b":
+        return inflight
+    return inflight * (1.0 + (n_stages - 1) / (n_stages * v))
+
 # Pipeline stage-size policies: "even" reproduces the paper's measured
 # Alpa behavior (equal meshes -> equal layer slices, what Table II and
 # Algorithm 1 were run with); "tflops" weights stage sizes by per-site
@@ -240,23 +337,42 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                         vms: Optional[Sequence[int]] = None, *,
                         stage_order: Optional[Sequence[int]] = None,
                         stage_balance: str = "even",
-                        stage_layers: Optional[Sequence[int]] = None
-                        ) -> StepCost:
+                        stage_layers: Optional[Sequence[int]] = None,
+                        schedule: str = "gpipe") -> StepCost:
     """Model one optimizer step of `technique` (paper §III) on a cluster
     or N-site topology.
 
-    vms: which sites participate (None = all).  Heterogeneous GPUs make the
-    *slowest* participant the pace-setter for data-parallel styles, while
-    Pipeshard assigns stages per mesh (paper: meshes of equal capability).
-    stage_order (Pipeshard only): explicit stage→site assignment — the
-    pipeline crosses exactly the links between consecutive sites in this
-    order, so on an asymmetric topology the order matters.
-    stage_balance (Pipeshard only): "even" splits layers equally across
-    stages (the paper's measured Alpa behavior — the default, so every
-    paper artifact keeps its numbers); "tflops" weights stage sizes by
-    per-site compute via ``balanced_stage_layers``.
-    stage_layers (Pipeshard only): explicit per-stage layer counts,
-    overriding ``stage_balance``; must sum to the model's layer count.
+    Args:
+        technique: one of ``TECHNIQUES``.
+        wl: the workload being priced.
+        cluster: legacy two-VM ``Cluster`` or an N-site ``Topology``.
+        vms: which sites participate (None = all).  Heterogeneous GPUs
+            make the *slowest* participant the pace-setter for
+            data-parallel styles, while Pipeshard assigns stages per
+            mesh (paper: meshes of equal capability).
+        stage_order: Pipeshard only — explicit stage→site assignment;
+            the pipeline crosses exactly the links between consecutive
+            sites in this order, so on an asymmetric topology the order
+            matters.
+        stage_balance: Pipeshard only — "even" splits layers equally
+            across stages (the paper's measured Alpa behavior — the
+            default, so every paper artifact keeps its numbers);
+            "tflops" weights stage (or chunk, under an interleaved
+            schedule) sizes by per-site compute via
+            ``balanced_stage_layers``.
+        stage_layers: Pipeshard only — explicit per-stage layer counts
+            overriding ``stage_balance``; must sum to the model's layer
+            count.  Under an interleaved schedule the entries are *per
+            virtual-stage chunk* (``n_stages * v`` of them, chunk c
+            running on stage ``c % n_stages``).
+        schedule: Pipeshard only — pipeline tick order (``SCHEDULES``,
+            docs/schedules.md).  Selects the bubble term
+            (``pipeline_bubble_fraction``), the activation-memory term
+            (``pipeline_inflight_microbatches``), and — interleaved —
+            the v-fold boundary crossings in the p2p term.
+
+    Returns:
+        A ``StepCost`` (compute_s, comm_s, memory required/available).
     """
     topo = as_topology(cluster)
     sel = topo.select(vms)
@@ -301,19 +417,27 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
             raise ValueError(
                 f"stage_order {order} is not a permutation of sites {sel}")
         n_stages = max(len(order), 1)
+        kind, virt = parse_schedule(schedule)
+        n_chunks = n_stages * virt
         stage_sites = [topo.sites[i] for i in order]
         stage_tf = stage_compute_tflops(topo, order)
         mesh_tflops = [t * 1e12 for t in stage_tf]
-        bubble = (n_stages - 1) / wl.microbatches
+        bubble = pipeline_bubble_fraction(schedule, n_stages,
+                                          wl.microbatches)
         if stage_layers is not None:
             split: Optional[Tuple[int, ...]] = tuple(stage_layers)
-            if len(split) != n_stages or min(split, default=0) < 1 \
+            if len(split) != n_chunks or min(split, default=0) < 1 \
                     or sum(split) != wl.cfg.n_layers:
                 raise ValueError(
                     f"stage_layers {split} does not partition "
-                    f"{wl.cfg.n_layers} layers into {n_stages} stages")
+                    f"{wl.cfg.n_layers} layers into {n_chunks} "
+                    f"{schedule} chunks")
         elif stage_balance == "tflops":
-            split = balanced_stage_layers(wl.cfg.n_layers, stage_tf)
+            # interleaved: chunk c runs on stage c % n_stages, so its
+            # quota follows that stage's compute
+            split = balanced_stage_layers(
+                wl.cfg.n_layers,
+                [stage_tf[c % n_stages] for c in range(n_chunks)])
         elif stage_balance == "even":
             split = None        # legacy continuous flops/n_stages split
         else:
@@ -323,9 +447,13 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
             compute = max(flops / n_stages / t for t in mesh_tflops) \
                 * (1 + bubble)
         else:
+            # per-stage layer totals (a stage owns every chunk with
+            # c % n_stages == its index; v == 1 degrades to the split)
+            stage_l = [sum(split[c] for c in range(n_chunks)
+                           if c % n_stages == s) for s in range(n_stages)]
             # the slowest (layers-weighted) stage paces every tick
             compute = max(li / wl.cfg.n_layers * flops / t
-                          for li, t in zip(split, mesh_tflops)) \
+                          for li, t in zip(stage_l, mesh_tflops)) \
                 * (1 + bubble)
         act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
         # each microbatch crosses each stage boundary twice (fwd + bwd),
@@ -335,6 +463,16 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                  / (topo.link(a, b).effective_gbps * 1e9)
                  + wl.microbatches * topo.link(a, b).latency_s)
             for a, b in zip(order[:-1], order[1:]))
+        if kind == "interleaved" and n_stages > 1:
+            # v virtual stages per device: every microbatch walks the
+            # stage ring v times — each forward boundary link v times
+            # and the wrap-around link (last stage back to first)
+            # v - 1 times.  This is the schedule's price: the bubble
+            # shrinks by v, the p2p bill grows by ~v.
+            wrap = topo.link(order[-1], order[0])
+            p2p = virt * p2p + (virt - 1) * 2 * (
+                act_bytes / (wrap.effective_gbps * 1e9)
+                + wl.microbatches * wrap.latency_s)
         if split is None:       # keep the legacy expression bit-for-bit
             intra_comm = max(
                 4 * wl.cfg.n_layers / n_stages * _allreduce_time(
@@ -343,11 +481,14 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
         else:
             intra_comm = max(
                 4 * li * _allreduce_time(act_bytes, len(s.gpus), s.intra)
-                for li, s in zip(split, stage_sites))
+                for li, s in zip(stage_l, stage_sites))
         comm = p2p + intra_comm
         # in-flight microbatches make Pipeshard the memory-hungry plan
-        # (paper §IV-G observation 3)
-        mem = (state / n + act * (1 + 0.5 * wl.microbatches)) / 1e9 + ovh
+        # (paper §IV-G observation 3); 1F1B caps the stash at min(S, m)
+        # — the schedule dimension's memory lever (docs/schedules.md)
+        inflight = pipeline_inflight_microbatches(schedule, n_stages,
+                                                  wl.microbatches)
+        mem = (state / n + act * (1 + 0.5 * inflight)) / 1e9 + ovh
     else:
         raise ValueError(technique)
     return StepCost(compute, comm, mem, mem_avail)
@@ -357,14 +498,15 @@ def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
                   vms: Optional[Sequence[int]] = None, *,
                   stage_order: Optional[Sequence[int]] = None,
                   stage_balance: str = "even",
-                  stage_layers: Optional[Sequence[int]] = None
-                  ) -> Optional[float]:
+                  stage_layers: Optional[Sequence[int]] = None,
+                  schedule: str = "gpipe") -> Optional[float]:
     """Minutes per `epochs` epochs; None when the technique OOMs (the
-    paper's '×' bars)."""
+    paper's '×' bars).  Keyword args as ``technique_step_cost``."""
     c = technique_step_cost(technique, wl, cluster, vms,
                             stage_order=stage_order,
                             stage_balance=stage_balance,
-                            stage_layers=stage_layers)
+                            stage_layers=stage_layers,
+                            schedule=schedule)
     if not c.fits:
         return None
     return c.total_s * wl.steps_per_epoch * wl.epochs / 60.0
@@ -374,12 +516,16 @@ def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                vms: Optional[Sequence[int]] = None, *,
                stage_order: Optional[Sequence[int]] = None,
                stage_balance: str = "even",
-               stage_layers: Optional[Sequence[int]] = None
-               ) -> Optional[float]:
+               stage_layers: Optional[Sequence[int]] = None,
+               schedule: str = "gpipe") -> Optional[float]:
+    """Average achieved TFLOP/s of one step (model FLOPs / step time);
+    None when the technique OOMs.  Keyword args as
+    ``technique_step_cost``."""
     c = technique_step_cost(technique, wl, cluster, vms,
                             stage_order=stage_order,
                             stage_balance=stage_balance,
-                            stage_layers=stage_layers)
+                            stage_layers=stage_layers,
+                            schedule=schedule)
     if not c.fits:
         return None
     return wl.flops_per_step / c.total_s / 1e12

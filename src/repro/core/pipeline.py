@@ -28,11 +28,13 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import NATIVE_SHARD_MAP
+from repro.core.costmodel import parse_schedule
 from repro.core.plans import Plan, STAGE_AXIS
 
 
 def pipeline_mesh(devices_mesh: Mesh, n_stages: int,
-                  stage_order=None, stage_layers=None) -> Mesh:
+                  stage_order=None, stage_layers=None,
+                  schedule: str = "gpipe") -> Mesh:
     """Reshape a (pod?, data, model) mesh into (stage, data, model).
 
     The stage axis absorbs the pod axis first (inter-stage point-to-point is
@@ -40,25 +42,38 @@ def pipeline_mesh(devices_mesh: Mesh, n_stages: int,
     geo-distributed finding), then splits the data axis if more stages are
     requested.
 
-    ``stage_order``: permutation of the pod blocks (one block per site, see
-    ``core.plans.Placement.pod_permutation``) giving the stage→site
-    assignment from the plan search — stage k runs on pod block
-    ``stage_order[k]``, so the pipeline crosses the topology's links in
-    the order the search priced, not in raw site numbering.
+    Args:
+        devices_mesh: the (pod?, data, model) source mesh.
+        n_stages: pipeline stages to carve out of (pod x data).
+        stage_order: permutation of the pod blocks (one block per site,
+            see ``core.plans.Placement.pod_permutation``) giving the
+            stage→site assignment from the plan search — stage k runs on
+            pod block ``stage_order[k]``, so the pipeline crosses the
+            topology's links in the order the search priced, not in raw
+            site numbering.
+        stage_layers: per-stage layer counts from the TFLOP-weighted
+            balancer (``core.plans.Placement.stage_layers``).  The device
+            mesh itself does not depend on how layers are split, so this
+            only validates the split's shape (one positive entry per
+            stage — per *chunk* under an interleaved ``schedule``); the
+            split — even or uneven — is realized by
+            ``make_pipeline_loss`` (pad-and-mask, see
+            ``validate_stages``).
+        schedule: pipeline tick-order schedule the split belongs to
+            (``core.costmodel.SCHEDULES``); interleaved schedules expect
+            ``n_stages * v`` chunk entries in ``stage_layers``.  The
+            device mesh itself is schedule-independent.
 
-    ``stage_layers``: per-stage layer counts from the TFLOP-weighted
-    balancer (``core.plans.Placement.stage_layers``).  The device mesh
-    itself does not depend on how layers are split, so this only
-    validates the split's shape (one positive entry per stage); the
-    split — even or uneven — is realized by ``make_pipeline_loss``
-    (pad-and-mask, see ``validate_stages``).
+    Returns:
+        A ``(stage, data, model)`` mesh.
     """
+    _, virt = parse_schedule(schedule)
     if stage_layers is not None:
         layers = tuple(stage_layers)
-        if len(layers) != n_stages:
+        if len(layers) != n_stages * virt:
             raise ValueError(
                 f"stage_layers {layers} has {len(layers)} entries for "
-                f"n_stages={n_stages}")
+                f"n_stages={n_stages} x {virt} virtual ({schedule})")
         if any(l < 1 for l in layers):
             raise ValueError(f"every stage needs >= 1 layer, "
                              f"got {layers}")
@@ -90,69 +105,213 @@ def pipeline_mesh(devices_mesh: Mesh, n_stages: int,
 
 
 def stack_length(cfg, stack) -> int:
+    """Length of the stacked layer axis (scan *groups* for hybrid).
+
+    Args:
+        cfg: model config (unused; kept for signature stability).
+        stack: the stacked ``[L, ...]`` layer params pytree.
+
+    Returns:
+        The leading-axis length of the stack's leaves.
+    """
     leaf = jax.tree.leaves(stack)[0]
     return leaf.shape[0]
 
 
 def validate_stages(cfg, stack, n_stages: int,
-                    stage_layers=None) -> Optional[tuple]:
-    """Check the layer stack can be cut into ``n_stages`` pipeline slices.
+                    stage_layers=None,
+                    schedule: str = "gpipe") -> Optional[tuple]:
+    """Check the layer stack can be cut into the schedule's chunks.
+
+    GPipe/1F1B cut the stack into ``n_stages`` contiguous slices; an
+    interleaved schedule with v virtual stages per device cuts it into
+    ``n_stages * v`` chunks (chunk c running on stage ``c % n_stages``).
 
     Args:
         cfg: model config (names the stack in error messages).
         stack: the stacked ``[L, ...]`` layer params (groups for hybrid).
         n_stages: number of pipeline stages.
-        stage_layers: optional per-stage layer counts (a TFLOP-weighted
+        stage_layers: optional per-chunk layer counts (a TFLOP-weighted
             split from ``core.costmodel.balanced_stage_layers``).  Must
             partition the stack; *uneven* splits are fine — they execute
             via the pad-and-mask stage construction in
             ``make_pipeline_loss`` (docs/topology-and-search.md
             §Balancing).
+        schedule: pipeline tick-order schedule
+            (``core.costmodel.SCHEDULES``) — fixes the chunk count.
 
     Returns:
-        The normalized per-stage split as a tuple when ``stage_layers``
-        is given, else ``None`` (the equal-block fast path).
+        The normalized per-chunk split as a tuple when ``stage_layers``
+        is given, else ``None`` for the single-chunk equal-block fast
+        path (GPipe/1F1B even split) or the explicit even per-chunk
+        tuple for interleaved schedules (whose chunks are non-contiguous
+        on a stage, so they always take the gather path).
     """
+    _, virt = parse_schedule(schedule)
+    n_chunks = n_stages * virt
     L = stack_length(cfg, stack)
     if stage_layers is not None:
         layers = tuple(int(l) for l in stage_layers)
-        if len(layers) != n_stages or sum(layers) != L \
+        if len(layers) != n_chunks or sum(layers) != L \
                 or any(l < 1 for l in layers):
             raise ValueError(
                 f"{cfg.name}: stage_layers {layers} does not partition the "
-                f"{L}-entry stack into {n_stages} stages")
+                f"{L}-entry stack into {n_chunks} {schedule} chunks")
         return layers
-    if L % n_stages != 0:
+    if L % n_chunks != 0:
         raise ValueError(
             f"{cfg.name}: stack length {L} (groups for hybrid) not divisible "
-            f"by n_stages={n_stages} — pick a divisor or pass an explicit "
-            f"stage_layers split (see DESIGN.md §4)")
-    return None
+            f"by {n_chunks} ({n_stages} stages, {schedule}) — pick a divisor "
+            f"or pass an explicit stage_layers split (see DESIGN.md §4)")
+    return None if virt == 1 else (L // n_chunks,) * n_chunks
+
+
+def schedule_tables(schedule: str, n_stages: int,
+                    n_micro: int) -> Dict[str, np.ndarray]:
+    """Static forward-slot tables driving the scheduled pipeline runner.
+
+    Every schedule is a tick order: at tick t, stage s either runs the
+    forward of one (chunk, microbatch) work item or idles (a slot the
+    real schedule spends on a backward, which reverse-mode AD replays
+    for us when the loss is differentiated — see docs/schedules.md).
+    The tables are plain numpy (shape ``[n_stages, T]``), computed once
+    at trace time:
+
+      * GPipe: ``T = m + S - 1`` — stage s runs microbatch ``t - s``.
+      * 1F1B (PipeDream-Flush): ``T = 2m + S - 2`` — stage s warms up
+        with ``S - s`` forwards, then alternates forward/backward
+        slots: forward i lands at ``t = s + i + max(0, i - (S-1-s))``.
+      * interleaved: greedy list scheduling of the ``v * m`` per-stage
+        work items (chunk c of microbatch i is ready one tick after
+        chunk c-1 finished on the previous ring stage), priority
+        ``(i + c, c)`` — earliest wave first, earlier chunk on ties.
+
+    Args:
+        schedule: schedule name (``core.costmodel.parse_schedule``).
+        n_stages: pipeline stages S.
+        n_micro: microbatches m.
+
+    Returns:
+        Dict of ``[S, T]`` arrays: ``active`` (bool — stage runs a
+        forward this tick), ``chunk``/``mb`` (int32 — the local chunk
+        index and microbatch of that forward), and the arrival tables
+        ``arr_valid``/``arr_chunk``/``arr_mb`` describing the payload
+        each stage's ppermute delivered at the *start* of tick t (sent
+        by its ring predecessor at t-1): whether it is real, and which
+        (local chunk, microbatch) inbox slot it fills.
+    """
+    kind, virt = parse_schedule(schedule)
+    T_MAX = 1 << 30                         # "never done" sentinel
+    S, m = n_stages, n_micro
+    if kind == "gpipe":
+        T = m + S - 1
+        slots = [{s: (0, t - s) for s in range(S) if 0 <= t - s < m}
+                 for t in range(T)]
+    elif kind == "1f1b":
+        T = 2 * m + S - 2
+        slots = [dict() for _ in range(T)]
+        for s in range(S):
+            for i in range(m):
+                t = s + i + max(0, i - (S - 1 - s))
+                slots[t][s] = (0, i)
+    else:                                   # interleaved, v >= 2
+        done: Dict[tuple, int] = {}
+        pending = {s: [(k, i) for k in range(virt) for i in range(m)]
+                   for s in range(S)}
+        slots = []
+        t, left = 0, S * virt * m
+        while left:
+            row = {}
+            for s in range(S):
+                ready = []
+                for k, i in pending[s]:
+                    c = k * S + s
+                    if c == 0 or done.get((c - 1, i), T_MAX) < t:
+                        ready.append((i + c, c, k, i))
+                if ready:
+                    _, c, k, i = min(ready)
+                    row[s] = (k, i)
+                    done[(c, i)] = t
+                    pending[s].remove((k, i))
+                    left -= 1
+            slots.append(row)
+            t += 1
+        T = len(slots)
+    active = np.zeros((S, T), bool)
+    chunk = np.zeros((S, T), np.int32)
+    mb = np.zeros((S, T), np.int32)
+    for t, row in enumerate(slots):
+        for s, (k, i) in row.items():
+            active[s, t], chunk[s, t], mb[s, t] = True, k, i
+    # arrivals: what stage s's ppermute hands it at tick t is whatever
+    # its ring predecessor computed (and did not bank) at tick t-1
+    arr_valid = np.zeros((S, T), bool)
+    arr_chunk = np.zeros((S, T), np.int32)
+    arr_mb = np.zeros((S, T), np.int32)
+    for s in range(S):
+        prev = (s - 1) % S
+        for t in range(1, T):
+            if not active[prev, t - 1]:
+                continue
+            k, i = int(chunk[prev, t - 1]), int(mb[prev, t - 1])
+            if prev == S - 1 and k == virt - 1:
+                continue                    # last chunk: banked, not sent
+            arr_valid[s, t] = True
+            arr_chunk[s, t] = k + (1 if prev == S - 1 else 0)
+            arr_mb[s, t] = i
+    return {"active": active, "chunk": chunk, "mb": mb,
+            "arr_valid": arr_valid, "arr_chunk": arr_chunk,
+            "arr_mb": arr_mb}
 
 
 def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
                        remat: bool = True, carrier_dtype=jnp.float32,
-                       stage_layers=None):
-    """Build loss(params, batch) running the stacked layers as a GPipe
-    pipeline over the mesh's ``stage`` axis.
+                       stage_layers=None, schedule: str = "gpipe"):
+    """Build loss(params, batch) running the stacked layers as a
+    pipelined forward over the mesh's ``stage`` axis.
 
-    ``stage_layers``: optional per-stage layer counts from a
-    ``core.plans.Placement`` — validated against the stack (see
-    ``validate_stages``).  Uneven splits execute via pad-and-mask: every
-    stage's layer slice is gathered and padded to ``max(stage_layers)``
-    and the padded slots are identity-masked inside ``model.run_stack``
-    (zero aux, activations pass through unchanged), so a TFLOP-weighted
-    heterogeneous split runs with the same equal-block stage sharding.
+    Schedules reorder work; they must not change math — every schedule
+    runs the same layers on the same microbatches and the losses/grads
+    agree bit-for-bit with the GPipe path and the unsharded reference
+    (``tests/test_pipeline_schedules.py``).
 
-    ``carrier_dtype``: dtype of the inter-stage activation carriers (scan
-    state / ppermute payload / bank buffer).  Defaults to fp32 because the
-    XLA *CPU* SPMD partitioner CHECK-fails ("Invalid binary instruction
-    opcode copy") when transposing the pipeline with bf16 carriers; the
-    stage compute itself still runs in the model dtype.  On real TPU this
-    can be set to bf16 to halve inter-stage ppermute bytes.
+    Args:
+        model: the ``repro.models.Model`` whose stacked layers run
+            staged; embedding/head/loss stay outside the manual region.
+        mesh: a ``(stage, data, model)`` mesh from ``pipeline_mesh``.
+        n_micro: microbatches the global batch is split into.
+        remat: checkpoint each layer block (activation rematerialization).
+        carrier_dtype: dtype of the inter-stage activation carriers
+            (scan state / ppermute payload / bank buffer).  Defaults to
+            fp32 because the XLA *CPU* SPMD partitioner CHECK-fails
+            ("Invalid binary instruction opcode copy") when transposing
+            the pipeline with bf16 carriers; the stage compute itself
+            still runs in the model dtype.  On real TPU this can be set
+            to bf16 to halve inter-stage ppermute bytes.
+        stage_layers: optional per-stage (per-chunk under interleaved)
+            layer counts from a ``core.plans.Placement`` — validated
+            against the stack (see ``validate_stages``).  Uneven splits
+            execute via pad-and-mask: every chunk's layer slice is
+            gathered and padded to the longest chunk and the padded
+            slots are identity-masked inside ``model.run_stack`` (zero
+            aux, activations pass through unchanged), so a
+            TFLOP-weighted heterogeneous split runs with the same
+            equal-block stage sharding.
+        schedule: pipeline tick order (``core.costmodel.SCHEDULES``,
+            docs/schedules.md).  ``"gpipe"`` keeps the classic
+            ``n_micro + n_stages - 1``-tick path; ``"1f1b"`` and
+            ``"interleaved"`` run the generalized scheduled runner —
+            the same ppermute ring driven by ``schedule_tables``, with
+            a per-(chunk, microbatch) inbox holding activations across
+            the slots the real schedule spends on backwards (which
+            reverse-mode AD replays here).
+
+    Returns:
+        ``loss_fn(params, batch) -> (loss, metrics)``.
     """
     cfg = model.cfg
     n_stages = mesh.shape[STAGE_AXIS]
+    kind, virt = parse_schedule(schedule)
     # Manual axes of the pipeline region.  The stage axis always is; on
     # jax 0.4.x — whose SPMD partitioner CHECK-fails on partial-auto
     # shard_map (repro.compat.NATIVE_SHARD_MAP, docs/architecture.md) —
@@ -182,24 +341,29 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
         enc_mb = jnp.zeros((), x.dtype) if enc_out is None else \
             enc_out.reshape(n_micro, mb, *enc_out.shape[1:])
         stack = params["layers"]
-        split = validate_stages(cfg, stack, n_stages, stage_layers)
+        split = validate_stages(cfg, stack, n_stages, stage_layers,
+                                schedule=schedule)
         layer_valid = None
         if split is not None:
-            # per-stage gather realizing Placement.stage_layers: stage s
-            # gets its own contiguous slice, padded to the longest stage
-            # by repeating its last layer; padded slots are masked to
-            # identity (and zero aux) inside run_stack, so the where()
-            # never sees uninitialized params.
+            # per-chunk gather realizing Placement.stage_layers: stage s
+            # holds its chunks (chunk c = k*n_stages + s, k < virt) back
+            # to back, each padded to the longest chunk by repeating its
+            # last layer; padded slots are masked to identity (and zero
+            # aux) inside run_stack, so the where() never sees
+            # uninitialized params.  virt == 1 is PR 3's per-stage
+            # gather unchanged.
             max_l = max(split)
             offs = np.concatenate(([0], np.cumsum(split)))
+            chunk_of = [k * n_stages + s
+                        for s in range(n_stages) for k in range(virt)]
             idx = np.concatenate([
-                offs[s] + np.minimum(np.arange(max_l), split[s] - 1)
-                for s in range(n_stages)]).astype(np.int32)
+                offs[c] + np.minimum(np.arange(max_l), split[c] - 1)
+                for c in chunk_of]).astype(np.int32)
             stack = jax.tree.map(
                 lambda leaf: jnp.take(leaf, jnp.asarray(idx), axis=0),
                 stack)
             layer_valid = jnp.asarray(np.concatenate(
-                [np.arange(max_l) < split[s] for s in range(n_stages)]))
+                [np.arange(max_l) < split[c] for c in chunk_of]))
         shared = params.get("shared")
         if shared is None:
             shared = jnp.zeros(())
@@ -213,6 +377,10 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
         # axis_index lowers to partition-id, which the jax-0.4.x SPMD
         # partitioner rejects inside partial-auto shard_map regions.
         stage_ids = jnp.arange(n_stages, dtype=jnp.int32)
+        # per-stage local chunk length (layers a single run_stack call
+        # scans): the padded chunk under a gather, the equal block else
+        chunk_len = max(split) if split is not None \
+            else stack_length(cfg, params["layers"]) // n_stages
 
         @partial(jax.shard_map, mesh=mesh, axis_names=manual,
                  in_specs=(P(STAGE_AXIS), stack_spec, *mask_specs,
@@ -269,8 +437,99 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
             # leading (length-1 per shard) stage axis; caller slices [-1]
             return buf[None], jnp.sum(auxs)[None]
 
-        buf_staged, aux_staged = run_pipeline(stage_ids, stack, *mask_args,
-                                              xm, pos_m, enc_mb, shared)
+        # 1F1B / interleaved: the generalized scheduled runner.  Same
+        # ppermute ring, but the tick order comes from static
+        # schedule_tables and arrivals land in a per-(chunk, microbatch)
+        # inbox — a stage may consume an activation several ticks after
+        # it arrived (the slots the real schedule spends on backwards).
+        tables = None
+        if not (kind == "gpipe" and virt == 1):
+            tables = {name: jnp.asarray(arr) for name, arr in
+                      schedule_tables(schedule, n_stages, n_micro).items()}
+        tbl_args = () if tables is None else (
+            tables["active"], tables["chunk"], tables["mb"],
+            tables["arr_valid"], tables["arr_chunk"], tables["arr_mb"])
+        tbl_specs = tuple(P(STAGE_AXIS) for _ in tbl_args)
+
+        @partial(jax.shard_map, mesh=mesh, axis_names=manual,
+                 in_specs=(P(STAGE_AXIS), stack_spec, *mask_specs,
+                           *tbl_specs, P(), P(), P(), P()),
+                 out_specs=P(STAGE_AXIS), check_vma=False)
+        def run_scheduled(stage_ids, stack_local, *rest):
+            if layer_valid is None:
+                valid_local = None
+            else:
+                valid_local, rest = rest[0], rest[1:]
+            (active_t, chunk_t, mb_t, arrv_t, arrk_t, arri_t,
+             xm, pos_m, enc_mb, shared) = rest
+            stage = stage_ids[0]
+            # stage-sharded [1, T] table rows -> local [T]
+            active_t, chunk_t, mb_t = active_t[0], chunk_t[0], mb_t[0]
+            arrv_t, arrk_t, arri_t = arrv_t[0], arrk_t[0], arri_t[0]
+            T = active_t.shape[0]
+            state0 = jnp.zeros_like(xm[0])
+            inbox0 = jnp.zeros((virt,) + xm.shape, xm.dtype)
+            buf0 = jnp.zeros_like(xm)
+
+            def run_chunk(inp, pos, mb_idx, k):
+                sl = lambda leaf: jax.lax.dynamic_slice_in_dim(
+                    leaf, k * chunk_len, chunk_len, 0)
+                stack_k = jax.tree.map(sl, stack_local)
+                valid_k = None if valid_local is None else sl(valid_local)
+                kwargs = {}
+                if cfg.family == "encdec":
+                    kwargs["enc_out"] = enc_mb[mb_idx]
+                out, aux = model.run_stack(
+                    stack_k, inp.astype(model.compute_dtype), pos,
+                    shared=(shared if cfg.family == "hybrid" else None),
+                    remat=remat, layer_valid=valid_k, **kwargs)
+                return out.astype(carrier_dtype), aux.astype(jnp.float32)
+
+            def tick(carry, t):
+                recv, inbox, buf = carry
+                # 1. stash the ppermute payload that arrived this tick
+                #    (its (chunk, microbatch) slot is static knowledge —
+                #    the arrival tables mirror the sender's slot tables)
+                stash = jax.lax.dynamic_update_slice(
+                    inbox, recv[None, None].astype(inbox.dtype),
+                    (arrk_t[t], arri_t[t]) + (0,) * recv.ndim)
+                inbox = jnp.where(arrv_t[t], stash, inbox)
+                # 2. this tick's work item, if any
+                k, i, active = chunk_t[t], mb_t[t], active_t[t]
+                first_chunk = jnp.logical_and(stage == 0, k == 0)
+                inbox_in = jax.lax.dynamic_slice(
+                    inbox, (k, i) + (0,) * state0.ndim,
+                    (1, 1) + state0.shape)[0, 0]
+                inp = jnp.where(first_chunk, xm[i], inbox_in)
+                out, aux = jax.lax.cond(
+                    active,
+                    lambda op: run_chunk(*op),
+                    lambda op: (op[0], jnp.float32(0.0)),
+                    (inp, pos_m[i], i, k))
+                # 3. last chunk of the last stage banks its microbatch
+                done = jnp.logical_and(
+                    active, jnp.logical_and(stage == n_stages - 1,
+                                            k == virt - 1))
+                slot = jax.lax.dynamic_update_index_in_dim(
+                    buf, out.astype(buf.dtype), i, 0)
+                buf = jnp.where(done, slot, buf)
+                # 4. ring handoff (receivers ignore ticks their arrival
+                #    table marks invalid)
+                perm = [(a, (a + 1) % n_stages) for a in range(n_stages)]
+                recv = jax.lax.ppermute(out, STAGE_AXIS, perm)
+                return (recv, inbox, buf), aux
+
+            (_, _, buf), auxs = jax.lax.scan(
+                tick, (state0, inbox0, buf0), jnp.arange(T))
+            return buf[None], jnp.sum(auxs)[None]
+
+        if tables is None:
+            buf_staged, aux_staged = run_pipeline(
+                stage_ids, stack, *mask_args, xm, pos_m, enc_mb, shared)
+        else:
+            buf_staged, aux_staged = run_scheduled(
+                stage_ids, stack, *mask_args, *tbl_args,
+                xm, pos_m, enc_mb, shared)
         hidden = buf_staged[-1].reshape(B, S, d).astype(model.compute_dtype)
         # every stage owns distinct layers, so the model's aux (MoE
         # load-balance) sums over stages; each stage accumulated one

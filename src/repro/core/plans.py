@@ -191,7 +191,8 @@ class Plan:
 
 @dataclass(frozen=True)
 class Placement:
-    """Where a plan runs on an N-site topology (core/topology.py).
+    """Where (and how) a plan runs on an N-site topology
+    (core/topology.py).
 
     Produced by ``core.search.PlanSearch`` and consumed by the launch
     layer (``launch.mesh.make_topology_mesh`` +
@@ -207,24 +208,35 @@ class Placement:
         stage_layers: for pipeline plans, per-stage layer counts from the
             TFLOP-weighted balancer (``core.costmodel
             .balanced_stage_layers``), in stage order.  ``None`` means the
-            even split.
+            even split.  Under an interleaved schedule the entries are
+            per virtual-stage *chunk* (``n_stages * v`` of them, chunk c
+            running on stage ``c % n_stages``).
+        schedule: for pipeline plans, the tick-order schedule the
+            runtime executes and the cost model priced —
+            ``core.costmodel.SCHEDULES`` (docs/schedules.md).
+            Non-pipeline plans keep the ``"gpipe"`` default, which is
+            ignored.
     """
     sites: Tuple[int, ...]
     stage_order: Optional[Tuple[int, ...]] = None
     stage_layers: Optional[Tuple[int, ...]] = None
+    schedule: str = "gpipe"
 
     def __post_init__(self):
+        from repro.core.costmodel import parse_schedule
+        _, v = parse_schedule(self.schedule)   # validates the name too
         if self.stage_order is not None and \
                 sorted(self.stage_order) != sorted(self.sites):
             raise ValueError(
                 f"stage_order {self.stage_order} is not a permutation "
                 f"of sites {self.sites}")
         if self.stage_layers is not None:
-            if len(self.stage_layers) != self.n_stages:
+            if len(self.stage_layers) != self.n_stages * v:
                 raise ValueError(
                     f"stage_layers {self.stage_layers} has "
                     f"{len(self.stage_layers)} entries for "
-                    f"{self.n_stages} stages")
+                    f"{self.n_stages} stages x {v} virtual "
+                    f"({self.schedule})")
             if any(l < 1 for l in self.stage_layers):
                 raise ValueError(f"every stage needs >= 1 layer, got "
                                  f"{self.stage_layers}")

@@ -1,15 +1,19 @@
 """General plan search over an N-site topology (DESIGN.md §5,
 docs/topology-and-search.md).
 
-``PlanSearch`` enumerates (technique × site-subset × stage-assignment)
-candidates on a ``core.topology.Topology`` and prices each with the
-cost model — the general machine behind the paper's Algorithm 1:
+``PlanSearch`` enumerates (technique × site-subset × stage-assignment ×
+schedule) candidates on a ``core.topology.Topology`` and prices each
+with the cost model — the general machine behind the paper's
+Algorithm 1:
 
   * ``search()``/``best()`` rank the candidate space: every non-empty
-    site subset for every technique, and for Pipeshard every stage→site
-    order (paths, deduplicated up to reversal).  This is what the two-VM
-    API could not express — e.g. "Data over the two nearby sites of a
-    three-site ring, ignoring the far one".
+    site subset for every technique, for Pipeshard every stage→site
+    order (paths, deduplicated up to reversal) and every pipeline
+    tick-order schedule (GPipe / 1F1B / interleaved —
+    docs/schedules.md).  This is what the two-VM API could not express
+    — e.g. "Data over the two nearby sites of a three-site ring,
+    ignoring the far one", or "1F1B over all three sites because GPipe's
+    activation stash doesn't fit".
   * by default the space is *pruned* — dominated site subsets are
     eliminated for the collective techniques and pipeline stage orders
     are explored with a beam over boundary-link costs — which keeps the
@@ -42,9 +46,9 @@ from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
-from repro.core.costmodel import (ClusterLike, TECHNIQUES, Workload,
-                                  as_topology, avg_tflops,
-                                  balanced_stage_layers,
+from repro.core.costmodel import (ClusterLike, SCHEDULES, TECHNIQUES,
+                                  Workload, as_topology, avg_tflops,
+                                  balanced_stage_layers, parse_schedule,
                                   stage_compute_tflops)
 from repro.core.plans import Placement
 from repro.core.topology import Link, Topology
@@ -65,22 +69,29 @@ class Candidate:
         sites: the site subset the technique runs on.
         stage_order: Pipeshard only — the stage→site order the pipeline
             crosses the topology in.
+        schedule: Pipeshard only — the tick-order schedule
+            (``core.costmodel.SCHEDULES``, docs/schedules.md); other
+            techniques keep the ignored ``"gpipe"`` default.
     """
     technique: str
     sites: Tuple[int, ...]
     stage_order: Optional[Tuple[int, ...]] = None
+    schedule: str = "gpipe"
 
     def placement(self) -> Placement:
         """The bare ``core.plans.Placement`` (no stage balancing; use
         ``PlanSearch.placement`` for TFLOP-weighted stage layers)."""
-        return Placement(self.sites, self.stage_order)
+        return Placement(self.sites, self.stage_order,
+                         schedule=self.schedule)
 
     @property
     def key(self) -> str:
-        """Human-readable id, e.g. ``pipeshard@V1+V3|V3>V1``."""
+        """Human-readable id, e.g. ``pipeshard@V1+V3|V3>V1#1f1b``."""
         s = "+".join(f"V{i + 1}" for i in self.sites)
         if self.stage_order and self.stage_order != self.sites:
             s += "|" + ">".join(f"V{i + 1}" for i in self.stage_order)
+        if self.schedule != "gpipe":
+            s += f"#{self.schedule}"
         return f"{self.technique}@{s}"
 
 
@@ -207,6 +218,16 @@ class PlanSearch:
             "tflops" (stage sizes weighted by per-site compute,
             ``core.costmodel.balanced_stage_layers``) — applied when
             pricing Pipeshard candidates and attached to placements.
+        schedules: pipeline tick-order schedules to search over for
+            Pipeshard candidates (``core.costmodel.SCHEDULES``; default
+            all three — GPipe, 1F1B, interleaved).  Enumeration order
+            breaks exact TFLOP/s ties (the sort is stable), so keeping
+            ``"gpipe"`` first preserves every paper winner: 1F1B prices
+            time-identical to GPipe and wins only where its smaller
+            activation stash rescues a placement GPipe's ``fits`` check
+            rejects.  Restrict to ``("gpipe",)`` for the legacy space
+            (or to bound live-probe budgets — every schedule of every
+            order is a separate ε-epoch run).
     """
     wl: Workload
     topology: Topology
@@ -217,6 +238,7 @@ class PlanSearch:
     prune: bool = True
     beam_width: int = 24
     stage_balance: str = "even"
+    schedules: Tuple[str, ...] = SCHEDULES
     # live probe memo: probe-equivalence key -> measured TFLOP/s
     _probe_cache: Dict[Tuple, Optional[float]] = field(
         default_factory=dict, init=False, repr=False, compare=False)
@@ -262,7 +284,9 @@ class PlanSearch:
                                 subset, self.max_stage_orders,
                                 dedupe_reversals=self._reversible())
                         for order in orders:
-                            yield Candidate(tech, subset, order)
+                            for sched in self.schedules:
+                                yield Candidate(tech, subset, order,
+                                                sched)
                     else:
                         yield Candidate(tech, subset)
 
@@ -282,7 +306,9 @@ class PlanSearch:
                         if k == 1:
                             continue
                         for order in self.beam_stage_orders(subset):
-                            yield Candidate(tech, subset, order)
+                            for sched in self.schedules:
+                                yield Candidate(tech, subset, order,
+                                                sched)
                     elif subset in keep:
                         yield Candidate(tech, subset)
 
@@ -385,15 +411,19 @@ class PlanSearch:
             return self._cached_probe(cand.technique, self.placement(cand))
         return avg_tflops(cand.technique, self.wl, self.topology,
                           cand.sites, stage_order=cand.stage_order,
-                          stage_balance=self.stage_balance)
+                          stage_balance=self.stage_balance,
+                          schedule=cand.schedule)
 
     @staticmethod
     def probe_key(technique: str, placement: Optional[Placement]) -> Tuple:
         """Probe-equivalence key: two candidates with the same key are
         guaranteed the same live measurement.  Non-pipeline techniques
-        are defined by their site subset alone; a pipeline and its
-        reversal assign the same layer counts to the same sites and
-        cross the same boundary links, so reversal pairs share a key."""
+        are defined by their site subset alone; a GPipe/1F1B pipeline
+        and its reversal assign the same layer counts to the same sites
+        and cross the same boundary links, so those reversal pairs share
+        a key.  Interleaved pipelines do NOT: reversing the stage order
+        re-deals the (non-contiguous) chunk→site assignment, so each
+        direction keys separately."""
         if placement is None:
             return (technique, None)
         sites = tuple(placement.sites)
@@ -401,9 +431,13 @@ class PlanSearch:
             return (technique, sites)
         order = tuple(placement.stage_order or sites)
         layers = placement.stage_layers or ()
+        _, virt = parse_schedule(placement.schedule)
+        if virt > 1:
+            return (technique, sites, placement.schedule, order,
+                    tuple(layers))
         fwd = (order, tuple(layers))
         rev = (order[::-1], tuple(layers[::-1] if layers else ()))
-        return (technique, sites) + min(fwd, rev)
+        return (technique, sites, placement.schedule) + min(fwd, rev)
 
     def _cached_probe(self, technique: str,
                       placement: Optional[Placement]) -> Optional[float]:
@@ -414,17 +448,36 @@ class PlanSearch:
             self._probe_cache[key] = self.probe_fn(technique, placement)
         return self._probe_cache[key]
 
+    def _chunk_layers(self, order: Sequence[int],
+                      schedule: str) -> Tuple[int, ...]:
+        """Per-chunk layer split for a pipeline candidate: stage (chunk)
+        quotas follow per-site TFLOP/s under ``stage_balance="tflops"``,
+        uniform weights otherwise — largest-remainder either way, so
+        non-divisible stacks still partition."""
+        _, virt = parse_schedule(schedule)
+        n_chunks = len(order) * virt
+        if self.stage_balance == "tflops":
+            tf = stage_compute_tflops(self.topology, order)
+            weights = [tf[c % len(order)] for c in range(n_chunks)]
+        else:
+            weights = [1.0] * n_chunks
+        return balanced_stage_layers(self.wl.cfg.n_layers, weights)
+
     def placement(self, cand: Candidate) -> Placement:
         """The ``core.plans.Placement`` realizing a candidate, with
-        TFLOP-weighted ``stage_layers`` attached when this search runs
-        with ``stage_balance="tflops"`` on a Pipeshard candidate."""
-        if cand.technique != "pipeshard" or self.stage_balance != "tflops":
+        ``stage_layers`` attached when needed: TFLOP-weighted chunk
+        quotas under ``stage_balance="tflops"``, and an explicit (even,
+        largest-remainder) split for interleaved candidates even under
+        ``"even"`` balance — interleaved chunks are non-contiguous on a
+        stage, so the runtime always needs the split spelled out."""
+        if cand.technique != "pipeshard" or (
+                self.stage_balance != "tflops"
+                and parse_schedule(cand.schedule)[1] == 1):
             return cand.placement()
         order = cand.stage_order or cand.sites
-        layers = balanced_stage_layers(
-            self.wl.cfg.n_layers,
-            stage_compute_tflops(self.topology, order))
-        return Placement(cand.sites, cand.stage_order, layers)
+        return Placement(cand.sites, cand.stage_order,
+                         self._chunk_layers(order, cand.schedule),
+                         schedule=cand.schedule)
 
     def search(self, *, prune: Optional[bool] = None) -> List[Scored]:
         """All candidates, best first (infeasible ones at the tail).
@@ -470,9 +523,8 @@ class PlanSearch:
                 order = placement.stage_order or placement.sites
                 placement = Placement(
                     placement.sites, placement.stage_order,
-                    balanced_stage_layers(
-                        self.wl.cfg.n_layers,
-                        stage_compute_tflops(self.topology, order)))
+                    self._chunk_layers(order, placement.schedule),
+                    schedule=placement.schedule)
             return self._cached_probe(technique, placement)
         sites = None if placement is None else list(placement.sites)
         return avg_tflops(technique, self.wl, self.topology, sites,
@@ -480,7 +532,9 @@ class PlanSearch:
                           else placement.stage_order,
                           stage_layers=None if placement is None
                           else placement.stage_layers,
-                          stage_balance=self.stage_balance)
+                          stage_balance=self.stage_balance,
+                          schedule="gpipe" if placement is None
+                          else placement.schedule)
 
 
 # --------------------------------------------------------------------- #

@@ -56,7 +56,8 @@ class CostModelProber:
         return avg_tflops(technique, self.wl, self.cluster,
                           list(placement.sites),
                           stage_order=placement.stage_order,
-                          stage_layers=placement.stage_layers)
+                          stage_layers=placement.stage_layers,
+                          schedule=placement.schedule)
 
 
 # Failure modes that mean "this plan cannot run on this hardware" — the

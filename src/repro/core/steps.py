@@ -77,15 +77,21 @@ def _set_logits_spec(model: Model, plan: Plan, mesh: Mesh,
 
 def build_train_step(model: Model, plan: Plan, mesh: Mesh,
                      tcfg: TrainConfig, *, params_shapes,
-                     batch_shapes,
-                     stage_layers=None) -> Tuple[Callable, Dict[str, Any]]:
+                     batch_shapes, stage_layers=None,
+                     schedule: str = "gpipe"
+                     ) -> Tuple[Callable, Dict[str, Any]]:
     """Returns (jitted step, shardings dict).
 
     step(params, opt_state, batch) -> (params, opt_state, metrics)
 
-    ``stage_layers``: pipeline plans only — per-stage layer counts from a
-    searched ``core.plans.Placement`` (uneven splits run pad-and-masked,
-    see ``core.pipeline.make_pipeline_loss``).
+    ``stage_layers``: pipeline plans only — per-stage (per-chunk under
+    an interleaved schedule) layer counts from a searched
+    ``core.plans.Placement`` (uneven splits run pad-and-masked, see
+    ``core.pipeline.make_pipeline_loss``).
+
+    ``schedule``: pipeline plans only — the tick-order schedule
+    (``core.costmodel.SCHEDULES``, docs/schedules.md) the pipeline
+    executes; reordering only, the loss/grads are schedule-invariant.
     """
     cfg = model.cfg
     _set_logits_spec(model, plan, mesh, batch_shapes["tokens"].shape[0])
@@ -100,7 +106,8 @@ def build_train_step(model: Model, plan: Plan, mesh: Mesh,
     if plan.pipeline:
         loss_fn = make_pipeline_loss(model, mesh, tcfg.microbatches,
                                      remat=tcfg.remat,
-                                     stage_layers=stage_layers)
+                                     stage_layers=stage_layers,
+                                     schedule=schedule)
     else:
         loss_fn = partial(model.loss, remat=tcfg.remat)
 

@@ -107,7 +107,8 @@ def placement_pipeline_mesh(topo: Topology, placement, *,
                               devices=devices)
     return pipeline_mesh(base, placement.n_stages,
                          stage_order=placement.pod_permutation(),
-                         stage_layers=placement.stage_layers)
+                         stage_layers=placement.stage_layers,
+                         schedule=placement.schedule)
 
 
 # TPU v5e roofline constants (per chip) — see EXPERIMENTS.md §Roofline.

@@ -1,23 +1,27 @@
-"""Uneven-stage-split parity check (used by tests/test_pipeline_uneven.py).
+"""Pipeline-runtime parity check (used by tests/test_pipeline_uneven.py
+and tests/test_pipeline_schedules.py).
 
 Searches a heterogeneous single-GPU-per-site line topology (A30/T4 mix)
 with TFLOP-weighted stage balancing, realizes the winning Pipeshard
 ``Placement`` as a (stage, 1, 1) host-device mesh, and runs the pad-and-
-mask GPipe loss (core/pipeline.py) against the unsharded reference
-``model.loss``.  Prints a JSON report:
+mask pipeline loss (core/pipeline.py) against the unsharded reference
+``model.loss`` — under every requested tick-order ``--schedules``
+(GPipe / 1F1B / interleaved, docs/schedules.md).  Prints a JSON report:
 
-    {"stage_layers": [...], "ref_loss": ..., "losses": {...},
-     "ref_gnorm": ..., "gnorms": {...}}
+    {"stage_layers": [...], "splits": {...}, "ref_loss": ...,
+     "losses": {...}, "ref_gnorm": ..., "gnorms": {...}, ...}
 
-``losses``/``gnorms`` keys: ``searched`` (the searched, possibly uneven
-split), plus — when the layer count divides the stage count — ``legacy``
-(stage_layers=None equal-block fast path) and ``even`` (the same equal
-split passed explicitly, which exercises the gather+mask path; it must be
-bit-identical to ``legacy``).
+``losses``/``gnorms``/``auxes`` keys: ``searched`` (the searched,
+possibly uneven split), plus — when the layer count divides the chunk
+count — ``legacy`` (stage_layers=None equal-block fast path) and
+``even`` (the same equal split passed explicitly, which exercises the
+gather+mask path; it must be bit-identical to ``legacy``).  Non-GPipe
+schedules suffix their keys, e.g. ``searched@1f1b``; schedules reorder
+work without changing math, so every entry must equal the reference.
 
 Must run in its own process: ``--devices`` forces the XLA host platform
-device count, which locks at first jax init.  The (stage, 1, 1) mesh has
-no non-trivial auto axes, so this runs even on jax 0.4.x where the
+device count, which locks at first jax init.  The (stage, 1, 1) meshes
+have no non-trivial auto axes, so this runs even on jax 0.4.x where the
 partial-auto pipeshard tests must skip (repro.compat.NATIVE_SHARD_MAP).
 """
 import argparse
@@ -36,6 +40,9 @@ def main() -> None:
     ap.add_argument("--micro", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--schedules", default="gpipe",
+                    help="comma-separated pipeline schedules to check "
+                         "(gpipe, 1f1b, interleaved, interleaved<v>)")
     args = ap.parse_args()
 
     gpus = args.gpus.split(",")
@@ -51,13 +58,14 @@ def main() -> None:
     import numpy as np
 
     from repro.configs import get_config
-    from repro.core.costmodel import Workload
+    from repro.core.costmodel import Workload, parse_schedule
     from repro.core.pipeline import make_pipeline_loss
     from repro.core.search import PlanSearch
     from repro.core.topology import Link, Site, line
     from repro.launch.mesh import placement_pipeline_mesh
     from repro.models import Model
 
+    schedules = args.schedules.split(",")
     cfg = dataclasses.replace(get_config(args.arch).reduced(),
                               n_layers=args.layers)
     model = Model(cfg)
@@ -67,12 +75,18 @@ def main() -> None:
                 [Link(20e-3, 3.0)] * (n_sites - 1))
     wl = Workload(cfg, args.seq, args.batch, steps_per_epoch=1,
                   microbatches=args.micro)
-    search = PlanSearch(wl, topo, stage_balance="tflops")
-    cand = next(c for c in search.candidates()
-                if c.technique == "pipeshard"
-                and c.sites == tuple(range(n_sites))
-                and c.stage_order == tuple(range(n_sites)))
-    placement = search.placement(cand)
+    search = PlanSearch(wl, topo, stage_balance="tflops",
+                        schedules=tuple(schedules))
+
+    def searched_placement(sched):
+        cand = next(c for c in search.candidates()
+                    if c.technique == "pipeshard"
+                    and c.sites == tuple(range(n_sites))
+                    and c.stage_order == tuple(range(n_sites))
+                    and c.schedule == sched)
+        return search.placement(cand)
+
+    placement = searched_placement(schedules[0])
 
     rng = np.random.default_rng(0)
     tokens = rng.integers(0, cfg.vocab_size, (args.batch, args.seq))
@@ -97,26 +111,34 @@ def main() -> None:
     ref_loss, ref_metrics = model.loss(params, batch)
     ref_grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
 
-    splits = {"searched": placement.stage_layers}
-    if args.layers % n_sites == 0:
-        splits["legacy"] = None
-        splits["even"] = (args.layers // n_sites,) * n_sites
-
-    mesh = placement_pipeline_mesh(topo, placement, devices=jax.devices())
-    losses, gnorms, auxes = {}, {}, {}
-    with jax.set_mesh(mesh):
-        for name, split in splits.items():
-            loss_fn = make_pipeline_loss(model, mesh, args.micro,
-                                         stage_layers=split)
-            loss, metrics = jax.jit(loss_fn)(params, batch)
-            grads = jax.jit(jax.grad(
-                lambda p: loss_fn(p, batch)[0]))(params)
-            losses[name] = float(loss)
-            gnorms[name] = gnorm(grads)
-            auxes[name] = float(metrics["aux"])
+    losses, gnorms, auxes, split_report = {}, {}, {}, {}
+    for sched in schedules:
+        sched_placement = searched_placement(sched)
+        _, virt = parse_schedule(sched)
+        n_chunks = n_sites * virt
+        splits = {"searched": sched_placement.stage_layers}
+        if args.layers % n_chunks == 0:
+            splits["legacy"] = None
+            splits["even"] = (args.layers // n_chunks,) * n_chunks
+        mesh = placement_pipeline_mesh(topo, sched_placement,
+                                       devices=jax.devices())
+        with jax.set_mesh(mesh):
+            for name, split in splits.items():
+                key = name if sched == "gpipe" else f"{name}@{sched}"
+                split_report[key] = None if split is None else list(split)
+                loss_fn = make_pipeline_loss(model, mesh, args.micro,
+                                             stage_layers=split,
+                                             schedule=sched)
+                loss, metrics = jax.jit(loss_fn)(params, batch)
+                grads = jax.jit(jax.grad(
+                    lambda p: loss_fn(p, batch)[0]))(params)
+                losses[key] = float(loss)
+                gnorms[key] = gnorm(grads)
+                auxes[key] = float(metrics["aux"])
 
     print(json.dumps({
         "stage_layers": list(placement.stage_layers or ()),
+        "splits": split_report,
         "ref_loss": float(ref_loss),
         "losses": losses,
         "ref_gnorm": gnorm(ref_grads),

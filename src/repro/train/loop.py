@@ -46,10 +46,13 @@ def train(model: Model, plan: Plan, mesh, tcfg: TrainConfig, loader, *,
           steps: int, params=None, opt_state=None,
           log_every: int = 10, ckpt_dir: Optional[str] = None,
           ckpt_every: int = 0, stage_layers=None,
+          schedule: str = "gpipe",
           log_fn: Callable[[str], None] = print) -> TrainResult:
-    """Plan-aware training driver; ``stage_layers`` threads a searched
-    pipeline ``Placement``'s per-stage layer split into the step builder
-    (uneven splits run pad-and-masked, core/pipeline.py)."""
+    """Plan-aware training driver; ``stage_layers`` and ``schedule``
+    thread a searched pipeline ``Placement``'s per-stage layer split and
+    tick-order schedule into the step builder (uneven splits run
+    pad-and-masked, alternative schedules via the scheduled runner —
+    core/pipeline.py, docs/schedules.md)."""
     cfg = model.cfg
     with jax.set_mesh(mesh):
         if params is None:
@@ -62,7 +65,8 @@ def train(model: Model, plan: Plan, mesh, tcfg: TrainConfig, loader, *,
         step_fn, sh = build_train_step(model, plan, mesh, tcfg,
                                        params_shapes=p_shapes,
                                        batch_shapes=b_shapes,
-                                       stage_layers=stage_layers)
+                                       stage_layers=stage_layers,
+                                       schedule=schedule)
         params = jax.device_put(params, sh["params"])
         opt_state = jax.device_put(opt_state, sh["opt"])
 

@@ -6,9 +6,12 @@ import pytest
 from prophelpers import given, settings, st
 
 from repro.configs import get_config
-from repro.core.costmodel import (GPUS, PAPER_CLUSTERS, Cluster, Link, VM,
-                                  avg_tflops, epoch_minutes,
+from repro.core.costmodel import (GPUS, PAPER_CLUSTERS, SCHEDULES, Cluster,
+                                  Link, VM, avg_tflops, epoch_minutes,
                                   fabric_cluster, paper_workload,
+                                  parse_schedule,
+                                  pipeline_bubble_fraction,
+                                  pipeline_inflight_microbatches,
                                   technique_step_cost)
 from repro.core.selector import CostModelProber, select_technique
 
@@ -111,3 +114,90 @@ def test_heterogeneous_cluster_paced_by_slowest():
     slow = fabric_cluster("s", ("A30", "A30"), ("T4", "T4"), 1.0)
     assert technique_step_cost("data", WL_M, slow).compute_s > \
         technique_step_cost("data", WL_M, fast).compute_s
+
+
+# ------------------------------------------------------------------ #
+# pipeline schedules (docs/schedules.md): bubble and memory terms
+# ------------------------------------------------------------------ #
+
+def test_parse_schedule():
+    assert parse_schedule("gpipe") == ("gpipe", 1)
+    assert parse_schedule("1f1b") == ("1f1b", 1)
+    assert parse_schedule("interleaved") == ("interleaved", 2)
+    assert parse_schedule("interleaved4") == ("interleaved", 4)
+    for bad in ("INTERLEAVED", "interleaved1", "interleavedx", "1F1B"):
+        with pytest.raises(ValueError):
+            parse_schedule(bad)
+
+
+@settings(max_examples=50, deadline=None)
+@given(S=st.integers(1, 8), m=st.integers(1, 32), v=st.integers(2, 4))
+def test_schedule_bubble_property(S, m, v):
+    """1F1B's bubble equals GPipe's; the interleaved schedule divides it
+    by v (strictly shallower whenever there is a bubble at all)."""
+    gp = pipeline_bubble_fraction("gpipe", S, m)
+    assert gp == (S - 1) / m
+    assert pipeline_bubble_fraction("1f1b", S, m) == gp
+    il = pipeline_bubble_fraction(f"interleaved{v}", S, m)
+    assert il == pytest.approx(gp / v)
+    if S > 1:
+        assert il < gp
+
+
+@settings(max_examples=50, deadline=None)
+@given(S=st.integers(1, 8), m=st.integers(1, 32))
+def test_schedule_memory_property(S, m):
+    """1F1B never stashes more than GPipe (strictly less once m > S);
+    interleaving costs a little above 1F1B; and every schedule's
+    in-flight count is monotone non-decreasing in m."""
+    gp = pipeline_inflight_microbatches("gpipe", S, m)
+    f1b = pipeline_inflight_microbatches("1f1b", S, m)
+    il = pipeline_inflight_microbatches("interleaved", S, m)
+    assert gp == m
+    assert f1b == min(S, m) <= gp
+    if m > S:
+        assert f1b < gp
+    assert f1b <= il
+    for sched in SCHEDULES:
+        a = pipeline_inflight_microbatches(sched, S, m)
+        b = pipeline_inflight_microbatches(sched, S, m + 1)
+        assert b >= a, sched
+
+
+def test_gpipe_schedule_is_the_legacy_cost_bit_for_bit():
+    """schedule="gpipe" must keep every paper number: same bubble term,
+    same m-in-flight memory, no p2p multiplier."""
+    for name, c in PAPER_CLUSTERS.items():
+        legacy = technique_step_cost("pipeshard", WL_M, c)
+        tagged = technique_step_cost("pipeshard", WL_M, c,
+                                     schedule="gpipe")
+        assert (legacy.compute_s, legacy.comm_s, legacy.mem_required_gb) \
+            == (tagged.compute_s, tagged.comm_s,
+                tagged.mem_required_gb), name
+
+
+def test_1f1b_same_time_less_memory_than_gpipe():
+    for name, c in PAPER_CLUSTERS.items():
+        gp = technique_step_cost("pipeshard", WL_M, c)
+        f1b = technique_step_cost("pipeshard", WL_M, c, schedule="1f1b")
+        assert f1b.total_s == gp.total_s, name
+        assert f1b.mem_required_gb < gp.mem_required_gb, name  # m=4 > S=2
+
+
+def test_interleaved_prices_the_wrap_link():
+    """On a line, the interleaved ring's wrap-around (last stage back to
+    first) is the expensive multi-hop return path: making the middle
+    edge dearer must hit the interleaved pipeline harder than GPipe."""
+    import dataclasses
+    from repro.core.topology import Link, Site, line
+    wl = dataclasses.replace(WL_M, microbatches=2)
+    sites = [Site(("A30", "A30"), name=f"S{i}") for i in range(3)]
+    cheap = line("c", sites, [Link(0.1e-3, 3.0)] * 2)
+    dear = line("d", sites, [Link(40e-3, 3.0)] * 2)
+    d_gp = technique_step_cost("pipeshard", wl, dear).comm_s \
+        - technique_step_cost("pipeshard", wl, cheap).comm_s
+    d_il = technique_step_cost("pipeshard", wl, dear,
+                               schedule="interleaved").comm_s \
+        - technique_step_cost("pipeshard", wl, cheap,
+                              schedule="interleaved").comm_s
+    assert d_il > d_gp

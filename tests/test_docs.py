@@ -17,8 +17,20 @@ def _load_checker():
 
 def test_docs_tree_exists():
     for f in ("README.md", "docs/index.md", "docs/architecture.md",
-              "docs/topology-and-search.md", "docs/benchmarks.md"):
+              "docs/topology-and-search.md", "docs/benchmarks.md",
+              "docs/schedules.md"):
         assert os.path.isfile(os.path.join(ROOT, f)), f
+
+
+def test_schedule_page_is_symbol_checked():
+    """docs/schedules.md is covered by the checker's file walk, so a
+    symbol typo there fails tests the same as any other page."""
+    checker = _load_checker()
+    files = checker.doc_files(ROOT)
+    assert os.path.join(ROOT, "docs", "schedules.md") in files
+    # and the figures it embeds exist (the link check enforces this)
+    for fig in ("schedule_steptime_full.svg", "schedule_memory_full.svg"):
+        assert os.path.isfile(os.path.join(ROOT, "docs", "figs", fig))
 
 
 def test_docs_links_and_symbols_resolve():

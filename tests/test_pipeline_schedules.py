@@ -1,0 +1,156 @@
+"""Schedule parity (ISSUE 4 tentpole): 1F1B and interleaved tick orders
+must match the GPipe path and the unsharded reference bit-for-bit —
+schedules reorder work; they must not change math.
+
+Runs ``repro.launch.pipeline_check --schedules ...`` in subprocesses
+(the forced host device count locks at first jax init).  The
+(stage, 1, 1) meshes it builds are fully manual, so these tests run
+UN-gated even on jax 0.4.x, where the partial-auto pipeshard tests must
+skip (see test_plans.py and repro.compat.NATIVE_SHARD_MAP).
+
+The in-process tests at the top check the static slot tables the
+scheduled runner executes (core/pipeline.schedule_tables): every work
+item runs exactly once, never before its producer's ppermute delivered,
+and the tick counts match the formulas documented in docs/schedules.md.
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.pipeline import schedule_tables
+
+
+def _run_check(env, gpus, extra=()):
+    cmd = [sys.executable, "-m", "repro.launch.pipeline_check",
+           "--gpus", gpus, *extra]
+    out = subprocess.run(cmd, capture_output=True, text=True, timeout=560,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    return json.loads(line)
+
+
+# ------------------------------------------------------------------ #
+# static slot tables
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("sched,v", [("gpipe", 1), ("1f1b", 1),
+                                     ("interleaved", 2),
+                                     ("interleaved3", 3)])
+@pytest.mark.parametrize("S,m", [(1, 1), (2, 4), (3, 2), (3, 4), (4, 7)])
+def test_schedule_tables_are_valid_schedules(sched, v, S, m):
+    """Each (chunk, microbatch) work item runs exactly once per stage,
+    and only after its producer chunk ran on the ring predecessor at an
+    earlier tick (ppermute delivers at tick+1)."""
+    t = schedule_tables(sched, S, m)
+    active, chunk, mb = t["active"], t["chunk"], t["mb"]
+    done = {}
+    T = active.shape[1]
+    for tick in range(T):
+        for s in range(S):
+            if not active[s, tick]:
+                continue
+            c = int(chunk[s, tick]) * S + s
+            key = (c, int(mb[s, tick]))
+            assert key not in done, f"{key} ran twice"
+            done[key] = tick
+            if c > 0:
+                prod = done.get((c - 1, key[1]))
+                assert prod is not None and prod < tick, \
+                    f"{key} ran before its input arrived"
+    assert len(done) == S * v * m              # every item ran
+    # the last chunk of every microbatch is banked on the last stage
+    for i in range(m):
+        assert (S * v - 1, i) in done
+
+
+def test_schedule_tick_counts_match_the_docs():
+    """docs/schedules.md formulas: GPipe m+S-1; 1F1B 2m+S-2 (forward
+    slots interleave with the backward slots AD replays)."""
+    assert schedule_tables("gpipe", 3, 4)["active"].shape[1] == 6
+    assert schedule_tables("1f1b", 3, 4)["active"].shape[1] == 9
+    assert schedule_tables("gpipe", 2, 8)["active"].shape[1] == 9
+    assert schedule_tables("1f1b", 2, 8)["active"].shape[1] == 16
+
+
+def test_1f1b_stage_never_holds_more_than_S_forwards_ahead():
+    """The 1F1B property the cost model's memory term prices: at any
+    tick, a stage has run at most min(S, m) more forwards than the last
+    stage has retired (= backward-ready) microbatches."""
+    S, m = 3, 8
+    t = schedule_tables("1f1b", S, m)
+    active, mb = t["active"], t["mb"]
+    fwd_done = [0] * S
+    retired = 0                 # last stage's completions proxy
+    for tick in range(active.shape[1]):
+        for s in range(S):
+            if active[s, tick]:
+                fwd_done[s] += 1
+        retired = fwd_done[S - 1]
+        for s in range(S):
+            assert fwd_done[s] - retired <= min(S, m)
+
+
+# ------------------------------------------------------------------ #
+# runtime parity (subprocess, fully-manual meshes)
+# ------------------------------------------------------------------ #
+
+@pytest.mark.slow
+def test_1f1b_parity_even_and_uneven_two_stages(subproc_env):
+    """A30+T4 line: 1F1B matches the reference and the GPipe path
+    bit-for-bit on both the searched uneven (4, 2) split and the
+    equal-block fast path; interleaved (4 chunks over 6 layers — a
+    non-divisible chunking) matches too."""
+    res = _run_check(subproc_env, "A30,T4",
+                     ("--layers", "6",
+                      "--schedules", "gpipe,1f1b,interleaved"))
+    assert res["splits"]["searched@1f1b"] == [4, 2]
+    assert len(res["splits"]["searched@interleaved"]) == 4
+    for key, loss in res["losses"].items():
+        assert loss == res["ref_loss"], key
+    assert res["gnorms"]["searched@1f1b"] == pytest.approx(
+        res["ref_gnorm"], rel=1e-4)
+    assert res["gnorms"]["searched@interleaved"] == pytest.approx(
+        res["ref_gnorm"], rel=1e-4)
+
+
+@pytest.mark.slow
+def test_schedules_three_stage_parity(subproc_env):
+    """3 stages: the uneven (3, 2, 1) 1F1B split and the 6-chunk
+    interleaved split both equal the reference exactly, and the
+    explicit even interleaved split is a no-op vs its equal-block
+    path."""
+    res = _run_check(subproc_env, "A30,T4,T4",
+                     ("--layers", "6", "--micro", "3", "--batch", "6",
+                      "--schedules", "1f1b,interleaved"))
+    assert res["splits"]["searched@1f1b"] == [3, 2, 1]
+    for key, loss in res["losses"].items():
+        assert loss == res["ref_loss"], key
+    assert res["losses"]["even@interleaved"] == \
+        res["losses"]["legacy@interleaved"]
+    assert res["gnorms"]["searched@1f1b"] == pytest.approx(
+        res["ref_gnorm"], rel=1e-4)
+
+
+@pytest.mark.slow
+def test_moe_aux_is_schedule_invariant(subproc_env):
+    """MoE load-balance aux: every schedule accumulates the same
+    per-(stage, microbatch) aux terms, so the sums agree to an ulp
+    (XLA may tree-reduce the longer 1F1B/interleaved tick axis in a
+    different association) and the losses match the GPipe path and the
+    reference at the uneven-grouping tolerance of the PR-3 MoE test."""
+    res = _run_check(subproc_env, "A30,T4",
+                     ("--arch", "phi3.5-moe-42b-a6.6b", "--layers", "4",
+                      "--schedules", "gpipe,1f1b,interleaved"))
+    assert res["ref_aux"] > 0
+    for sched in ("1f1b", "interleaved"):
+        assert res["auxes"][f"searched@{sched}"] == pytest.approx(
+            res["auxes"]["searched"], rel=1e-6), sched
+        assert res["losses"][f"searched@{sched}"] == pytest.approx(
+            res["losses"]["searched"], rel=1e-6), sched
+        assert res["losses"][f"searched@{sched}"] == pytest.approx(
+            res["ref_loss"], rel=5e-3), sched
+        assert res["gnorms"][f"searched@{sched}"] == pytest.approx(
+            res["ref_gnorm"], rel=1e-2), sched

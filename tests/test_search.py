@@ -32,11 +32,19 @@ def test_candidate_enumeration_3_sites():
         (i, j): Link(1e-3, 3.0)
         for i, j in itertools.combinations(range(3), 2)})
     cands = list(PlanSearch(WL_M, t).candidates())
-    # singles: 3 sites x {data, zero2, shard}; pairs: 3 x (3 + 1 order);
-    # triple: 3 + 3 stage orders
-    assert len(cands) == 9 + 12 + 6
+    # singles: 3 sites x {data, zero2, shard}; pairs: 3 x (3 + 1 order
+    # x 3 schedules); triple: 3 + 3 stage orders x 3 schedules
+    assert len(cands) == 9 + 18 + 12
     assert all(c.technique != "pipeshard" or len(c.sites) > 1
                for c in cands)
+    # the schedule dimension only applies to pipeline candidates
+    assert {c.schedule for c in cands if c.technique == "pipeshard"} \
+        == {"gpipe", "1f1b", "interleaved"}
+    assert all(c.schedule == "gpipe" for c in cands
+               if c.technique != "pipeshard")
+    # restricting schedules restores the legacy space
+    legacy = list(PlanSearch(WL_M, t, schedules=("gpipe",)).candidates())
+    assert len(legacy) == 9 + 12 + 6
 
 
 def test_stage_orders_dedupe_reversals():
@@ -220,10 +228,11 @@ def test_live_probe_fn_gets_placements_and_dedupes():
     search = PlanSearch(WL_M, edge3(), probe_fn=probe)
     search.search()
     pipe = [p for t, p in calls if t == "pipeshard"]
-    # stage orders are pinned now: 3 pairs + 3 canonical triple orders
+    # stage orders are pinned now: (3 pairs + 3 canonical triple
+    # orders) x 3 schedules
     assert all(p.stage_order is not None for p in pipe)
-    assert len(pipe) == len({(p.sites, p.stage_order)
-                             for p in pipe}) == 6
+    assert len(pipe) == len({(p.sites, p.stage_order, p.schedule)
+                             for p in pipe}) == 18
     # re-running the search (and Algorithm 1's overlapping probe set)
     # reuses cached measurements instead of re-training
     n = len(calls)
@@ -254,7 +263,13 @@ def test_live_probe_dedupes_reversed_orders_under_tflops_balance():
     # every pipeline probe carries its TFLOP-weighted layer split
     assert all(p.stage_layers is not None for p in pipe)
     keys = {PlanSearch.probe_key("pipeshard", p) for p in pipe}
-    assert len(pipe) == len(keys) == 6        # 12 directed orders / 2
+    # 12 directed orders: GPipe and 1F1B merge reversal pairs (6 keys
+    # each); interleaved does NOT — reversing the ring re-deals the
+    # chunk->site assignment, so all 12 directions measure separately
+    assert len(pipe) == len(keys) == 6 + 6 + 12
+    for p in pipe:
+        if p.schedule == "interleaved":
+            assert len(p.stage_layers) == 2 * len(p.sites)
 
 
 def test_live_select_shares_tflops_probe_cache_and_valid_splits():
@@ -332,6 +347,89 @@ def test_search_best_feasibility_and_ranking():
     perfs = [s.tflops or 0.0 for s in ranked]
     assert perfs == sorted(perfs, reverse=True)
     assert all(len(s.candidate.sites) == 1 for s in ranked)
+
+
+# ------------------------------------------------------------------ #
+# the schedule dimension (docs/schedules.md)
+# ------------------------------------------------------------------ #
+
+def test_placements_carry_schedule():
+    """Every searched pipeline candidate realizes as a Placement that
+    pins its schedule; interleaved ones always carry an explicit
+    per-chunk split (their chunks are non-contiguous on a stage)."""
+    search = PlanSearch(WL_M, edge3())
+    pipe = [c for c in search.candidates() if c.technique == "pipeshard"]
+    assert {c.schedule for c in pipe} == {"gpipe", "1f1b", "interleaved"}
+    for c in pipe:
+        p = search.placement(c)
+        assert p.schedule == c.schedule
+        if c.schedule == "interleaved":
+            assert p.stage_layers is not None
+            assert len(p.stage_layers) == 2 * len(c.sites)
+            assert sum(p.stage_layers) == WL_M.cfg.n_layers
+        else:
+            assert p.stage_layers is None      # even balance, v == 1
+    assert "#1f1b" in Candidate("pipeshard", (0, 1), (0, 1), "1f1b").key
+
+
+def test_schedule_search_flips_gpipe_to_1f1b_on_memory():
+    """The acceptance scenario (ISSUE 4): small m (the paper's 4),
+    3 stages, gpt2L at batch 48-per-site-pair scale — GPipe's m
+    in-flight microbatches blow the 24 GB RTX budget while 1F1B's
+    min(S, m) = 3 fit, so the schedule-aware search flips the winner
+    from a 2-site Data fallback to Pipeshard-on-everything under 1F1B.
+    Reproduced by `benchmarks/pipeline_ablation.py --schedules` and
+    explained in docs/schedules.md."""
+    wl = paper_workload(get_config("gpt2L"), global_batch=52)
+    assert wl.microbatches == 4                     # small m
+    topo = line("rtx3", _sites(3, gpu="RTX"),
+                [Link(57.4e-3, 3.0)] * 2)
+    from repro.core.costmodel import technique_step_cost
+    gpipe = technique_step_cost("pipeshard", wl, topo, schedule="gpipe")
+    f1b = technique_step_cost("pipeshard", wl, topo, schedule="1f1b")
+    assert not gpipe.fits and f1b.fits              # the memory rescue
+    assert f1b.total_s == gpipe.total_s             # same bubble => time
+    legacy = PlanSearch(wl, topo, schedules=("gpipe",)).best()
+    assert legacy.candidate.technique != "pipeshard"
+    best = PlanSearch(wl, topo).best()
+    assert best.candidate.technique == "pipeshard"
+    assert best.candidate.schedule == "1f1b"
+    assert len(best.candidate.sites) == 3
+    assert best.tflops > legacy.tflops
+
+
+def test_costmodel_prober_prices_the_placement_schedule():
+    """A CostModelProber wired in as probe_fn must price each
+    candidate's own schedule: interleaved placements carry 2S-entry
+    chunk splits (which the gpipe pricing would reject outright), and
+    1F1B's memory rescue must survive the prober path."""
+    from repro.core.selector import CostModelProber
+    topo = line("a30l3", _sites(3), [Link(0.1e-3, 3.0)] * 2)
+    search = PlanSearch(WL_M, topo,
+                        probe_fn=CostModelProber(WL_M, topo).probe)
+    ranked = search.search()          # raises without schedule threading
+    direct = PlanSearch(WL_M, topo)
+    for s in ranked:
+        if s.candidate.technique == "pipeshard":
+            assert s.tflops == direct.evaluate(s.candidate), \
+                s.candidate.key
+
+
+def test_interleaved_shrinks_bubble_but_pays_p2p():
+    """At small m on cheap links the interleaved schedule is the
+    fastest pipeline (bubble / v); on dear links its v-fold boundary
+    crossings invert the ordering."""
+    import dataclasses
+    from repro.core.costmodel import technique_step_cost
+    wl = dataclasses.replace(WL_M, microbatches=2)
+
+    def pipe_s(lat_ms, sched):
+        topo = line("l3", _sites(3), [Link(lat_ms * 1e-3, 3.0)] * 2)
+        return technique_step_cost("pipeshard", wl, topo,
+                                   schedule=sched).total_s
+
+    assert pipe_s(0.1, "interleaved") < pipe_s(0.1, "gpipe")
+    assert pipe_s(20.0, "interleaved") > pipe_s(20.0, "gpipe")
 
 
 # ------------------------------------------------------------------ #
@@ -427,5 +525,7 @@ def test_beam_orders_ranked_by_boundary_cost():
 
 def test_exact_escape_hatch_restores_full_enumeration():
     search = PlanSearch(WL_M, edge3())
-    assert len(search.search(prune=False)) == 27
-    assert len(PlanSearch(WL_M, edge3(), prune=False).search()) == 27
+    assert len(search.search(prune=False)) == 39
+    assert len(PlanSearch(WL_M, edge3(), prune=False).search()) == 39
+    assert len(PlanSearch(WL_M, edge3(), prune=False,
+                          schedules=("gpipe",)).search()) == 27

@@ -1,0 +1,385 @@
+"""Render ``benchmarks/out/*.json`` to standalone SVG figures — no
+plotting dependency, stdlib string-built SVG only (ROADMAP "winner-map
+visualization").
+
+    PYTHONPATH=src python tools/render_figs.py \\
+        [--src benchmarks/out] [--out docs/figs] [--mode full]
+
+Renders, per matching artifact:
+
+  * ``pipeline_schedules_<mode>.json`` → ``schedule_steptime_*.svg`` +
+    ``schedule_memory_*.svg`` (the GPipe/1F1B/interleaved ablation,
+    docs/schedules.md);
+  * ``latency_sweep_<kind><n>_<mode>.json`` → Fig. 5-style degradation
+    curves with the winner flips marked;
+  * ``topology_sweep_<mode>.json`` → winner maps — one colored cell per
+    (topology × GPU mix), one panel per latency regime, one figure per
+    model.
+
+Colors are a fixed per-entity assignment from a validated
+colorblind-safe categorical palette (techniques and schedules each keep
+their hue across every figure; never cycled).  Exits non-zero when no
+inputs are found, so CI fails loudly on an empty ``benchmarks/out/``.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Validated categorical palette (light mode) — fixed assignment per
+# entity, never cycled; gray is the OOM/none slot.
+SERIES = {"blue": "#2a78d6", "orange": "#eb6834", "aqua": "#1baf7a",
+          "yellow": "#eda100", "magenta": "#e87ba4", "green": "#008300"}
+TECH_COLOR = {"data": SERIES["blue"], "pipeshard": SERIES["orange"],
+              "zero2": SERIES["yellow"], "shard": SERIES["aqua"],
+              "shard_zero": SERIES["magenta"], "fsdp": SERIES["green"]}
+SCHED_COLOR = {"gpipe": SERIES["blue"], "1f1b": SERIES["orange"],
+               "interleaved": SERIES["aqua"]}
+OOM = "#b5b4ac"
+SURFACE, INK, INK2, GRID = "#fcfcfb", "#0b0b0b", "#52514e", "#e5e4e0"
+FONT = ("font-family='system-ui,-apple-system,Segoe UI,Helvetica,Arial,"
+        "sans-serif'")
+
+
+def _esc(s: str) -> str:
+    return (str(s).replace("&", "&amp;").replace("<", "&lt;")
+            .replace(">", "&gt;").replace('"', "&quot;"))
+
+
+def _svg(w: int, h: int, body: List[str]) -> str:
+    return "\n".join(
+        [f"<svg xmlns='http://www.w3.org/2000/svg' width='{w}' "
+         f"height='{h}' viewBox='0 0 {w} {h}' role='img'>",
+         f"<rect width='{w}' height='{h}' fill='{SURFACE}'/>"]
+        + body + ["</svg>"]) + "\n"
+
+
+def _text(x, y, s, *, size=12, color=INK, anchor="start",
+          weight="normal") -> str:
+    return (f"<text x='{x:.1f}' y='{y:.1f}' {FONT} font-size='{size}' "
+            f"fill='{color}' text-anchor='{anchor}' "
+            f"font-weight='{weight}'>{_esc(s)}</text>")
+
+
+def _nice_ticks(lo: float, hi: float, n: int = 5) -> List[float]:
+    if hi <= lo:
+        hi = lo + 1.0
+    raw = (hi - lo) / max(n - 1, 1)
+    mag = 10 ** math.floor(math.log10(raw))
+    step = min(s * mag for s in (1, 2, 2.5, 5, 10) if s * mag >= raw)
+    t0 = math.floor(lo / step) * step
+    ticks = []
+    t = t0
+    while t <= hi + 1e-9:
+        if t >= lo - 1e-9:
+            ticks.append(round(t, 10))
+        t += step
+    return ticks or [lo, hi]
+
+
+def _fmt(v: float) -> str:
+    if v == int(v) and abs(v) < 1e6:
+        return str(int(v))
+    return f"{v:g}"
+
+
+class _Axes:
+    """A tiny x/y plot frame: scales, grid, ticks, labels."""
+
+    def __init__(self, w, h, *, ml=56, mr=16, mt=34, mb=42,
+                 logx=False):
+        self.w, self.h = w, h
+        self.ml, self.mr, self.mt, self.mb = ml, mr, mt, mb
+        self.logx = logx
+
+    def fit(self, xs: Sequence[float], ys: Sequence[float],
+            y0: Optional[float] = 0.0):
+        tx = [math.log10(x) for x in xs] if self.logx else list(xs)
+        self.x_lo, self.x_hi = min(tx), max(tx)
+        if self.x_hi == self.x_lo:
+            self.x_hi += 1.0
+        ys = list(ys)
+        if y0 is not None:
+            ys.append(y0)
+        self.y_ticks = _nice_ticks(min(ys), max(ys))
+        self.y_lo, self.y_hi = self.y_ticks[0], self.y_ticks[-1]
+
+    def X(self, x: float) -> float:
+        tx = math.log10(x) if self.logx else x
+        f = (tx - self.x_lo) / (self.x_hi - self.x_lo)
+        return self.ml + f * (self.w - self.ml - self.mr)
+
+    def Y(self, y: float) -> float:
+        f = (y - self.y_lo) / (self.y_hi - self.y_lo)
+        return self.h - self.mb - f * (self.h - self.mt - self.mb)
+
+    def frame(self, title, xlabel, ylabel,
+              x_ticks: Sequence[float]) -> List[str]:
+        b = [_text(self.ml, 20, title, size=13, weight="600")]
+        for yt in self.y_ticks:
+            y = self.Y(yt)
+            b.append(f"<line x1='{self.ml}' y1='{y:.1f}' "
+                     f"x2='{self.w - self.mr}' y2='{y:.1f}' "
+                     f"stroke='{GRID}' stroke-width='1'/>")
+            b.append(_text(self.ml - 6, y + 4, _fmt(yt), size=11,
+                           color=INK2, anchor="end"))
+        for xt in x_ticks:
+            x = self.X(xt)
+            b.append(_text(x, self.h - self.mb + 16, _fmt(xt), size=11,
+                           color=INK2, anchor="middle"))
+        b.append(f"<line x1='{self.ml}' y1='{self.h - self.mb}' "
+                 f"x2='{self.w - self.mr}' y2='{self.h - self.mb}' "
+                 f"stroke='{INK2}' stroke-width='1'/>")
+        b.append(_text((self.ml + self.w - self.mr) / 2,
+                       self.h - 8, xlabel, size=11, color=INK2,
+                       anchor="middle"))
+        b.append(f"<text x='14' y='{(self.mt + self.h - self.mb) / 2:.1f}'"
+                 f" {FONT} font-size='11' fill='{INK2}' "
+                 f"text-anchor='middle' transform='rotate(-90 14 "
+                 f"{(self.mt + self.h - self.mb) / 2:.1f})'>"
+                 f"{_esc(ylabel)}</text>")
+        return b
+
+    def polyline(self, pts: Sequence[Tuple[float, float]], color: str,
+                 *, dash: str = "") -> List[str]:
+        """2px line + 8px markers; None-y gaps split the line."""
+        out = []
+        seg: List[str] = []
+        d = f" stroke-dasharray='{dash}'" if dash else ""
+        for x, y in pts:
+            if y is None:
+                if len(seg) > 1:
+                    out.append(f"<polyline points='{' '.join(seg)}' "
+                               f"fill='none' stroke='{color}' "
+                               f"stroke-width='2'{d}/>")
+                seg = []
+                continue
+            seg.append(f"{self.X(x):.1f},{self.Y(y):.1f}")
+        if len(seg) > 1:
+            out.append(f"<polyline points='{' '.join(seg)}' fill='none' "
+                       f"stroke='{color}' stroke-width='2'{d}/>")
+        for x, y in pts:
+            if y is not None:
+                out.append(
+                    f"<circle cx='{self.X(x):.1f}' cy='{self.Y(y):.1f}' "
+                    f"r='4' fill='{color}' stroke='{SURFACE}' "
+                    f"stroke-width='2'><title>{_esc(f'{x:g}: {y:g}')}"
+                    f"</title></circle>")
+        return out
+
+
+def _legend(x, y, entries: Sequence[Tuple[str, str]],
+            dx: int = 110) -> List[str]:
+    out = []
+    for i, (label, color) in enumerate(entries):
+        cx = x + i * dx
+        out.append(f"<rect x='{cx}' y='{y - 9}' width='14' height='4' "
+                   f"rx='2' fill='{color}'/>")
+        out.append(_text(cx + 20, y, label, size=11, color=INK2))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# figure builders
+# --------------------------------------------------------------------- #
+
+def fig_schedule_curves(record: dict, scenario: str, field: str,
+                        title: str, ylabel: str) -> str:
+    rows = record["scenarios"][scenario]["rows"]
+    ms = sorted({r["n_micro"] for r in rows})
+    scheds = [s for s in SCHED_COLOR if any(r["schedule"] == s
+                                            for r in rows)]
+    ax = _Axes(620, 340, logx=True)
+    ys = [r[field] for r in rows if r[field] is not None]
+    avail = rows[0]["mem_avail_gb"] if field == "mem_gb" else None
+    ax.fit(ms, ys + ([avail] if avail else []),
+           y0=0.0 if field != "mem_gb" else None)
+    body = ax.frame(title, "microbatches m (log)", ylabel, ms)
+    if avail:
+        y = ax.Y(avail)
+        body.append(f"<line x1='{ax.ml}' y1='{y:.1f}' "
+                    f"x2='{ax.w - ax.mr}' y2='{y:.1f}' stroke='{INK2}' "
+                    f"stroke-width='1' stroke-dasharray='6 4'/>")
+        body.append(_text(ax.w - ax.mr, y - 6, "GPU memory", size=10,
+                          color=INK2, anchor="end"))
+    for s in scheds:
+        pts = [(m, next(r[field] for r in rows
+                        if r["n_micro"] == m and r["schedule"] == s))
+               for m in ms]
+        body += ax.polyline(pts, SCHED_COLOR[s])
+        lab = [(x, y) for x, y in pts if y is not None
+               and ax.X(x) < ax.w - 96]
+        if lab:
+            x, y = lab[-1]
+            body.append(_text(ax.X(x) + 8, ax.Y(y) - 8, s, size=11,
+                              color=INK2))
+    body += _legend(ax.ml, ax.h - ax.mb + 34,
+                    [(s, SCHED_COLOR[s]) for s in scheds])
+    return _svg(ax.w, ax.h + 10, body)
+
+
+def fig_latency_sweep(record: dict) -> str:
+    rows = record["points"]
+    series = [("pipeshard@all", "pipeshard_all", TECH_COLOR["pipeshard"],
+               ""),
+              ("data@all", "data_all", TECH_COLOR["data"], ""),
+              ("best data pair", "data_best_pair", TECH_COLOR["data"],
+               "5 4"),
+              ("best single site", "best_single_site",
+               TECH_COLOR["zero2"], "5 4")]
+    lats = [r["latency_ms"] for r in rows]
+    ys = [r[k] for _, k, _, _ in series for r in rows
+          if r[k] is not None]
+    ax = _Axes(640, 360, logx=True)
+    ax.fit(lats, ys)
+    kind, n = record["kind"], record["n"]
+    body = ax.frame(
+        f"Latency sweep — {kind}{n} / {record['mix']} / "
+        f"{record['model']} (swept "
+        f"{'middle' if kind == 'line' else 'closing'} edge)",
+        "swept edge RTT ms (log)", "TFLOP/s",
+        [l for l in (0.1, 1, 10, 100) if min(lats) <= l <= max(lats)])
+    for label, key, color, dash in series:
+        pts = [(r["latency_ms"], r[key]) for r in rows]
+        body += ax.polyline(pts, color, dash=dash)
+    for f in record.get("flips", []):
+        lo, hi = f["between_ms"]
+        x = ax.X(math.sqrt(lo * hi))
+        tip = _esc(f"{f['from']} → {f['to']}")
+        body.append(f"<line x1='{x:.1f}' y1='{ax.mt}' x2='{x:.1f}' "
+                    f"y2='{ax.h - ax.mb}' stroke='{INK2}' "
+                    f"stroke-width='1' stroke-dasharray='2 4'>"
+                    f"<title>{tip}</title></line>")
+    body += _legend(ax.ml, ax.h - ax.mb + 34,
+                    [(lbl, c) for lbl, _, c, _ in series], dx=130)
+    return _svg(ax.w, ax.h + 10, body)
+
+
+def fig_winner_map(record: dict, model: str) -> str:
+    entries = [e for e in record["entries"] if e["model"] == model]
+    regimes = sorted({e["regime"] for e in entries},
+                     key=lambda r: next(x["latency_ms"] for x in entries
+                                        if x["regime"] == r))
+    mixes = sorted({e["mix"] for e in entries})
+    topos = sorted({(e["kind"], e["n"]) for e in entries})
+    cell, row_h = 46, 22
+    label_w, panel_gap, top = 72, 24, 56
+    panel_w = label_w + len(mixes) * cell
+    w = 16 + len(regimes) * (panel_w + panel_gap)
+    h = top + len(topos) * row_h + 60
+    body = [_text(16, 22, f"Winner map — {model} "
+                  f"(balance={record['balance']})", size=13,
+                  weight="600")]
+    by = {(e["regime"], e["kind"], e["n"], e["mix"]): e for e in entries}
+    for pi, regime in enumerate(regimes):
+        x0 = 16 + pi * (panel_w + panel_gap)
+        lat = next(e["latency_ms"] for e in entries
+                   if e["regime"] == regime)
+        body.append(_text(x0 + label_w, 44,
+                          f"{regime} ({lat:g} ms)", size=11,
+                          weight="600", color=INK2))
+        for ci, mix in enumerate(mixes):
+            body.append(_text(x0 + label_w + ci * cell + cell / 2,
+                              top - 2, mix, size=9, color=INK2,
+                              anchor="middle"))
+        for ri, (kind, n) in enumerate(topos):
+            y = top + ri * row_h
+            body.append(_text(x0 + label_w - 6, y + 15,
+                              f"{kind}{n}", size=10, color=INK2,
+                              anchor="end"))
+            for ci, mix in enumerate(mixes):
+                e = by.get((regime, kind, n, mix))
+                win = (e or {}).get("winner")
+                color = OOM if win is None else \
+                    TECH_COLOR.get(win["technique"], OOM)
+                tip = "no data" if e is None else (
+                    "OOM" if win is None else
+                    f"{win['key']} — {win['tflops']:g} TFLOP/s")
+                body.append(
+                    f"<rect x='{x0 + label_w + ci * cell + 1}' "
+                    f"y='{y + 1}' width='{cell - 2}' "
+                    f"height='{row_h - 2}' rx='3' fill='{color}'>"
+                    f"<title>{_esc(tip)}</title></rect>")
+                if win and win.get("schedule", "gpipe") != "gpipe":
+                    body.append(_text(
+                        x0 + label_w + ci * cell + cell / 2, y + 15,
+                        {"1f1b": "1F", "interleaved": "IL"}.get(
+                            win["schedule"], win["schedule"][:2]),
+                        size=9, color=SURFACE, anchor="middle",
+                        weight="600"))
+    techs = sorted({(e["winner"] or {}).get("technique") for e in entries
+                    if e["winner"]})
+    leg = [(t, TECH_COLOR.get(t, OOM)) for t in techs] + [("OOM", OOM)]
+    body += _legend(16, h - 28, leg, dx=96)
+    body.append(_text(16, h - 10, "1F / IL cell tags: the winning "
+                      "pipeline schedule is 1F1B / interleaved "
+                      "(docs/schedules.md)", size=10, color=INK2))
+    return _svg(w, h, body)
+
+
+# --------------------------------------------------------------------- #
+
+def render_all(src: str, out: str, mode: str = "full",
+               print_fn=print) -> List[str]:
+    """Render every recognized artifact of ``mode``; returns the list of
+    SVG paths written."""
+    os.makedirs(out, exist_ok=True)
+    written = []
+
+    def emit(name: str, svg: str):
+        path = os.path.join(out, name)
+        with open(path, "w") as f:
+            f.write(svg)
+        written.append(path)
+        print_fn(f"wrote {path}")
+
+    p = os.path.join(src, f"pipeline_schedules_{mode}.json")
+    if os.path.exists(p):
+        rec = json.load(open(p))
+        emit(f"schedule_steptime_{mode}.svg", fig_schedule_curves(
+            rec, "bubble", "step_s",
+            "Schedule ablation — step time vs microbatches "
+            "(gpt2m, 3-site A30 metro line)", "step seconds"))
+        emit(f"schedule_memory_{mode}.svg", fig_schedule_curves(
+            rec, "memory", "mem_gb",
+            "Schedule ablation — activation stash vs microbatches "
+            "(gpt2L b52, 3-site RTX line)", "memory GB/GPU"))
+    for p in sorted(glob.glob(
+            os.path.join(src, f"latency_sweep_*_{mode}.json"))):
+        rec = json.load(open(p))
+        emit(f"latency_{rec['kind']}{rec['n']}_{mode}.svg",
+             fig_latency_sweep(rec))
+    p = os.path.join(src, f"topology_sweep_{mode}.json")
+    if os.path.exists(p):
+        rec = json.load(open(p))
+        for model in sorted({e["model"] for e in rec["entries"]}):
+            emit(f"winners_{model}_{mode}.svg",
+                 fig_winner_map(rec, model))
+    return written
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--src", default=os.path.join("benchmarks", "out"))
+    ap.add_argument("--out", default=os.path.join("docs", "figs"))
+    ap.add_argument("--mode", default="full", choices=("full", "smoke"),
+                    help="which artifact generation to render")
+    args = ap.parse_args(argv)
+    written = render_all(args.src, args.out, args.mode)
+    if not written:
+        print(f"render_figs: no {args.mode} artifacts under {args.src} "
+              f"— run the benchmarks first "
+              f"(benchmarks/topology_sweep.py, latency_sweep.py, "
+              f"pipeline_ablation.py --schedules)", file=sys.stderr)
+        return 1
+    print(f"render_figs: {len(written)} figures -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
