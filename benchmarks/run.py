@@ -37,6 +37,8 @@ def main() -> None:
 
     print("\n===== topology_sweep (winner maps, smoke) =====")
     n_fail += topology_sweep.run(smoke=True)
+    print("\n===== topology_sweep (extended technique pool, smoke) =====")
+    n_fail += topology_sweep.run(smoke=True, techniques="all")
     print("\n===== latency_sweep (Fig.5-style curves, smoke) =====")
     n_fail += latency_sweep.run(smoke=True)
 

@@ -9,12 +9,17 @@ Table-I latency regimes, and emits per-regime winner maps
     PYTHONPATH=src python benchmarks/topology_sweep.py --smoke
     PYTHONPATH=src python benchmarks/topology_sweep.py            # full
     PYTHONPATH=src python benchmarks/topology_sweep.py --exact    # no pruning
+    PYTHONPATH=src python benchmarks/topology_sweep.py --smoke --techniques all
 
 ``--smoke`` covers N∈{2,3} ring+hub in seconds (the CI gate) and
 cross-checks every pruned winner against the exhaustive search; the
 full grid covers N∈{2..6} × 3 kinds × 4 mixes × 2 models × 4 regimes.
 Pipeshard stages are TFLOP-weighted by default (``--balance even``
-restores the paper's equal splits).  See docs/benchmarks.md.
+restores the paper's equal splits).  ``--techniques all`` widens the
+pool to the shard_zero/fsdp specs (docs/cost-model.md): winner cells a
+beyond-paper technique takes are tagged †, and the run fails loudly
+when no extended cell ever wins (a mispriced-spec guard, wired into
+CI).  See docs/benchmarks.md.
 """
 from __future__ import annotations
 
@@ -33,15 +38,20 @@ from benchmarks.sweep_common import (LATENCY_REGIMES, TOPOLOGY_KINDS,
                                      build_topology, md_table,
                                      write_outputs)
 from repro.configs import get_config
-from repro.core.costmodel import paper_workload
+from repro.core.costmodel import (ALL_TECHNIQUES, TECHNIQUES,
+                                  paper_workload)
 from repro.core.search import PlanSearch, Scored
 
-SMOKE_GRID = dict(ns=(2, 3), kinds=("ring", "hub"), mixes=("a30+t4",),
-                  models=("gpt2m",), regimes=("metro", "transatlantic"))
+SMOKE_GRID = dict(ns=(2, 3), kinds=("ring", "hub"),
+                  mixes=("a30+t4", "rtx+t4"),
+                  models=("gpt2m", "gpt2L"),
+                  regimes=("metro", "transatlantic"))
 FULL_GRID = dict(ns=(2, 3, 4, 5, 6), kinds=TOPOLOGY_KINDS,
                  mixes=("a30", "a30+t4", "rtx+t4", "a30+rtx"),
                  models=("gpt2m", "gpt2L"),
                  regimes=tuple(LATENCY_REGIMES))
+
+TECHNIQUE_POOLS = {"paper": TECHNIQUES, "all": ALL_TECHNIQUES}
 
 
 def _scored_record(search: PlanSearch, s: Optional[Scored]) -> Optional[dict]:
@@ -57,16 +67,19 @@ def _scored_record(search: PlanSearch, s: Optional[Scored]) -> Optional[dict]:
         "stage_layers": (None if placement.stage_layers is None
                          else list(placement.stage_layers)),
         "schedule": s.candidate.schedule,
+        "extended": s.candidate.technique not in TECHNIQUES,
         "tflops": round(s.tflops, 4),
     }
 
 
 def sweep_entry(kind: str, n: int, mix: str, model: str, regime: str, *,
-                balance: str, exact: bool, check: bool) -> dict:
+                balance: str, exact: bool, check: bool,
+                techniques: str = "paper") -> dict:
     """Search one grid point; returns the winner-map entry."""
     topo = build_topology(kind, n, mix, LATENCY_REGIMES[regime])
     wl = paper_workload(get_config(model))
-    search = PlanSearch(wl, topo, stage_balance=balance, prune=not exact)
+    search = PlanSearch(wl, topo, stage_balance=balance, prune=not exact,
+                        techniques=TECHNIQUE_POOLS[techniques])
     t0 = time.perf_counter()
     ranked = search.search()
     elapsed_ms = (time.perf_counter() - t0) * 1e3
@@ -96,10 +109,12 @@ def _cell(entry: dict) -> str:
     if w is None:
         return "OOM"
     sites = "+".join(str(i) for i in w["sites"])
-    return f"{w['technique']}@{sites} ({w['tflops']:.0f})"
+    tag = " †" if w.get("extended") else ""
+    return f"{w['technique']}@{sites} ({w['tflops']:.0f}){tag}"
 
 
-def to_markdown(entries: List[dict], grid: dict, *, balance: str) -> str:
+def to_markdown(entries: List[dict], grid: dict, *, balance: str,
+                techniques: str = "paper") -> str:
     """Winner-map tables: one per (model, regime), rows = topology,
     cols = GPU mix, cell = winning technique@sites (TFLOP/s)."""
     by_key: Dict[tuple, dict] = {
@@ -108,10 +123,15 @@ def to_markdown(entries: List[dict], grid: dict, *, balance: str) -> str:
     out = ["# Multi-site winner maps",
            "",
            f"Winning plan per (topology × GPU mix), from the pruned "
-           f"`PlanSearch` with `stage_balance={balance!r}`.  Cells are "
+           f"`PlanSearch` with `stage_balance={balance!r}` over the "
+           f"{techniques!r} technique pool.  Cells are "
            f"`technique@sites (TFLOP/s)`; site GPUs cycle through the mix "
            f"(two cards per site).  N=2 ring/hub degenerate to the paper's "
            f"two-VM single-edge shape.", ""]
+    if techniques == "all":
+        out += ["Cells tagged † are won by a beyond-paper technique "
+                "(`shard_zero` / `fsdp`, docs/cost-model.md) the "
+                "paper's four-technique pool cannot price.", ""]
     for model in grid["models"]:
         out.append(f"## {model}")
         for regime in grid["regimes"]:
@@ -132,9 +152,11 @@ def to_markdown(entries: List[dict], grid: dict, *, balance: str) -> str:
 
 def run(*, smoke: bool = False, out: Optional[str] = None,
         balance: str = "tflops", exact: bool = False,
-        print_fn=print) -> int:
+        techniques: str = "paper", print_fn=print) -> int:
     """Run the sweep; returns the number of failures (pruned/exhaustive
-    winner mismatches in smoke mode, or grid points that errored)."""
+    winner mismatches in smoke mode, grid points that errored, or — over
+    the "all" pool — an extended pool in which no beyond-paper technique
+    ever wins a cell, the loud guard against silently mispriced specs)."""
     grid = SMOKE_GRID if smoke else FULL_GRID
     entries, n_fail = [], 0
     t0 = time.perf_counter()
@@ -145,7 +167,8 @@ def run(*, smoke: bool = False, out: Optional[str] = None,
                     for mix in grid["mixes"]:
                         e = sweep_entry(kind, n, mix, model, regime,
                                         balance=balance, exact=exact,
-                                        check=smoke and not exact)
+                                        check=smoke and not exact,
+                                        techniques=techniques)
                         entries.append(e)
                         if e.get("matches_exhaustive") is False:
                             n_fail += 1
@@ -155,17 +178,29 @@ def run(*, smoke: bool = False, out: Optional[str] = None,
                                      f"{e['regime']}")
     elapsed = time.perf_counter() - t0
     mode = "smoke" if smoke else "full"
+    if techniques == "all":
+        n_ext = sum(1 for e in entries
+                    if (e["winner"] or {}).get("extended"))
+        print_fn(f"# extended-technique winners: {n_ext}/{len(entries)} "
+                 f"cells")
+        if n_ext == 0:
+            n_fail += 1
+            print_fn("CLAIM-FAIL: the extended pool never beat the "
+                     "paper's four techniques in any cell — shard_zero/"
+                     "fsdp pricing is suspect (docs/cost-model.md)")
+    mode_stem = f"topology_sweep_{mode}" if techniques == "paper" \
+        else f"topology_sweep_all_{mode}"
     print_fn(f"# topology sweep ({mode}): {len(entries)} grid points, "
-             f"{elapsed:.1f}s, balance={balance}, "
+             f"{elapsed:.1f}s, balance={balance}, pool={techniques}, "
              f"{'exhaustive' if exact else 'pruned'}")
-    md = to_markdown(entries, grid, balance=balance)
+    md = to_markdown(entries, grid, balance=balance, techniques=techniques)
     record = {"mode": mode, "balance": balance, "exact": exact,
+              "techniques": techniques,
               "elapsed_s": round(elapsed, 2), "entries": entries}
     if out is None:
         out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "out")
-    write_outputs(out, f"topology_sweep_{mode}", record, md,
-                  print_fn=print_fn)
+    write_outputs(out, mode_stem, record, md, print_fn=print_fn)
     for line_ in md.splitlines():
         print_fn(line_)
     return n_fail
@@ -183,9 +218,14 @@ def main(argv=None) -> int:
     ap.add_argument("--exact", action="store_true",
                     help="exactness escape hatch: exhaustive search, "
                          "no pruning")
+    ap.add_argument("--techniques", choices=tuple(TECHNIQUE_POOLS),
+                    default="paper",
+                    help="technique pool: the paper's four, or 'all' to "
+                         "add the shard_zero/fsdp specs; 'all' fails "
+                         "loudly when no extended cell ever wins")
     args = ap.parse_args(argv)
     return run(smoke=args.smoke, out=args.out, balance=args.balance,
-               exact=args.exact)
+               exact=args.exact, techniques=args.techniques)
 
 
 if __name__ == "__main__":

@@ -23,7 +23,8 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--model", default="gpt2m")
 ap.add_argument("--live", action="store_true",
                 help="probe with real epsilon-epoch training runs")
-ap.add_argument("--topology", choices=["edge3", "ring3", "hub4", "line3"],
+ap.add_argument("--topology",
+                choices=["edge3", "ring3", "hub4", "line3", "lan3"],
                 help="full PlanSearch over an example N-site topology "
                      "(with --live: probe the searched placement live)")
 ap.add_argument("--devices", type=int, default=8)
@@ -35,10 +36,19 @@ ap.add_argument("--balance", choices=["even", "tflops"], default="even",
 ap.add_argument("--exact", action="store_true",
                 help="[--topology only] exhaustive PlanSearch "
                      "(no pruning)")
+ap.add_argument("--techniques", choices=["paper", "all"], default="paper",
+                help="technique pool: the paper's four, or 'all' to add "
+                     "the shard_zero/fsdp specs (docs/cost-model.md) — "
+                     "with --topology lan3 --model gpt2L the extended "
+                     "pool finds a shard_zero winner the paper's "
+                     "selector misses")
 args = ap.parse_args()
 if (args.balance != "even" or args.exact) and not args.topology:
     ap.error("--balance/--exact only apply to the --topology PlanSearch "
              "modes (Algorithm 1 probes the paper's fixed plan set)")
+if args.techniques != "paper" and args.live:
+    ap.error("--techniques all is analytic-only here (live probes of the "
+             "extended pool go through launch.mesh.placement_mesh)")
 if args.live and args.topology and args.topology != "line3":
     ap.error("--live --topology currently supports line3 (single-GPU "
              "sites, so the staged mesh fits forced host devices)")
@@ -96,25 +106,35 @@ EXAMPLE_TOPOLOGIES = {
         [Site(("A30",), name="A"), Site(("T4",), name="B"),
          Site(("T4",), name="C")],
         [Link(20e-3, 3.0), Link(20e-3, 3.0)]),
+    # memory-tight metro LAN: three 16GB T4 sites a campus apart.  With
+    # --model gpt2L the replicated-state plans OOM and the extended pool
+    # (--techniques all) finds the shard_zero hybrid the paper's
+    # four-technique selector cannot even price (docs/cost-model.md).
+    "lan3": lambda: line(
+        "lan3", [Site(("T4", "T4"), name=n) for n in "ABC"],
+        [Link(0.1e-3, 3.0), Link(0.1e-3, 3.0)]),
 }
 
 
 def topology_search():
+    from repro.core.costmodel import ALL_TECHNIQUES, TECHNIQUES
     from repro.core.plans import get_plan
     from repro.launch.analytic import placement_degrees
 
     topo = EXAMPLE_TOPOLOGIES[args.topology]()
     wl = paper_workload(get_config(args.model))
     print(topo.describe())
+    pool = ALL_TECHNIQUES if args.techniques == "all" else TECHNIQUES
     search = PlanSearch(wl, topo, stage_balance=args.balance,
-                        prune=not args.exact)
+                        prune=not args.exact, techniques=pool)
     ranked = search.search()
-    print(f"\nPlanSearch over {len(ranked)} candidates ({args.model}):")
+    print(f"\nPlanSearch over {len(ranked)} candidates ({args.model}, "
+          f"{args.techniques} pool):")
     for s in ranked[:8]:
         perf = f"{s.tflops:.2f}" if s.feasible else "OOM"
         print(f"  {s.candidate.key:30s} {perf:>8s} TFLOP/s")
     best = search.best()
-    alg1 = search.select(delta=args.delta)
+    alg1 = search.select(delta=args.delta, extended=False)
     if best is None:
         print("\nbest overall : none — every candidate OOMs on this "
               "topology (need more GPU memory)")
@@ -124,6 +144,18 @@ def topology_search():
           f"({best.tflops:.2f} TFLOP/s)")
     print(f"Algorithm 1  : {alg1.technique}@VMs{alg1.vms} "
           f"(probe set restricted to the paper's)")
+    if args.techniques == "all":
+        ext = search.select(delta=args.delta, extended=True)
+        print(f"Algorithm 1+ : {ext.technique}@VMs{ext.vms} "
+              f"(extended probe set: +shard_zero/fsdp)")
+        paper_best = PlanSearch(wl, topo, stage_balance=args.balance,
+                                prune=not args.exact).best()
+        if paper_best is not None and \
+                best.tflops > (paper_best.tflops or 0):
+            print(f"paper pool   : {paper_best.candidate.key} "
+                  f"({paper_best.tflops:.2f} TFLOP/s) — the extended "
+                  f"pool wins by "
+                  f"{best.tflops / paper_best.tflops - 1:+.1%}")
     plan_name = "shard_zero" if best.candidate.technique == "shard" \
         else best.candidate.technique
     placement = search.placement(best.candidate)

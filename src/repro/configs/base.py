@@ -263,7 +263,13 @@ class RunConfig:
     model: ModelConfig
     shape: ShapeConfig
     train: TrainConfig = field(default_factory=TrainConfig)
-    plan: str = "shard"             # "data" | "zero2" | "shard" | "pipeshard"
+    plan: str = "shard"             # any repro.core.plans.PLANS key
+
+    def __post_init__(self):
+        # validate against the plan registry instead of a hand-kept
+        # literal list (lazy import: core.plans imports this module)
+        from repro.core.plans import get_plan
+        get_plan(self.plan)
 
 
 def cfg_summary(cfg: ModelConfig) -> str:

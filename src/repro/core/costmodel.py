@@ -16,6 +16,15 @@ a thin shim whose ``topology()`` is the N=2 special case, so every paper
 artifact (PAPER_CLUSTERS, benchmarks, Algorithm 1) keeps its exact shape
 and numbers.
 
+Per-technique pricing is a registry of composable cost components
+(``TECHNIQUE_SPECS``, docs/cost-model.md): each ``TechniqueSpec``
+assembles compute, collective, p2p (with a ``carrier_dtype`` byte
+knob), and memory (explicit ``MemoryModel`` replication fractions)
+terms over a shared ``CostContext``.  The paper's four specs price
+bit-for-bit what the pre-registry chain did; the beyond-paper
+``shard_zero`` and ``fsdp`` specs make every plan ``core.plans.PLANS``
+executes also *recommendable* by the search.
+
 The same machinery prices TPU meshes (ICI vs DCN) for plan selection when
 no hardware is attached — the dry-run roofline (launch/roofline.py) uses
 compiled HLO instead wherever it can.
@@ -24,7 +33,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 from repro.configs.base import ModelConfig
 from repro.core.topology import (GPUS, GPUSpec, Link, PCIE, Site,
@@ -139,7 +149,34 @@ def paper_workload(cfg: ModelConfig, *, global_batch: int = 32) -> Workload:
 
 LOG2E = 1.4426950408889634
 
+# The paper's four techniques — Algorithm 1's pool, and the default
+# everywhere a technique tuple is expected (paper artifacts keep their
+# exact numbers).  ``ALL_TECHNIQUES`` (defined with the registry below)
+# appends the beyond-paper ``shard_zero`` and ``fsdp`` specs the search
+# can opt into.
 TECHNIQUES = ("data", "zero2", "shard", "pipeshard")
+
+# Inter-stage activation carrier dtypes the Pipeshard p2p term can be
+# priced at.  "fp32" is the legacy baseline (the XLA-CPU-safe default of
+# ``core.pipeline.make_pipeline_loss``); "bf16" halves the wire bytes —
+# the real-accelerator carrier the runtime supports (docs/cost-model.md).
+CARRIER_DTYPES = ("fp32", "bf16")
+
+_CARRIER_SCALE = {"fp32": 1.0, "bf16": 0.5}
+
+
+def carrier_scale(carrier_dtype: str) -> float:
+    """Byte multiplier of an inter-stage carrier dtype vs the fp32
+    baseline (``1.0`` for fp32, ``0.5`` for bf16).
+
+    Raises:
+        ValueError: unknown carrier dtype.
+    """
+    try:
+        return _CARRIER_SCALE[carrier_dtype]
+    except KeyError:
+        raise ValueError(f"unknown carrier_dtype {carrier_dtype!r}; "
+                         f"expected one of {CARRIER_DTYPES}") from None
 
 # Pipeline tick-order schedules (docs/schedules.md).  "gpipe" is the
 # paper's measured Alpa behavior (all forwards, then all backwards —
@@ -322,6 +359,16 @@ def _allreduce_time(bytes_total: float, n: int, link: Link) -> float:
         + 2 * (n - 1) / n * bytes_total / (link.effective_gbps * 1e9)
 
 
+def _gather_time(bytes_total: float, n: int, link: Link) -> float:
+    """Ring all-gather or reduce-scatter: exactly half an all-reduce —
+    (n-1) latency hops and (n-1)/n × bytes (an all-reduce IS a
+    reduce-scatter followed by an all-gather)."""
+    if n <= 1:
+        return 0.0
+    return (n - 1) * link.latency_s \
+        + (n - 1) / n * bytes_total / (link.effective_gbps * 1e9)
+
+
 def _collective_time(bytes_total: float, n: int, topo: Topology,
                      sites: Sequence[int]) -> float:
     """All-reduce over a site subset: the ring crosses every site pair's
@@ -333,17 +380,469 @@ def _collective_time(bytes_total: float, n: int, topo: Topology,
                for l in topo.spanning_links(sites))
 
 
+def _gather_collective_time(bytes_total: float, n: int, topo: Topology,
+                            sites: Sequence[int]) -> float:
+    """All-gather / reduce-scatter over a site subset, priced like
+    ``_collective_time`` on the worst spanning link."""
+    if len(sites) <= 1:
+        return _gather_time(bytes_total, n, topo.sites[sites[0]].intra)
+    return max(_gather_time(bytes_total, n, l)
+               for l in topo.spanning_links(sites))
+
+
+# --------------------------------------------------------------------- #
+# the technique cost registry (docs/cost-model.md)
+#
+# ``technique_step_cost`` used to be a four-way if/elif chain; it is now
+# a dispatch over ``TECHNIQUE_SPECS`` — one ``TechniqueSpec`` per
+# technique, built from four composable cost components sharing a
+# ``CostContext``:
+#
+#   compute    pace-setter seconds (+ pipeline bubble)
+#   collective per-collective volume terms on the worst spanning link
+#   p2p        per-boundary microbatch carriers (pipeline only), scaled
+#              by the carrier dtype
+#   memory     params/grads/optimizer-state replication expressed as
+#              explicit per-technique ``MemoryModel`` fractions
+#
+# The four paper specs price bit-for-bit what the legacy chain did
+# (property-tested in tests/test_costmodel.py); ``shard_zero`` and
+# ``fsdp`` are the beyond-paper specs that make the search able to
+# recommend every plan ``core.plans.PLANS`` can execute.
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class _PipelineGeometry:
+    """Derived pipeline quantities shared by the pipeshard components:
+    validated stage order, schedule kind, per-chunk layer split, and the
+    per-stage compute pool."""
+    order: Tuple[int, ...]
+    n_stages: int
+    kind: str
+    virt: int
+    n_chunks: int
+    stage_sites: Tuple[Site, ...]
+    mesh_tflops: Tuple[float, ...]
+    bubble: float
+    split: Optional[Tuple[int, ...]]      # None = legacy even split
+    stage_l: Optional[Tuple[int, ...]]    # per-stage layer totals
+
+
+@dataclass
+class CostContext:
+    """Everything a cost component may look at for one
+    (workload × placement) pricing.
+
+    Attributes:
+        wl: the workload being priced.
+        topo: the N-site topology.
+        sel: participating site indices.
+        sites: the participating ``Site`` objects, in ``sel`` order.
+        n: GPU pool size.
+        tp: intra-site tensor-parallel degree available to hybrid
+            techniques — the *smallest* participating site's GPU count
+            (worst case for both memory and collective volume).
+        flops: model FLOPs of one step.
+        slowest: the pace-setting GPU's FLOP/s.
+        g_bytes / p_bytes / state: gradient, bf16-param, and fp32 train
+            state (p+g+m+v) bytes of the model.
+        act: activation bytes per GPU at this pool size.
+        ovh: fixed framework overhead GB.
+        mem_avail: smallest participating GPU's memory in GB.
+        stage_order / stage_balance / stage_layers / schedule: the
+            Pipeshard placement knobs (ignored by flat-pool components).
+        carrier_scale: byte multiplier of the inter-stage carrier dtype
+            (``carrier_scale()``; 1.0 = legacy fp32 baseline).
+    """
+    wl: Workload
+    topo: Topology
+    sel: Tuple[int, ...]
+    sites: List[Site]
+    n: int
+    tp: int
+    flops: float
+    slowest: float
+    g_bytes: float
+    p_bytes: float
+    state: float
+    act: float
+    ovh: float
+    mem_avail: float
+    stage_order: Optional[Sequence[int]] = None
+    stage_balance: str = "even"
+    stage_layers: Optional[Sequence[int]] = None
+    schedule: str = "gpipe"
+    carrier_scale: float = 1.0
+    _geom: Optional[_PipelineGeometry] = field(default=None, repr=False)
+
+    @property
+    def act_stream_bytes(self) -> float:
+        """Bytes of one full activation tensor crossing the network
+        (the per-layer intra-op all-reduce payload and the Pipeshard
+        stage-boundary carrier, before any carrier-dtype scaling)."""
+        return self.wl.tokens_per_step * self.wl.cfg.d_model * 2
+
+    def pipeline(self) -> _PipelineGeometry:
+        """Validate + derive the pipeline geometry (cached).  Raises the
+        same errors the legacy chain did: bad stage orders, splits that
+        do not partition the stack, unknown balance modes."""
+        if self._geom is not None:
+            return self._geom
+        wl, topo, sel = self.wl, self.topo, self.sel
+        order = sel if self.stage_order is None \
+            else topo.select(self.stage_order)
+        if sorted(order) != sorted(sel):
+            raise ValueError(
+                f"stage_order {order} is not a permutation of sites {sel}")
+        n_stages = max(len(order), 1)
+        kind, virt = parse_schedule(self.schedule)
+        n_chunks = n_stages * virt
+        stage_sites = tuple(topo.sites[i] for i in order)
+        stage_tf = stage_compute_tflops(topo, order)
+        mesh_tflops = tuple(t * 1e12 for t in stage_tf)
+        bubble = pipeline_bubble_fraction(self.schedule, n_stages,
+                                          wl.microbatches)
+        if self.stage_layers is not None:
+            split: Optional[Tuple[int, ...]] = tuple(self.stage_layers)
+            if len(split) != n_chunks or min(split, default=0) < 1 \
+                    or sum(split) != wl.cfg.n_layers:
+                raise ValueError(
+                    f"stage_layers {split} does not partition "
+                    f"{wl.cfg.n_layers} layers into {n_chunks} "
+                    f"{self.schedule} chunks")
+        elif self.stage_balance == "tflops":
+            # interleaved: chunk c runs on stage c % n_stages, so its
+            # quota follows that stage's compute
+            split = balanced_stage_layers(
+                wl.cfg.n_layers,
+                [stage_tf[c % n_stages] for c in range(n_chunks)])
+        elif self.stage_balance == "even":
+            split = None        # legacy continuous flops/n_stages split
+        else:
+            raise ValueError(f"stage_balance {self.stage_balance!r} not "
+                             f"in {STAGE_BALANCE_MODES}")
+        if split is None:
+            stage_l = None
+        else:
+            # per-stage layer totals (a stage owns every chunk with
+            # c % n_stages == its index; v == 1 degrades to the split)
+            stage_l = tuple(sum(split[c] for c in range(n_chunks)
+                                if c % n_stages == s)
+                            for s in range(n_stages))
+        self._geom = _PipelineGeometry(
+            tuple(order), n_stages, kind, virt, n_chunks, stage_sites,
+            mesh_tflops, bubble, split, stage_l)
+        return self._geom
+
+
+def _make_context(wl: Workload, cluster: ClusterLike,
+                  vms: Optional[Sequence[int]], *,
+                  stage_order: Optional[Sequence[int]] = None,
+                  stage_balance: str = "even",
+                  stage_layers: Optional[Sequence[int]] = None,
+                  schedule: str = "gpipe",
+                  carrier_dtype: str = "fp32") -> CostContext:
+    topo = as_topology(cluster)
+    sel = topo.select(vms)
+    sites = [topo.sites[i] for i in sel]
+    gpus = [GPUS[g] for s in sites for g in s.gpus]
+    n = len(gpus)
+    return CostContext(
+        wl=wl, topo=topo, sel=sel, sites=sites, n=n,
+        tp=min(len(s.gpus) for s in sites),
+        flops=wl.flops_per_step,
+        slowest=min(g.tflops for g in gpus) * 1e12,
+        g_bytes=wl.bytes_grads(),
+        p_bytes=wl.bytes_params(),
+        state=wl.bytes_train_state(),       # fp32 p+g+m+v (Alpa default)
+        act=wl.activation_bytes_per_gpu(n),
+        ovh=wl.OVERHEAD_GB,
+        mem_avail=min(g.mem_gb for g in gpus),
+        stage_order=stage_order, stage_balance=stage_balance,
+        stage_layers=stage_layers, schedule=schedule,
+        carrier_scale=carrier_scale(carrier_dtype))
+
+
+# ---- compute components --------------------------------------------- #
+
+def _pool_compute(ctx: CostContext) -> float:
+    """Flat data-parallel pool: the slowest GPU paces everyone."""
+    return ctx.flops / (ctx.n * ctx.slowest)
+
+
+def _pipeline_compute(ctx: CostContext) -> float:
+    """The slowest (layer-weighted) stage paces every tick, inflated by
+    the schedule's bubble fraction."""
+    g = ctx.pipeline()
+    if g.split is None:
+        return max(ctx.flops / g.n_stages / t for t in g.mesh_tflops) \
+            * (1 + g.bubble)
+    return max(li / ctx.wl.cfg.n_layers * ctx.flops / t
+               for li, t in zip(g.stage_l, g.mesh_tflops)) \
+        * (1 + g.bubble)
+
+
+# ---- collective components ------------------------------------------ #
+
+def _data_collective(ctx: CostContext) -> float:
+    """One gradient all-reduce over the whole pool."""
+    return _collective_time(ctx.g_bytes, ctx.n, ctx.topo, ctx.sel)
+
+
+def _zero2_collective(ctx: CostContext) -> float:
+    """Reduce-scatter grads + all-gather of updated fp16 params + the
+    partitioned fp32 master sync => ~2.2x the Data volume, which is the
+    paper's observed zero2-vs-data degradation ratio (Table II)."""
+    return 2.2 * _collective_time(ctx.g_bytes, ctx.n, ctx.topo, ctx.sel)
+
+
+def _intraop_collective(ctx: CostContext) -> float:
+    """Megatron-style: 4 all-reduces of activations per layer (fwd+bwd)
+    over the whole pool."""
+    return 4 * ctx.wl.cfg.n_layers * _collective_time(
+        ctx.act_stream_bytes, ctx.n, ctx.topo, ctx.sel)
+
+
+def _pipeline_collective(ctx: CostContext) -> float:
+    """Intra-op all-reduces inside each stage's site, over its own intra
+    link, weighted by the stage's layer share; the slowest stage paces."""
+    g = ctx.pipeline()
+    act_bytes = ctx.act_stream_bytes
+    if g.split is None:       # keep the legacy expression bit-for-bit
+        return max(
+            4 * ctx.wl.cfg.n_layers / g.n_stages * _allreduce_time(
+                act_bytes, len(s.gpus), s.intra)
+            for s in g.stage_sites)
+    return max(
+        4 * li * _allreduce_time(act_bytes, len(s.gpus), s.intra)
+        for li, s in zip(g.stage_l, g.stage_sites))
+
+
+def _shard_zero_collective(ctx: CostContext) -> float:
+    """Hybrid intra-op × ZeRO-2: Megatron all-reduces stay *inside* each
+    site (one tensor-parallel group per site over its intra link, each
+    site a data-parallel replica handling 1/n_sites of the batch), plus
+    the ZeRO-2 partition sync across the site replicas — the 2.2x-factor
+    collective of ``zero2`` at 1/tp the volume (grads are already
+    TP-sharded)."""
+    n_rep = len(ctx.sel)
+    share = ctx.act_stream_bytes / n_rep
+    intra = max(4 * ctx.wl.cfg.n_layers
+                * _allreduce_time(share, len(s.gpus), s.intra)
+                for s in ctx.sites)
+    inter = 2.2 * _collective_time(ctx.g_bytes / ctx.tp, n_rep,
+                                   ctx.topo, ctx.sel)
+    return intra + inter
+
+
+def _fsdp_collective(ctx: CostContext) -> float:
+    """ZeRO-3: every layer's params are all-gathered before its forward
+    AND again before its backward (nothing is kept), and grads are
+    reduce-scattered straight into the shard layout — 3x the bf16 param
+    bytes at gather rates, but 2L+1 latency rounds, which is what makes
+    FSDP a LAN/single-site plan and never a WAN one."""
+    layers = ctx.wl.cfg.n_layers
+    return 2 * layers * _gather_collective_time(
+        ctx.p_bytes / layers, ctx.n, ctx.topo, ctx.sel) \
+        + _gather_collective_time(ctx.g_bytes, ctx.n, ctx.topo, ctx.sel)
+
+
+# ---- p2p components ------------------------------------------------- #
+
+def _no_p2p(ctx: CostContext) -> float:
+    """Collective-only techniques send nothing point-to-point."""
+    return 0.0
+
+
+def _pipeline_p2p(ctx: CostContext) -> float:
+    """Per-boundary microbatch activation carriers: each microbatch
+    crosses each stage boundary twice (fwd + bwd), paying that
+    boundary's own link (N=2: the single WAN link).  Byte terms scale
+    with the carrier dtype (``carrier_scale``); latency rounds do not."""
+    g = ctx.pipeline()
+    wl, topo, order = ctx.wl, ctx.topo, g.order
+    carrier_bytes = ctx.act_stream_bytes * ctx.carrier_scale
+    p2p = sum(
+        2 * (wl.microbatches * (carrier_bytes / wl.microbatches)
+             / (topo.link(a, b).effective_gbps * 1e9)
+             + wl.microbatches * topo.link(a, b).latency_s)
+        for a, b in zip(order[:-1], order[1:]))
+    if g.kind == "interleaved" and g.n_stages > 1:
+        # v virtual stages per device: every microbatch walks the
+        # stage ring v times — each forward boundary link v times
+        # and the wrap-around link (last stage back to first)
+        # v - 1 times.  This is the schedule's price: the bubble
+        # shrinks by v, the p2p bill grows by ~v.
+        wrap = topo.link(order[-1], order[0])
+        p2p = g.virt * p2p + (g.virt - 1) * 2 * (
+            carrier_bytes / (wrap.effective_gbps * 1e9)
+            + wl.microbatches * wrap.latency_s)
+    return p2p
+
+
+# ---- memory component ----------------------------------------------- #
+
+def _pipeline_act_factor(ctx: CostContext) -> float:
+    """In-flight microbatches make Pipeshard the memory-hungry plan
+    (paper §IV-G observation 3); 1F1B caps the stash at min(S, m) — the
+    schedule dimension's memory lever (docs/schedules.md)."""
+    inflight = pipeline_inflight_microbatches(
+        ctx.schedule, ctx.pipeline().n_stages, ctx.wl.microbatches)
+    return 1 + 0.5 * inflight
+
+
+@dataclass(frozen=True)
+class MemoryModel:
+    """Per-GPU memory as explicit replication fractions of the train
+    state, instead of per-technique inlined arithmetic.
+
+    The fp32 train state (p+g+m+v, ``Workload.bytes_train_state``) is
+    split into the bf16 param working copy (``Workload.bytes_params``)
+    and the rest (grads + fp32 master + Adam moments, which every
+    ZeRO-style stage partitions together):
+
+    Attributes:
+        params: where the bf16 param copy lives — ``"replicated"``
+            (every GPU holds it all), ``"pool"`` (sharded over all n
+            GPUs), or ``"tp"`` (sharded over the intra-site
+            tensor-parallel group only).
+        rest: where grads + optimizer state live — ``"replicated"`` or
+            ``"pool"``.
+        act_factor: multiplier on the per-GPU activation bytes (1.5 for
+            intra-op all-gather buffers, a schedule-dependent callable
+            for Pipeshard's in-flight stash).
+    """
+    params: str = "replicated"
+    rest: str = "replicated"
+    act_factor: Union[float, Callable[[CostContext], float]] = 1.0
+
+    def state_bytes(self, ctx: CostContext) -> float:
+        """Per-GPU bytes of params + grads + optimizer state."""
+        if self.params == "replicated" and self.rest == "replicated":
+            return ctx.state
+        if self.params == "pool" and self.rest == "pool":
+            return ctx.state / ctx.n
+        if self.params == "replicated" and self.rest == "pool":
+            return ctx.p_bytes + (ctx.state - ctx.p_bytes) / ctx.n
+        if self.params == "tp" and self.rest == "pool":
+            return ctx.p_bytes / ctx.tp \
+                + (ctx.state - ctx.p_bytes) / ctx.n
+        raise ValueError(f"unsupported memory placement "
+                         f"(params={self.params!r}, rest={self.rest!r})")
+
+    def mem_gb(self, ctx: CostContext) -> float:
+        f = self.act_factor(ctx) if callable(self.act_factor) \
+            else self.act_factor
+        return (self.state_bytes(ctx) + f * ctx.act) / 1e9 + ctx.ovh
+
+
+# ---- the registry --------------------------------------------------- #
+
+@dataclass(frozen=True)
+class TechniqueSpec:
+    """A technique's price, assembled from composable cost components.
+
+    Attributes:
+        name: technique name (``core.plans.PLANS`` key).
+        compute: ``(CostContext) -> seconds`` pace-setter term.
+        collective: ``(CostContext) -> seconds`` collective traffic.
+        memory: the per-GPU ``MemoryModel``.
+        p2p: ``(CostContext) -> seconds`` point-to-point traffic
+            (pipeline boundary carriers; zero for flat pools).
+        paper: True for the paper's four Algorithm-1 techniques.
+        summary: one-line description for docs/CLIs.
+    """
+    name: str
+    compute: Callable[[CostContext], float]
+    collective: Callable[[CostContext], float]
+    memory: MemoryModel
+    p2p: Callable[[CostContext], float] = _no_p2p
+    paper: bool = False
+    summary: str = ""
+
+
+TECHNIQUE_SPECS: Dict[str, TechniqueSpec] = {}
+
+
+def register_technique(spec: TechniqueSpec, *,
+                       replace: bool = False) -> TechniqueSpec:
+    """Add a ``TechniqueSpec`` to the registry (docs/cost-model.md
+    walks through adding one).
+
+    Args:
+        spec: the spec to register under ``spec.name``.
+        replace: allow overwriting an existing spec.
+
+    Raises:
+        ValueError: the name is taken and ``replace`` is False.
+    """
+    if spec.name in TECHNIQUE_SPECS and not replace:
+        raise ValueError(f"technique {spec.name!r} already registered; "
+                         f"pass replace=True to override")
+    TECHNIQUE_SPECS[spec.name] = spec
+    return spec
+
+
+register_technique(TechniqueSpec(
+    "data", _pool_compute, _data_collective,
+    MemoryModel("replicated", "replicated", 1.0), paper=True,
+    summary="pure data parallelism: replicated state, grad all-reduce"))
+register_technique(TechniqueSpec(
+    "zero2", _pool_compute, _zero2_collective,
+    # fp16 replica + partitioned fp32 states: the paper's low-memory plan
+    MemoryModel("replicated", "pool", 1.0), paper=True,
+    summary="ZeRO-2: grads + optimizer state partitioned over the pool"))
+register_technique(TechniqueSpec(
+    "shard", _pool_compute, _intraop_collective,
+    # sharded states but activation replicas + all-gather buffers
+    MemoryModel("pool", "pool", 1.5), paper=True,
+    summary="Megatron intra-op: per-layer activation all-reduces"))
+register_technique(TechniqueSpec(
+    "pipeshard", _pipeline_compute, _pipeline_collective,
+    MemoryModel("pool", "pool", _pipeline_act_factor),
+    p2p=_pipeline_p2p, paper=True,
+    summary="inter+intra-op: staged pipeline, intra-op inside each site"))
+register_technique(TechniqueSpec(
+    "shard_zero", _pool_compute, _shard_zero_collective,
+    MemoryModel("tp", "pool", 1.5),
+    summary="intra-op inside each site x ZeRO-2 across sites"))
+register_technique(TechniqueSpec(
+    "fsdp", _pool_compute, _fsdp_collective,
+    MemoryModel("pool", "pool", 1.0),
+    summary="ZeRO-3/FSDP: per-layer param gathers, lowest memory"))
+
+# Paper techniques first so exact-tie stable sorts keep paper winners;
+# the beyond-paper specs extend, never reorder.
+ALL_TECHNIQUES = TECHNIQUES + ("shard_zero", "fsdp")
+assert set(ALL_TECHNIQUES) == set(TECHNIQUE_SPECS)
+
+
+def technique_state_bytes(technique: str, wl: Workload,
+                          cluster: ClusterLike,
+                          vms: Optional[Sequence[int]] = None) -> float:
+    """Per-GPU bytes of params + grads + optimizer state under a
+    technique's ``MemoryModel`` — the quantity behind the
+    ``fsdp <= shard_zero <= zero2 <= data`` ordering
+    (tests/test_costmodel.py)."""
+    spec = TECHNIQUE_SPECS[technique]
+    return spec.memory.state_bytes(_make_context(wl, cluster, vms))
+
+
 def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                         vms: Optional[Sequence[int]] = None, *,
                         stage_order: Optional[Sequence[int]] = None,
                         stage_balance: str = "even",
                         stage_layers: Optional[Sequence[int]] = None,
-                        schedule: str = "gpipe") -> StepCost:
+                        schedule: str = "gpipe",
+                        carrier_dtype: str = "fp32") -> StepCost:
     """Model one optimizer step of `technique` (paper §III) on a cluster
-    or N-site topology.
+    or N-site topology, via the technique's registered
+    ``TechniqueSpec`` components (docs/cost-model.md).
 
     Args:
-        technique: one of ``TECHNIQUES``.
+        technique: a ``TECHNIQUE_SPECS`` key (``TECHNIQUES`` are the
+            paper's four; ``ALL_TECHNIQUES`` adds ``shard_zero`` and
+            ``fsdp``).
         wl: the workload being priced.
         cluster: legacy two-VM ``Cluster`` or an N-site ``Topology``.
         vms: which sites participate (None = all).  Heterogeneous GPUs
@@ -370,128 +869,32 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
             (``pipeline_bubble_fraction``), the activation-memory term
             (``pipeline_inflight_microbatches``), and — interleaved —
             the v-fold boundary crossings in the p2p term.
+        carrier_dtype: Pipeshard only — inter-stage activation carrier
+            dtype (``CARRIER_DTYPES``).  ``"bf16"`` halves the p2p byte
+            terms vs the fp32 baseline; collectives and latency rounds
+            are unaffected.
 
     Returns:
         A ``StepCost`` (compute_s, comm_s, memory required/available).
+
+    Raises:
+        ValueError: unknown technique / carrier dtype, or an invalid
+            pipeline placement (bad stage order, split, balance mode).
     """
-    topo = as_topology(cluster)
-    sel = topo.select(vms)
-    sites = [topo.sites[i] for i in sel]
-    gpus = [GPUS[g] for s in sites for g in s.gpus]
-    n = len(gpus)
-
-    flops = wl.flops_per_step
-    slowest = min(g.tflops for g in gpus) * 1e12
-    g_bytes = wl.bytes_grads()
-    p_bytes = wl.bytes_params()
-    state = wl.bytes_train_state()          # fp32 p+g+m+v (Alpa default)
-    act = wl.activation_bytes_per_gpu(n)
-    ovh = wl.OVERHEAD_GB
-    mem_avail = min(g.mem_gb for g in gpus)
-
-    if technique == "data":
-        compute = flops / (n * slowest)
-        comm = _collective_time(g_bytes, n, topo, sel)
-        mem = (state + act) / 1e9 + ovh
-    elif technique == "zero2":
-        compute = flops / (n * slowest)
-        # reduce-scatter grads + all-gather of updated fp16 params + the
-        # partitioned fp32 master sync => ~2.2x the Data volume, which is
-        # the paper's observed zero2-vs-data degradation ratio (Table II)
-        comm = 2.2 * _collective_time(g_bytes, n, topo, sel)
-        # fp16 replica + partitioned fp32 states: the lowest-memory plan
-        mem = (p_bytes + (state - p_bytes) / n + act) / 1e9 + ovh
-    elif technique == "shard":
-        compute = flops / (n * slowest)
-        # Megatron-style: 4 all-reduces of activations per layer (fwd+bwd)
-        act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
-        comm = 4 * wl.cfg.n_layers * _collective_time(act_bytes, n, topo, sel)
-        # sharded states but activation replicas + all-gather buffers
-        mem = (state / n + 1.5 * act) / 1e9 + ovh
-    elif technique == "pipeshard":
-        # stages = sites of the selection in stage_order; shard (intra-op)
-        # inside each site over PCIe; inter-stage point-to-point microbatch
-        # activations over each crossed stage-boundary link.
-        order = sel if stage_order is None else topo.select(stage_order)
-        if sorted(order) != sorted(sel):
-            raise ValueError(
-                f"stage_order {order} is not a permutation of sites {sel}")
-        n_stages = max(len(order), 1)
-        kind, virt = parse_schedule(schedule)
-        n_chunks = n_stages * virt
-        stage_sites = [topo.sites[i] for i in order]
-        stage_tf = stage_compute_tflops(topo, order)
-        mesh_tflops = [t * 1e12 for t in stage_tf]
-        bubble = pipeline_bubble_fraction(schedule, n_stages,
-                                          wl.microbatches)
-        if stage_layers is not None:
-            split: Optional[Tuple[int, ...]] = tuple(stage_layers)
-            if len(split) != n_chunks or min(split, default=0) < 1 \
-                    or sum(split) != wl.cfg.n_layers:
-                raise ValueError(
-                    f"stage_layers {split} does not partition "
-                    f"{wl.cfg.n_layers} layers into {n_chunks} "
-                    f"{schedule} chunks")
-        elif stage_balance == "tflops":
-            # interleaved: chunk c runs on stage c % n_stages, so its
-            # quota follows that stage's compute
-            split = balanced_stage_layers(
-                wl.cfg.n_layers,
-                [stage_tf[c % n_stages] for c in range(n_chunks)])
-        elif stage_balance == "even":
-            split = None        # legacy continuous flops/n_stages split
-        else:
-            raise ValueError(f"stage_balance {stage_balance!r} not in "
-                             f"{STAGE_BALANCE_MODES}")
-        if split is None:
-            compute = max(flops / n_stages / t for t in mesh_tflops) \
-                * (1 + bubble)
-        else:
-            # per-stage layer totals (a stage owns every chunk with
-            # c % n_stages == its index; v == 1 degrades to the split)
-            stage_l = [sum(split[c] for c in range(n_chunks)
-                           if c % n_stages == s) for s in range(n_stages)]
-            # the slowest (layers-weighted) stage paces every tick
-            compute = max(li / wl.cfg.n_layers * flops / t
-                          for li, t in zip(stage_l, mesh_tflops)) \
-                * (1 + bubble)
-        act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
-        # each microbatch crosses each stage boundary twice (fwd + bwd),
-        # paying that boundary's own link (N=2: the single WAN link)
-        p2p = sum(
-            2 * (wl.microbatches * (act_bytes / wl.microbatches)
-                 / (topo.link(a, b).effective_gbps * 1e9)
-                 + wl.microbatches * topo.link(a, b).latency_s)
-            for a, b in zip(order[:-1], order[1:]))
-        if kind == "interleaved" and n_stages > 1:
-            # v virtual stages per device: every microbatch walks the
-            # stage ring v times — each forward boundary link v times
-            # and the wrap-around link (last stage back to first)
-            # v - 1 times.  This is the schedule's price: the bubble
-            # shrinks by v, the p2p bill grows by ~v.
-            wrap = topo.link(order[-1], order[0])
-            p2p = virt * p2p + (virt - 1) * 2 * (
-                act_bytes / (wrap.effective_gbps * 1e9)
-                + wl.microbatches * wrap.latency_s)
-        if split is None:       # keep the legacy expression bit-for-bit
-            intra_comm = max(
-                4 * wl.cfg.n_layers / n_stages * _allreduce_time(
-                    act_bytes, len(s.gpus), s.intra)
-                for s in stage_sites)
-        else:
-            intra_comm = max(
-                4 * li * _allreduce_time(act_bytes, len(s.gpus), s.intra)
-                for li, s in zip(stage_l, stage_sites))
-        comm = p2p + intra_comm
-        # in-flight microbatches make Pipeshard the memory-hungry plan
-        # (paper §IV-G observation 3); 1F1B caps the stash at min(S, m)
-        # — the schedule dimension's memory lever (docs/schedules.md)
-        inflight = pipeline_inflight_microbatches(schedule, n_stages,
-                                                  wl.microbatches)
-        mem = (state / n + act * (1 + 0.5 * inflight)) / 1e9 + ovh
-    else:
-        raise ValueError(technique)
-    return StepCost(compute, comm, mem, mem_avail)
+    try:
+        spec = TECHNIQUE_SPECS[technique]
+    except KeyError:
+        raise ValueError(
+            f"unknown technique {technique!r}; registered: "
+            f"{tuple(TECHNIQUE_SPECS)}") from None
+    ctx = _make_context(wl, cluster, vms, stage_order=stage_order,
+                        stage_balance=stage_balance,
+                        stage_layers=stage_layers, schedule=schedule,
+                        carrier_dtype=carrier_dtype)
+    compute = spec.compute(ctx)
+    comm = spec.p2p(ctx) + spec.collective(ctx)
+    mem = spec.memory.mem_gb(ctx)
+    return StepCost(compute, comm, mem, ctx.mem_avail)
 
 
 def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
@@ -499,14 +902,16 @@ def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
                   stage_order: Optional[Sequence[int]] = None,
                   stage_balance: str = "even",
                   stage_layers: Optional[Sequence[int]] = None,
-                  schedule: str = "gpipe") -> Optional[float]:
+                  schedule: str = "gpipe",
+                  carrier_dtype: str = "fp32") -> Optional[float]:
     """Minutes per `epochs` epochs; None when the technique OOMs (the
     paper's '×' bars).  Keyword args as ``technique_step_cost``."""
     c = technique_step_cost(technique, wl, cluster, vms,
                             stage_order=stage_order,
                             stage_balance=stage_balance,
                             stage_layers=stage_layers,
-                            schedule=schedule)
+                            schedule=schedule,
+                            carrier_dtype=carrier_dtype)
     if not c.fits:
         return None
     return c.total_s * wl.steps_per_epoch * wl.epochs / 60.0
@@ -517,7 +922,8 @@ def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                stage_order: Optional[Sequence[int]] = None,
                stage_balance: str = "even",
                stage_layers: Optional[Sequence[int]] = None,
-               schedule: str = "gpipe") -> Optional[float]:
+               schedule: str = "gpipe",
+               carrier_dtype: str = "fp32") -> Optional[float]:
     """Average achieved TFLOP/s of one step (model FLOPs / step time);
     None when the technique OOMs.  Keyword args as
     ``technique_step_cost``."""
@@ -525,7 +931,8 @@ def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                             stage_order=stage_order,
                             stage_balance=stage_balance,
                             stage_layers=stage_layers,
-                            schedule=schedule)
+                            schedule=schedule,
+                            carrier_dtype=carrier_dtype)
     if not c.fits:
         return None
     return wl.flops_per_step / c.total_s / 1e12

@@ -15,6 +15,10 @@
 
 A plan turns (model params, mesh) into in/out shardings for jit and an
 update rule; the same four names are what Algorithm 1 selects between.
+The two beyond-paper plans (``shard_zero``, ``fsdp``) are priced by the
+technique cost registry too (``core.costmodel.TECHNIQUE_SPECS``,
+docs/cost-model.md), so the search can recommend every plan this
+module can execute.
 """
 from __future__ import annotations
 

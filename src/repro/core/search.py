@@ -14,6 +14,10 @@ Algorithm 1:
     — e.g. "Data over the two nearby sites of a three-site ring,
     ignoring the far one", or "1F1B over all three sites because GPipe's
     activation stash doesn't fit".
+  * the technique pool defaults to the paper's four and opens to the
+    beyond-paper ``shard_zero``/``fsdp`` specs with ``techniques=
+    core.costmodel.ALL_TECHNIQUES``; ``carrier_dtype="bf16"`` prices
+    pipelines at halved inter-stage wire bytes (docs/cost-model.md).
   * by default the space is *pruned* — dominated site subsets are
     eliminated for the collective techniques and pipeline stage orders
     are explored with a beam over boundary-link costs — which keeps the
@@ -46,9 +50,10 @@ from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
-from repro.core.costmodel import (ClusterLike, SCHEDULES, TECHNIQUES,
-                                  Workload, as_topology, avg_tflops,
-                                  balanced_stage_layers, parse_schedule,
+from repro.core.costmodel import (ALL_TECHNIQUES, ClusterLike, SCHEDULES,
+                                  TECHNIQUES, Workload, as_topology,
+                                  avg_tflops, balanced_stage_layers,
+                                  carrier_scale, parse_schedule,
                                   stage_compute_tflops)
 from repro.core.plans import Placement
 from repro.core.topology import Link, Topology
@@ -152,10 +157,13 @@ def stage_orders(sites: Sequence[int],
 @dataclass(frozen=True)
 class _SubsetStats:
     """What the collective cost model can see of a site subset: the GPU
-    pool size, the pace-setting GPU, the memory floor, and the
-    spanning-link extremes.  For subsets with equal pool sizes these
-    numbers bound the step cost of every collective technique
-    (data/zero2/shard) from both sides."""
+    pool size, the pace-setting GPU, the memory floor, the
+    spanning-link extremes, and — for the hybrid ``shard_zero`` spec —
+    the intra-site tensor-parallel floor plus each member site's intra
+    all-reduce (latency, byte-rate) coefficients.  For subsets with
+    equal pool sizes these numbers bound the step cost of every
+    collective technique (data/zero2/shard/fsdp/shard_zero) from both
+    sides."""
     subset: Tuple[int, ...]
     n_gpus: int
     min_tflops: float
@@ -163,21 +171,46 @@ class _SubsetStats:
     max_lat: float
     min_eff: float
     span: Tuple[Link, ...]
+    # intra-site corners (shard_zero): per site, the affine all-reduce
+    # coefficients alpha = (k-1)*lat and beta = (k-1)/k / eff_gbps —
+    # site time for B bytes scales as alpha + beta*B.
+    tp: int = 1
+    intra_corners: Tuple[Tuple[float, float], ...] = ()
+
+    @property
+    def max_intra_alpha(self) -> float:
+        return max((a for a, _ in self.intra_corners), default=0.0)
+
+    @property
+    def max_intra_beta(self) -> float:
+        return max((b for _, b in self.intra_corners), default=0.0)
 
 
-def _dominates(a: _SubsetStats, b: _SubsetStats) -> bool:
+def _dominates(a: _SubsetStats, b: _SubsetStats, *,
+               intra_sensitive: bool = False) -> bool:
     """True when subset ``a`` is provably at least as good as ``b`` for
-    every collective technique: the pools are the same size (collective
-    time and per-GPU memory are not monotone in pool size), ``a``'s
-    slowest GPU and smallest memory are no worse, and ``b``'s spanning
-    set contains a link at least as bad as ``a``'s worst-case
+    every collective technique in play: the pools are the same size
+    (collective time and per-GPU memory are not monotone in pool size),
+    ``a``'s slowest GPU and smallest memory are no worse, and ``b``'s
+    spanning set contains a link at least as bad as ``a``'s worst-case
     (max-latency, min-throughput) corner — so ``b``'s collective time is
     >= ``a``'s for any message size, and anything that fits on ``b``
-    fits on ``a``."""
+    fits on ``a``.  With ``intra_sensitive`` (the ``shard_zero`` spec in
+    the pool), two extra corners must hold: ``a``'s tensor-parallel
+    floor is no smaller (its ZeRO volume g/tp and its p/tp param bytes
+    are no larger), and ``b`` has a member site whose intra all-reduce
+    coefficients are at least as bad as ``a``'s worst — so ``b``'s
+    max-over-sites intra term is >= ``a``'s for any payload."""
     if a.n_gpus != b.n_gpus:
         return False
     if a.min_tflops < b.min_tflops or a.min_mem < b.min_mem:
         return False
+    if intra_sensitive:
+        if a.tp < b.tp:
+            return False
+        if not any(al >= a.max_intra_alpha and be >= a.max_intra_beta
+                   for al, be in b.intra_corners):
+            return False
     return any(l.latency_s >= a.max_lat and l.effective_gbps <= a.min_eff
                for l in b.span)
 
@@ -194,7 +227,10 @@ class PlanSearch:
         wl: the workload being placed.
         topology: the N-site topology (or use ``for_cluster`` to lift a
             legacy two-VM ``Cluster``).
-        techniques: techniques to consider (default: the paper's four).
+        techniques: techniques to consider (default: the paper's four,
+            ``core.costmodel.TECHNIQUES``; pass ``core.costmodel
+            .ALL_TECHNIQUES`` to open the pool to the ``shard_zero`` /
+            ``fsdp`` specs — every plan ``core.plans.PLANS`` executes).
         max_sites: cap subset size (None = up to all N sites).
         max_stage_orders: optional cap on stage orders per subset.  None
             (the default) keeps ``prune=False`` a true exactness oracle
@@ -218,6 +254,12 @@ class PlanSearch:
             "tflops" (stage sizes weighted by per-site compute,
             ``core.costmodel.balanced_stage_layers``) — applied when
             pricing Pipeshard candidates and attached to placements.
+        carrier_dtype: inter-stage activation carrier dtype Pipeshard
+            candidates are priced at (``core.costmodel.CARRIER_DTYPES``;
+            default ``"fp32"``, the legacy baseline).  ``"bf16"`` halves
+            the p2p byte terms — cheap boundary bytes can flip a cell's
+            stage order or schedule choice (docs/cost-model.md); the
+            beam's boundary scoring uses the same scale.
         schedules: pipeline tick-order schedules to search over for
             Pipeshard candidates (``core.costmodel.SCHEDULES``; default
             all three — GPipe, 1F1B, interleaved).  Enumeration order
@@ -239,6 +281,7 @@ class PlanSearch:
     beam_width: int = 24
     stage_balance: str = "even"
     schedules: Tuple[str, ...] = SCHEDULES
+    carrier_dtype: str = "fp32"
     # live probe memo: probe-equivalence key -> measured TFLOP/s
     _probe_cache: Dict[Tuple, Optional[float]] = field(
         default_factory=dict, init=False, repr=False, compare=False)
@@ -325,6 +368,12 @@ class PlanSearch:
         gpus = topo.all_gpus(subset)
         span = tuple(topo.spanning_links(subset)) if len(subset) > 1 \
             else (topo.sites[subset[0]].intra,)
+        corners = []
+        for i in subset:
+            s = topo.sites[i]
+            k = len(s.gpus)
+            corners.append(((k - 1) * s.intra.latency_s,
+                            (k - 1) / k / s.intra.effective_gbps))
         return _SubsetStats(
             subset=subset,
             n_gpus=len(gpus),
@@ -332,19 +381,26 @@ class PlanSearch:
             min_mem=min(g.mem_gb for g in gpus),
             max_lat=max(l.latency_s for l in span),
             min_eff=min(l.effective_gbps for l in span),
-            span=span)
+            span=span,
+            tp=min(len(topo.sites[i].gpus) for i in subset),
+            intra_corners=tuple(corners))
 
     def _prune_dominated(self, subsets: Sequence[Tuple[int, ...]]
                          ) -> set:
         """Subsets (all the same size) worth pricing for the collective
         techniques: drop every subset strictly dominated by another, and
-        keep only the lexicographically-first of exact-tie groups."""
+        keep only the lexicographically-first of exact-tie groups.  With
+        ``shard_zero`` in the pool the dominance test adds its
+        intra-site corners (``_dominates(intra_sensitive=True)``) so
+        pruning stays lossless over the widened technique space."""
+        intra = "shard_zero" in self.techniques
         stats = [self._subset_stats(s) for s in subsets]
         keep = set()
         for b in stats:
             dominated = any(
-                _dominates(a, b) and
-                (not _dominates(b, a) or a.subset < b.subset)
+                _dominates(a, b, intra_sensitive=intra) and
+                (not _dominates(b, a, intra_sensitive=intra)
+                 or a.subset < b.subset)
                 for a in stats if a.subset != b.subset)
             if not dominated:
                 keep.add(b.subset)
@@ -381,7 +437,8 @@ class PlanSearch:
         w = self.beam_width if beam_width is None else beam_width
         if self.max_stage_orders is not None:
             w = min(w, self.max_stage_orders)
-        act = self.wl.tokens_per_step * self.wl.cfg.d_model * 2
+        act = self.wl.tokens_per_step * self.wl.cfg.d_model * 2 \
+            * carrier_scale(self.carrier_dtype)
         micro = self.wl.microbatches
 
         def edge_cost(a: int, b: int) -> float:
@@ -412,7 +469,8 @@ class PlanSearch:
         return avg_tflops(cand.technique, self.wl, self.topology,
                           cand.sites, stage_order=cand.stage_order,
                           stage_balance=self.stage_balance,
-                          schedule=cand.schedule)
+                          schedule=cand.schedule,
+                          carrier_dtype=self.carrier_dtype)
 
     @staticmethod
     def probe_key(technique: str, placement: Optional[Placement]) -> Tuple:
@@ -503,11 +561,22 @@ class PlanSearch:
         return top[0] if top and top[0].feasible else None
 
     # ------------------------------------------------------------- #
-    def select(self, *, delta: float = 0.1) -> "Selection":
+    def select(self, *, delta: float = 0.1,
+               extended: Optional[bool] = None) -> "Selection":
         """Generalized Algorithm 1 over this topology (paper probe set +
-        δ decision rule); the N=2 case is the paper's algorithm verbatim."""
+        δ decision rule); the N=2 case is the paper's algorithm verbatim.
+
+        Args:
+            delta: the paper's δ threshold.
+            extended: opt into the beyond-paper probe set (``shard_zero``
+                / ``fsdp``, see ``algorithm1_select``).  Default: derived
+                from this search's technique pool — paper-faithful four
+                unless the pool itself was widened.
+        """
+        if extended is None:
+            extended = any(t not in TECHNIQUES for t in self.techniques)
         return algorithm1_select(self._probe, self.topology.n_sites,
-                                 delta=delta)
+                                 delta=delta, extended=extended)
 
     def _probe(self, technique: str, placement: Optional[Placement]
                ) -> Optional[float]:
@@ -534,7 +603,8 @@ class PlanSearch:
                           else placement.stage_layers,
                           stage_balance=self.stage_balance,
                           schedule="gpipe" if placement is None
-                          else placement.schedule)
+                          else placement.schedule,
+                          carrier_dtype=self.carrier_dtype)
 
 
 # --------------------------------------------------------------------- #
@@ -542,7 +612,8 @@ class PlanSearch:
 # --------------------------------------------------------------------- #
 
 def algorithm1_select(probe: ProbeFn, n_sites: int, *,
-                      delta: float = 0.1) -> "Selection":
+                      delta: float = 0.1,
+                      extended: bool = False) -> "Selection":
     """Algorithm 1 (paper §IV-H), lines 1-36, for N sites.
 
     Probes Pipeshard on all sites, Data/Shard on each site alone, and
@@ -552,6 +623,17 @@ def algorithm1_select(probe: ProbeFn, n_sites: int, *,
     ``n_sites == 2`` the probe keys, comparisons and tie-breaks are
     exactly the original two-VM algorithm's.
 
+    ``extended`` opts into the beyond-paper pool
+    (``core.costmodel.ALL_TECHNIQUES``) while keeping the paper's
+    decision structure: the "on everything" tier also probes
+    ``shard_zero`` and ``fsdp`` on all sites (best of the three enters
+    the δ comparison, ties preferring Pipeshard), and each single site
+    is additionally probed under ``fsdp`` — the memory-rescue plan that
+    can revive a site whose replicated-state plans OOM
+    (docs/cost-model.md).  With ``extended=False`` (the default) the
+    probe set, keys, comparisons, and tie-breaks are bit-for-bit the
+    paper's.
+
     Args:
         probe: ``(technique, Placement) -> TFLOP/s`` (None/0 =
             infeasible); the paper's probe set pins only site subsets,
@@ -559,6 +641,7 @@ def algorithm1_select(probe: ProbeFn, n_sites: int, *,
         n_sites: number of sites the probe understands.
         delta: the paper's δ threshold — how much better
             Pipeshard-on-everything must be before it wins.
+        extended: add the ``shard_zero``/``fsdp`` probes (opt-in).
 
     Returns:
         A ``core.selector.Selection`` with the chosen technique, its
@@ -577,33 +660,52 @@ def algorithm1_select(probe: ProbeFn, n_sites: int, *,
 
     # lines 1-2: Pipeshard on the union of all sites
     t_p = run("pipeshard", Placement(all_sites), f"pipeshard@{all_key}")
+    all_tech, t_all = "pipeshard", t_p
+    if extended:
+        # beyond-paper "on everything" probes; pipeshard keeps exact ties
+        for tech in ("shard_zero", "fsdp"):
+            t = run(tech, Placement(all_sites), f"{tech}@{all_key}")
+            if t > t_all:
+                all_tech, t_all = tech, t
     # lines 3-10: Data and Shard on each site separately
     t_d = [run("data", Placement((i,)), f"data@V{i + 1}")
            for i in range(n_sites)]
     t_s = [run("shard", Placement((i,)), f"shard@V{i + 1}")
            for i in range(n_sites)]
+    t_f = [run("fsdp", Placement((i,)), f"fsdp@V{i + 1}")
+           for i in range(n_sites)] if extended \
+        else [0.0] * n_sites
     # line 11
-    t_z = max(t_d + t_s)
+    t_z = max(t_d + t_s + (t_f if extended else []))
 
     def best_single() -> Selection:
         # argmax over sites with first-wins ties (the paper prefers V1)
-        i = max(range(n_sites), key=lambda k: (max(t_d[k], t_s[k]), -k))
-        tech = "data" if t_d[i] >= t_s[i] else "shard"
+        i = max(range(n_sites),
+                key=lambda k: (max(t_d[k], t_s[k], t_f[k]), -k))
+        # paper-order tie-break: data, then shard, then (extended) fsdp
+        if t_d[i] >= t_s[i] and t_d[i] >= t_f[i]:
+            tech = "data"
+        elif t_s[i] >= t_f[i]:
+            tech = "shard"
+        else:
+            tech = "fsdp"
         return Selection(tech, [i], probes)
 
     every = list(range(n_sites))
-    # lines 12-13: Pipeshard wins by more than δ
-    if t_z > 0 and (t_p - t_z) / t_z > delta:
-        return Selection("pipeshard", every, probes)
+    # lines 12-13: the distributed plan wins by more than δ
+    if t_z > 0 and (t_all - t_z) / t_z > delta:
+        return Selection(all_tech, every, probes)
     # lines 14-27: a single-site plan wins by more than δ
-    if t_p > 0 and (t_z - t_p) / t_p > delta:
+    if t_all > 0 and (t_z - t_all) / t_all > delta:
         return best_single()
     # tie region but something ran: prefer the absolute best measured
-    if t_p > 0 or t_z > 0:
-        if t_p >= t_z:
-            return Selection("pipeshard", every, probes)
+    if t_all > 0 or t_z > 0:
+        if t_all >= t_z:
+            return Selection(all_tech, every, probes)
         return best_single()
-    # lines 29-35: ZeRO2 fallback on the whole cluster
+    # lines 29-35: ZeRO2 fallback on the whole cluster (in extended mode
+    # the fsdp@all probe above already covered the only lower-memory
+    # plan, and it OOMed too if we got here)
     t_z2 = run("zero2", Placement(all_sites), f"zero2@{all_key}")
     if t_z2 > 0:
         return Selection("zero2", every, probes)

@@ -124,9 +124,19 @@ class Selection:
         return self.vms is not None or self.technique == "none"
 
 
-def select_technique(prober: Prober, *, delta: float = 0.1) -> Selection:
+def select_technique(prober: Prober, *, delta: float = 0.1,
+                     extended: bool = False) -> Selection:
     """Algorithm 1, lines 1-36 — the N=2 (or prober-declared N) case of
-    ``core.search.algorithm1_select``."""
+    ``core.search.algorithm1_select``.
+
+    Args:
+        prober: probe provider (``CostModelProber`` / ``LiveProber``).
+        delta: the paper's δ threshold.
+        extended: opt into the beyond-paper ``shard_zero``/``fsdp``
+            probes (``core.costmodel.ALL_TECHNIQUES``); the default
+            keeps the paper's four-technique probe set bit-for-bit.
+    """
     from repro.core.search import algorithm1_select
     n_sites = getattr(prober, "n_sites", 2)
-    return algorithm1_select(prober.probe, n_sites, delta=delta)
+    return algorithm1_select(prober.probe, n_sites, delta=delta,
+                             extended=extended)

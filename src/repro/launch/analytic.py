@@ -123,7 +123,9 @@ def placement_degrees(plan, topo, placement, global_batch: int, *,
     ``stage_order``/``stage_layers`` do not change the degrees (they
     permute pod blocks and re-slice — pad-and-mask at runtime — the
     layer stack, not the axis sizes), so any ``core.plans.Placement``
-    is accepted as-is."""
+    is accepted as-is.  Extended-pool winners price the same way:
+    ``shard_zero``/``fsdp`` placements get their ZeRO degree from the
+    pod×data pool of the selected sites (docs/cost-model.md)."""
     from repro.launch.mesh import topology_mesh_spec
     (pod, data, m), _ = topology_mesh_spec(topo, placement.sites,
                                            model=model)

@@ -111,6 +111,32 @@ def placement_pipeline_mesh(topo: Topology, placement, *,
                          schedule=placement.schedule)
 
 
+def placement_mesh(topo: Topology, plan, placement, *,
+                   model: int = 1, devices=None) -> Mesh:
+    """Realize any searched ``core.plans.Placement`` for a plan: the
+    one-call Placement → mesh wiring the extended technique pool needs
+    (docs/cost-model.md).  Pipeline plans build the staged mesh
+    (``placement_pipeline_mesh``); flat plans — data/zero2/shard/
+    shard_zero/fsdp winners — get the plain topology mesh over the
+    placement's site subset.
+
+    Args:
+        topo: the N-site topology the placement was searched on.
+        plan: the ``core.plans.Plan`` being launched.
+        placement: the searched ``core.plans.Placement``.
+        model: tensor-parallel degree inside each site.
+        devices: explicit device list (default: all local devices).
+
+    Returns:
+        A mesh the plan's shardings apply to directly.
+    """
+    if plan.pipeline:
+        return placement_pipeline_mesh(topo, placement, model=model,
+                                       devices=devices)
+    return make_topology_mesh(topo, placement.sites, model=model,
+                              devices=devices)
+
+
 # TPU v5e roofline constants (per chip) — see EXPERIMENTS.md §Roofline.
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # bytes/s

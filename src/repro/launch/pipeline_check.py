@@ -19,6 +19,10 @@ gather+mask path; it must be bit-identical to ``legacy``).  Non-GPipe
 schedules suffix their keys, e.g. ``searched@1f1b``; schedules reorder
 work without changing math, so every entry must equal the reference.
 
+``--carrier bf16`` runs the checks with bf16 inter-stage carriers (the
+halved-bytes wire format the cost model's ``carrier_dtype`` knob
+prices); the fp32 default is the XLA-CPU-safe baseline.
+
 Must run in its own process: ``--devices`` forces the XLA host platform
 device count, which locks at first jax init.  The (stage, 1, 1) meshes
 have no non-trivial auto axes, so this runs even on jax 0.4.x where the
@@ -43,6 +47,14 @@ def main() -> None:
     ap.add_argument("--schedules", default="gpipe",
                     help="comma-separated pipeline schedules to check "
                          "(gpipe, 1f1b, interleaved, interleaved<v>)")
+    ap.add_argument("--carrier", default="fp32",
+                    choices=("fp32", "bf16"),
+                    help="inter-stage activation carrier dtype "
+                         "(core.costmodel.CARRIER_DTYPES).  bf16 is the "
+                         "halved-bytes carrier the cost model prices "
+                         "(docs/cost-model.md); on XLA CPU it trips the "
+                         "SPMD partitioner bug make_pipeline_loss "
+                         "documents, so it stays opt-in")
     args = ap.parse_args()
 
     gpus = args.gpus.split(",")
@@ -56,6 +68,8 @@ def main() -> None:
     import jax
     import jax.numpy as jnp
     import numpy as np
+
+    carrier_dtype = jnp.bfloat16 if args.carrier == "bf16" else jnp.float32
 
     from repro.configs import get_config
     from repro.core.costmodel import Workload, parse_schedule
@@ -128,7 +142,8 @@ def main() -> None:
                 split_report[key] = None if split is None else list(split)
                 loss_fn = make_pipeline_loss(model, mesh, args.micro,
                                              stage_layers=split,
-                                             schedule=sched)
+                                             schedule=sched,
+                                             carrier_dtype=carrier_dtype)
                 loss, metrics = jax.jit(loss_fn)(params, batch)
                 grads = jax.jit(jax.grad(
                     lambda p: loss_fn(p, batch)[0]))(params)

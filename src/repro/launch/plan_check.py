@@ -1,8 +1,10 @@
 """Numerical plan-equivalence check (used by tests/test_plans.py).
 
 Runs a tiny model one train step under each plan on a small host-device
-mesh and prints the losses as JSON: all four techniques must compute the
-same mathematical update, so losses (and a probe-param norm) must agree.
+mesh and prints the losses as JSON: every registered plan (``--plans
+all`` derives the list from ``repro.core.plans.PLANS`` — data, zero2,
+shard, shard_zero, pipeshard, fsdp) must compute the same mathematical
+update, so losses (and a probe-param norm) must agree.
 
 Must run in its own process: ``--devices`` forces the XLA host platform
 device count, which locks at first jax init.
@@ -17,7 +19,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--plans", default="data,zero2,shard,shard_zero,pipeshard")
+    ap.add_argument("--plans", default="all",
+                    help="comma-separated repro.core.plans.PLANS keys, or "
+                         "'all' for every registered plan")
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=32)
@@ -37,11 +41,16 @@ def main() -> None:
     from repro.configs import get_config
     from repro.configs.base import ShapeConfig, TrainConfig
     from repro.core.pipeline import pipeline_mesh
-    from repro.core.plans import get_plan
+    from repro.core.plans import PLANS, get_plan
     from repro.core.steps import build_train_step
     from repro.models import Model
     from repro.models.registry import input_specs
     from repro.optim import init_adamw
+
+    # "all" derives from the plan registry (imported only after the
+    # XLA_FLAGS device-count override above) instead of a hand-kept list
+    plan_names = list(PLANS) if args.plans == "all" \
+        else args.plans.split(",")
 
     cfg = get_config(args.arch).reduced()
     cfg = dataclasses.replace(cfg, n_layers=args.layers)
@@ -60,7 +69,7 @@ def main() -> None:
     base = jax.make_mesh((n // 4, 2, 2), ("pod", "data", "model"))
 
     results = {}
-    for plan_name in args.plans.split(","):
+    for plan_name in plan_names:
         plan = get_plan(plan_name)
         mesh = pipeline_mesh(base, 2) if plan.pipeline else base
         with jax.set_mesh(mesh):

@@ -18,8 +18,11 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true",
                     help="train the reduced (smoke) variant")
     ap.add_argument("--plan", default="shard_zero",
-                    choices=["data", "zero2", "shard", "shard_zero",
-                             "pipeshard", "fsdp"])
+                    metavar="PLAN",
+                    help="execution plan — any repro.core.plans.PLANS "
+                         "key (validated against the registry after the "
+                         "device-count override, so the choices are "
+                         "never a stale hand-kept list)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (0 = use real devices)")
     ap.add_argument("--mesh", default="1,1",
@@ -70,7 +73,7 @@ def main() -> None:
     shape = tuple(int(x) for x in args.mesh.split(","))
     axes = ("pod", "data", "model")[-len(shape):]
     base = make_host_mesh(shape, axes)
-    plan = get_plan(args.plan)
+    plan = get_plan(args.plan)      # KeyError lists the registry's plans
     mesh = pipeline_mesh(base, args.stages) if plan.pipeline else base
 
     tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=args.steps // 10,

@@ -1,19 +1,29 @@
 """Paper-validation tests: the cost model must reproduce the paper's
 claims C1–C5 (orderings, latency degradation, OOM boundaries, Algorithm 1
 selections) — these are the EXPERIMENTS.md §Paper-validation gates."""
+import dataclasses
+import itertools
+
 import numpy as np
 import pytest
 from prophelpers import given, settings, st
 
 from repro.configs import get_config
-from repro.core.costmodel import (GPUS, PAPER_CLUSTERS, SCHEDULES, Cluster,
-                                  Link, VM, avg_tflops, epoch_minutes,
+from repro.core.costmodel import (ALL_TECHNIQUES, GPUS, PAPER_CLUSTERS,
+                                  SCHEDULES, TECHNIQUES, TECHNIQUE_SPECS,
+                                  Cluster, Link, MemoryModel, TechniqueSpec,
+                                  VM, avg_tflops, balanced_stage_layers,
+                                  carrier_scale, epoch_minutes,
                                   fabric_cluster, paper_workload,
                                   parse_schedule,
                                   pipeline_bubble_fraction,
                                   pipeline_inflight_microbatches,
+                                  register_technique,
+                                  stage_compute_tflops,
+                                  technique_state_bytes,
                                   technique_step_cost)
 from repro.core.selector import CostModelProber, select_technique
+from repro.core.topology import Site, line, make_topology, ring
 
 WL_M = paper_workload(get_config("gpt2m"))
 WL_L = paper_workload(get_config("gpt2L"))
@@ -182,6 +192,338 @@ def test_1f1b_same_time_less_memory_than_gpipe():
         f1b = technique_step_cost("pipeshard", WL_M, c, schedule="1f1b")
         assert f1b.total_s == gp.total_s, name
         assert f1b.mem_required_gb < gp.mem_required_gb, name  # m=4 > S=2
+
+
+# ------------------------------------------------------------------ #
+# the technique cost registry (docs/cost-model.md): the four paper
+# specs must price bit-for-bit what the pre-refactor if/elif chain did
+# ------------------------------------------------------------------ #
+
+def _legacy_step_cost(technique, wl, cluster, vms=None, *,
+                      stage_order=None, stage_balance="even",
+                      stage_layers=None, schedule="gpipe"):
+    """Frozen copy of the pre-registry ``technique_step_cost`` chain
+    (PR-4 state), kept verbatim as the bit-for-bit oracle — including
+    its own collective-time helpers, so the oracle shares no pricing
+    code with the registry under test."""
+    from repro.core.costmodel import as_topology
+
+    def allreduce(bytes_total, n, link):
+        if n <= 1:
+            return 0.0
+        return 2 * (n - 1) * link.latency_s \
+            + 2 * (n - 1) / n * bytes_total / (link.effective_gbps * 1e9)
+
+    def collective(bytes_total, n, topo, sites):
+        if len(sites) <= 1:
+            return allreduce(bytes_total, n, topo.sites[sites[0]].intra)
+        return max(allreduce(bytes_total, n, l)
+                   for l in topo.spanning_links(sites))
+
+    topo = as_topology(cluster)
+    sel = topo.select(vms)
+    sites = [topo.sites[i] for i in sel]
+    gpus = [GPUS[g] for s in sites for g in s.gpus]
+    n = len(gpus)
+    flops = wl.flops_per_step
+    slowest = min(g.tflops for g in gpus) * 1e12
+    g_bytes = wl.bytes_grads()
+    p_bytes = wl.bytes_params()
+    state = wl.bytes_train_state()
+    act = wl.activation_bytes_per_gpu(n)
+    ovh = wl.OVERHEAD_GB
+    mem_avail = min(g.mem_gb for g in gpus)
+
+    if technique == "data":
+        compute = flops / (n * slowest)
+        comm = collective(g_bytes, n, topo, sel)
+        mem = (state + act) / 1e9 + ovh
+    elif technique == "zero2":
+        compute = flops / (n * slowest)
+        comm = 2.2 * collective(g_bytes, n, topo, sel)
+        mem = (p_bytes + (state - p_bytes) / n + act) / 1e9 + ovh
+    elif technique == "shard":
+        compute = flops / (n * slowest)
+        act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
+        comm = 4 * wl.cfg.n_layers * collective(act_bytes, n, topo, sel)
+        mem = (state / n + 1.5 * act) / 1e9 + ovh
+    elif technique == "pipeshard":
+        order = sel if stage_order is None else topo.select(stage_order)
+        n_stages = max(len(order), 1)
+        kind, virt = parse_schedule(schedule)
+        n_chunks = n_stages * virt
+        stage_sites = [topo.sites[i] for i in order]
+        stage_tf = stage_compute_tflops(topo, order)
+        mesh_tflops = [t * 1e12 for t in stage_tf]
+        bubble = pipeline_bubble_fraction(schedule, n_stages,
+                                          wl.microbatches)
+        if stage_layers is not None:
+            split = tuple(stage_layers)
+        elif stage_balance == "tflops":
+            split = balanced_stage_layers(
+                wl.cfg.n_layers,
+                [stage_tf[c % n_stages] for c in range(n_chunks)])
+        else:
+            split = None
+        if split is None:
+            compute = max(flops / n_stages / t for t in mesh_tflops) \
+                * (1 + bubble)
+        else:
+            stage_l = [sum(split[c] for c in range(n_chunks)
+                           if c % n_stages == s) for s in range(n_stages)]
+            compute = max(li / wl.cfg.n_layers * flops / t
+                          for li, t in zip(stage_l, mesh_tflops)) \
+                * (1 + bubble)
+        act_bytes = wl.tokens_per_step * wl.cfg.d_model * 2
+        p2p = sum(
+            2 * (wl.microbatches * (act_bytes / wl.microbatches)
+                 / (topo.link(a, b).effective_gbps * 1e9)
+                 + wl.microbatches * topo.link(a, b).latency_s)
+            for a, b in zip(order[:-1], order[1:]))
+        if kind == "interleaved" and n_stages > 1:
+            wrap = topo.link(order[-1], order[0])
+            p2p = virt * p2p + (virt - 1) * 2 * (
+                act_bytes / (wrap.effective_gbps * 1e9)
+                + wl.microbatches * wrap.latency_s)
+        if split is None:
+            intra_comm = max(
+                4 * wl.cfg.n_layers / n_stages * allreduce(
+                    act_bytes, len(s.gpus), s.intra)
+                for s in stage_sites)
+        else:
+            intra_comm = max(
+                4 * li * allreduce(act_bytes, len(s.gpus), s.intra)
+                for li, s in zip(stage_l, stage_sites))
+        comm = p2p + intra_comm
+        inflight = pipeline_inflight_microbatches(schedule, n_stages,
+                                                  wl.microbatches)
+        mem = (state / n + act * (1 + 0.5 * inflight)) / 1e9 + ovh
+    else:
+        raise ValueError(technique)
+    return compute, comm, mem, mem_avail
+
+
+def _topology_zoo():
+    het = [Site(("A30", "A30"), name="A"), Site(("T4", "T4"), name="B"),
+           Site(("RTX", "RTX"), name="C"), Site(("A30", "A30"), name="D")]
+    return ([PAPER_CLUSTERS[n] for n in PAPER_CLUSTERS]
+            + [line("l4", het, [Link(5e-3, 3.0), Link(50e-3, 1.0),
+                                Link(0.5e-3, 3.0)]),
+               ring("r4", het, [Link(5e-3, 3.0), Link(50e-3, 1.0),
+                                Link(0.5e-3, 3.0), Link(90e-3, 2.0)])])
+
+
+def test_registry_prices_paper_techniques_bit_for_bit():
+    """The acceptance gate: every paper technique priced through the
+    ``TECHNIQUE_SPECS`` registry is EXACTLY (``==``, not approx) the
+    pre-refactor chain's number — subsets, stage orders, schedules,
+    balances, explicit splits and all."""
+    for cluster in _topology_zoo():
+        from repro.core.costmodel import as_topology
+        topo = as_topology(cluster)
+        n = topo.n_sites
+        for wl in (WL_M, WL_L, dataclasses.replace(WL_M, microbatches=8)):
+            for tech in TECHNIQUES:
+                for vms in [None] + [[i] for i in range(n)]:
+                    got = technique_step_cost(tech, wl, cluster, vms)
+                    want = _legacy_step_cost(tech, wl, cluster, vms)
+                    assert (got.compute_s, got.comm_s,
+                            got.mem_required_gb,
+                            got.mem_available_gb) == want, (tech, vms)
+            sel = list(range(min(n, 3)))
+            for sched in ("gpipe", "1f1b", "interleaved", "interleaved3"):
+                for bal in ("even", "tflops"):
+                    for order in itertools.permutations(sel):
+                        got = technique_step_cost(
+                            "pipeshard", wl, cluster, sel,
+                            stage_order=order, stage_balance=bal,
+                            schedule=sched)
+                        want = _legacy_step_cost(
+                            "pipeshard", wl, cluster, sel,
+                            stage_order=order, stage_balance=bal,
+                            schedule=sched)
+                        assert (got.compute_s, got.comm_s,
+                                got.mem_required_gb,
+                                got.mem_available_gb) == want, \
+                            (sched, bal, order)
+
+
+@settings(max_examples=30, deadline=None)
+@given(model=st.sampled_from(["gpt2m", "gpt2L"]),
+       gb=st.sampled_from([16, 32, 52]),
+       micro=st.sampled_from([2, 4, 8]),
+       gpus=st.lists(st.sampled_from(["RTX", "T4", "A30"]),
+                     min_size=3, max_size=3),
+       lats=st.lists(st.floats(0.05, 150.0), min_size=3, max_size=3),
+       tech=st.sampled_from(TECHNIQUES),
+       sched=st.sampled_from(["gpipe", "1f1b", "interleaved"]),
+       bal=st.sampled_from(["even", "tflops"]))
+def test_registry_matches_legacy_chain_property(model, gb, micro, gpus,
+                                                lats, tech, sched, bal):
+    """Registry == legacy chain, bit-for-bit, over random workloads and
+    topologies (the tentpole's refactor-safety property)."""
+    wl = dataclasses.replace(paper_workload(get_config(model),
+                                            global_batch=gb),
+                             microbatches=micro)
+    topo = ring("t", [Site((g, g), name=f"S{i}")
+                      for i, g in enumerate(gpus)],
+                [Link(l * 1e-3, 3.0) for l in lats])
+    for vms in (None, [0], [0, 2]):
+        if tech == "pipeshard" and vms is not None and len(vms) < 2:
+            continue
+        got = technique_step_cost(tech, wl, topo, vms, schedule=sched,
+                                  stage_balance=bal)
+        want = _legacy_step_cost(tech, wl, topo, vms, schedule=sched,
+                                 stage_balance=bal)
+        assert (got.compute_s, got.comm_s, got.mem_required_gb,
+                got.mem_available_gb) == want
+
+
+def test_unknown_technique_raises_with_registry_listing():
+    with pytest.raises(ValueError, match="unknown technique"):
+        technique_step_cost("ddp", WL_M, PAPER_CLUSTERS["TACC-TACC"])
+
+
+def test_register_technique_rejects_duplicates():
+    spec = TECHNIQUE_SPECS["data"]
+    with pytest.raises(ValueError, match="already registered"):
+        register_technique(spec)
+    assert register_technique(spec, replace=True) is spec
+
+
+# ------------------------------------------------------------------ #
+# the beyond-paper specs: memory fractions, orderings, carrier dtype
+# ------------------------------------------------------------------ #
+
+def test_all_techniques_extend_paper_pool():
+    assert ALL_TECHNIQUES[:4] == TECHNIQUES
+    assert set(ALL_TECHNIQUES) == set(TECHNIQUE_SPECS)
+    assert all(TECHNIQUE_SPECS[t].paper == (t in TECHNIQUES)
+               for t in ALL_TECHNIQUES)
+
+
+def test_state_bytes_ordering_fsdp_lowest():
+    """fsdp <= shard_zero <= zero2 <= data state bytes, on every paper
+    cluster and multi-GPU selection (the ZeRO ladder: each stage
+    partitions strictly more of the train state)."""
+    tol = 1 + 1e-12
+    for cluster in _topology_zoo():
+        for wl in (WL_M, WL_L):
+            f, sz, z2, d = (technique_state_bytes(t, wl, cluster)
+                            for t in ("fsdp", "shard_zero", "zero2",
+                                      "data"))
+            assert f <= sz * tol <= z2 * tol ** 2 <= d * tol ** 3
+            assert d == wl.bytes_train_state()
+
+
+def test_state_bytes_monotone_non_increasing_in_pool_size():
+    """Adding sites (growing n) never increases any technique's per-GPU
+    state bytes."""
+    for wl in (WL_M, WL_L):
+        for tech in ("data", "zero2", "shard_zero", "fsdp"):
+            prev = None
+            for n in (2, 3, 4, 6):
+                sites = [Site(("A30", "A30"), name=f"S{i}")
+                         for i in range(n)]
+                topo = make_topology("t", sites, {
+                    (i, j): Link(1e-3, 3.0)
+                    for i, j in itertools.combinations(range(n), 2)})
+                b = technique_state_bytes(tech, wl, topo)
+                if prev is not None:
+                    assert b <= prev * (1 + 1e-12), (tech, n)
+                prev = b
+
+
+def test_memory_model_rejects_unsupported_placement():
+    from repro.core.costmodel import _make_context
+    ctx = _make_context(WL_M, PAPER_CLUSTERS["TACC-TACC"], None)
+    with pytest.raises(ValueError, match="unsupported memory placement"):
+        MemoryModel("pool", "replicated").state_bytes(ctx)
+
+
+def test_fsdp_memory_below_zero2_and_shard():
+    """The fsdp spec is the lowest-memory plan everywhere — the plan
+    that revives memory-tight selections (docs/cost-model.md)."""
+    for cluster in _topology_zoo():
+        for wl in (WL_M, WL_L):
+            mems = {t: technique_step_cost(t, wl, cluster).mem_required_gb
+                    for t in ALL_TECHNIQUES}
+            assert mems["fsdp"] <= min(mems.values()) * (1 + 1e-12)
+
+
+def test_carrier_dtype_scales():
+    assert carrier_scale("fp32") == 1.0
+    assert carrier_scale("bf16") == 0.5
+    with pytest.raises(ValueError):
+        carrier_scale("fp16")
+    with pytest.raises(ValueError):
+        technique_step_cost("pipeshard", WL_M,
+                            PAPER_CLUSTERS["TACC-TACC"],
+                            carrier_dtype="int8")
+
+
+def test_bf16_carrier_halves_p2p_bytes_exactly():
+    """On zero-latency links between single-GPU sites (no intra-op
+    all-reduces, no latency rounds) the Pipeshard comm term is pure p2p
+    bytes, so the bf16 carrier prices exactly half of fp32."""
+    sites = [Site(("A30",), name=f"S{i}") for i in range(3)]
+    topo = line("z", sites, [Link(0.0, 3.0)] * 2)
+    for sched in ("gpipe", "1f1b", "interleaved"):
+        fp32 = technique_step_cost("pipeshard", WL_M, topo,
+                                   schedule=sched)
+        bf16 = technique_step_cost("pipeshard", WL_M, topo,
+                                   schedule=sched, carrier_dtype="bf16")
+        assert bf16.comm_s == fp32.comm_s / 2, sched
+        assert bf16.compute_s == fp32.compute_s
+        assert bf16.mem_required_gb == fp32.mem_required_gb
+
+
+def test_carrier_dtype_only_touches_pipeshard_p2p():
+    """Collective techniques ignore the carrier knob, and a pipeline's
+    latency rounds and intra-op all-reduces are carrier-invariant."""
+    c = PAPER_CLUSTERS["UTAH-MASS"]
+    for tech in ("data", "zero2", "shard", "shard_zero", "fsdp"):
+        a = technique_step_cost(tech, WL_M, c)
+        b = technique_step_cost(tech, WL_M, c, carrier_dtype="bf16")
+        assert (a.compute_s, a.comm_s, a.mem_required_gb) \
+            == (b.compute_s, b.comm_s, b.mem_required_gb), tech
+    a = technique_step_cost("pipeshard", WL_M, c)
+    b = technique_step_cost("pipeshard", WL_M, c, carrier_dtype="bf16")
+    assert b.comm_s < a.comm_s                  # cheaper, not free
+    assert b.comm_s > a.comm_s / 2              # latency + intra remain
+
+
+def test_shard_zero_degenerates_to_shard_on_one_site():
+    """With a single participating site the hybrid's inter-site ZeRO
+    term vanishes and its intra term is exactly shard's."""
+    c = PAPER_CLUSTERS["TACC-TACC"]
+    sz = technique_step_cost("shard_zero", WL_M, c, [0])
+    sh = technique_step_cost("shard", WL_M, c, [0])
+    assert sz.comm_s == sh.comm_s
+    assert sz.compute_s == sh.compute_s
+    assert sz.mem_required_gb == pytest.approx(sh.mem_required_gb)
+
+
+def test_shard_zero_cheaper_collectives_than_zero2_multi_site():
+    """The hybrid's point: TP inside each site keeps the per-layer
+    all-reduces off the WAN, and its cross-site ZeRO volume is 1/tp of
+    zero2's — so on every multi-site paper slice it out-prices zero2's
+    comm term."""
+    for name in MULTI_SITE:
+        c = PAPER_CLUSTERS[name]
+        sz = technique_step_cost("shard_zero", WL_M, c)
+        z2 = technique_step_cost("zero2", WL_M, c)
+        assert sz.comm_s < z2.comm_s, name
+
+
+def test_fsdp_latency_bound_on_wan():
+    """fsdp pays 2L+1 latency rounds, so its comm degrades with WAN RTT
+    far faster than zero2's — it is a LAN/single-site plan."""
+    lo = fabric_cluster("lo", ("A30", "A30"), ("A30", "A30"), 0.1)
+    hi = fabric_cluster("hi", ("A30", "A30"), ("A30", "A30"), 103.0)
+    deg = lambda t: technique_step_cost(t, WL_M, hi).comm_s \
+        / technique_step_cost(t, WL_M, lo).comm_s
+    assert deg("fsdp") > deg("zero2")
 
 
 def test_interleaved_prices_the_wrap_link():

@@ -1,6 +1,7 @@
-"""Plan-equivalence tests: the paper's four techniques (plus shard+ZeRO)
-must compute the same optimizer trajectory.  Runs in a subprocess with 8
-forced host devices (device count locks at first jax init)."""
+"""Plan-equivalence tests: every registered plan (the paper's four plus
+shard_zero and fsdp — ``repro.core.plans.PLANS``) must compute the same
+optimizer trajectory.  Runs in a subprocess with 8 forced host devices
+(device count locks at first jax init)."""
 import json
 import subprocess
 import sys
@@ -29,8 +30,10 @@ def _run_plan_check(env, extra_args=()):
 @pytest.mark.slow
 @needs_partial_auto
 def test_all_plans_equivalent_dense(subproc_env):
+    from repro.core.plans import PLANS
     res = _run_plan_check(subproc_env)
-    assert set(res) == {"data", "zero2", "shard", "shard_zero", "pipeshard"}
+    # the default plan list derives from the registry (incl. fsdp)
+    assert set(res) == set(PLANS)
     base = res["data"]
     for name, r in res.items():
         np.testing.assert_allclose(r["losses"], base["losses"], rtol=2e-3,

@@ -8,7 +8,8 @@ import pytest
 from prophelpers import given, settings, st
 
 from repro.configs import get_config
-from repro.core.costmodel import (PAPER_CLUSTERS, fabric_cluster,
+from repro.core.costmodel import (ALL_TECHNIQUES, PAPER_CLUSTERS,
+                                  TECHNIQUES, fabric_cluster,
                                   paper_workload)
 from repro.core.search import (Candidate, PlanSearch, algorithm1_select,
                                stage_orders)
@@ -433,6 +434,136 @@ def test_interleaved_shrinks_bubble_but_pays_p2p():
 
 
 # ------------------------------------------------------------------ #
+# the extended technique pool (docs/cost-model.md): shard_zero / fsdp
+# winners the paper's four-technique space cannot express
+# ------------------------------------------------------------------ #
+
+def test_extended_pool_widens_enumeration_only():
+    t = make_topology("f", _sites(3), {
+        (i, j): Link(1e-3, 3.0)
+        for i, j in itertools.combinations(range(3), 2)})
+    paper = list(PlanSearch(WL_M, t).candidates())
+    full = list(PlanSearch(WL_M, t,
+                           techniques=ALL_TECHNIQUES).candidates())
+    # +2 collective techniques on each of the 7 non-empty subsets
+    assert len(full) == len(paper) + 2 * 7
+    assert {c.technique for c in full} == set(ALL_TECHNIQUES)
+    # the default pool is still the paper's four
+    assert {c.technique for c in paper} == set(TECHNIQUES)
+
+
+def test_fsdp_wins_memory_tight_lan_selection():
+    """The acceptance scenario (ISSUE 5): gpt2L on the paper's
+    TACC-TACC slice — Data's replicated state (25 GB) exceeds every
+    site's memory, so the paper pool falls back to zero2; the extended
+    pool instead finds fsdp on the RTX site alone (state/n sharding
+    fits in 24 GB, and its 3x-param-bytes gather volume beats zero2's
+    2.2x-grad all-reduce on the metro link)."""
+    wl = paper_workload(get_config("gpt2L"))
+    c = PAPER_CLUSTERS["TACC-TACC"]
+    from repro.core.costmodel import technique_step_cost
+    assert not technique_step_cost("data", wl, c, [0]).fits
+    assert not technique_step_cost("data", wl, c).fits
+    paper = PlanSearch.for_cluster(wl, c).best()
+    assert paper.candidate.technique == "zero2"
+    full = PlanSearch.for_cluster(wl, c,
+                                  techniques=ALL_TECHNIQUES).best()
+    assert full.candidate.technique == "fsdp"
+    assert full.candidate.sites == (0,)
+    assert full.tflops > paper.tflops
+
+
+def test_shard_zero_wins_metro_lan3():
+    """The 3-site demo (examples/select_technique.py --topology lan3
+    --techniques all): three 16GB T4 sites a campus apart, gpt2L — the
+    hybrid shard_zero (TP inside each site, ZeRO-2 across) beats every
+    paper-pool plan by keeping the per-layer all-reduces off the WAN
+    while still partitioning the optimizer state."""
+    wl = paper_workload(get_config("gpt2L"))
+    topo = line("lan3", _sites(3, gpu="T4"), [Link(0.1e-3, 3.0)] * 2)
+    paper = PlanSearch(wl, topo).best()
+    full = PlanSearch(wl, topo, techniques=ALL_TECHNIQUES).best()
+    assert full.candidate.technique == "shard_zero"
+    assert full.candidate.sites == (0, 1, 2)
+    assert full.tflops > paper.tflops
+
+
+def test_extended_algorithm1_probes_and_picks_fsdp():
+    """Algorithm 1's opt-in extended pool: the fsdp single-site probes
+    join the paper's probe set and rescue the memory-tight TACC-TACC
+    gpt2L selection; the default probe set stays bit-for-bit the
+    paper's."""
+    wl = paper_workload(get_config("gpt2L"))
+    c = PAPER_CLUSTERS["TACC-TACC"]
+    prober = CostModelProber(wl, c)
+    legacy = select_technique(prober, delta=0.1)
+    default = select_technique(prober, delta=0.1, extended=False)
+    assert default.probes == legacy.probes
+    assert default.technique == "zero2"
+    ext = select_technique(prober, delta=0.1, extended=True)
+    assert (ext.technique, ext.vms) == ("fsdp", [0])
+    for key in ("fsdp@V1", "fsdp@V2", "fsdp@both", "shard_zero@both"):
+        assert key in ext.probes
+    # a widened PlanSearch derives extended probing automatically
+    searched = PlanSearch.for_cluster(
+        wl, c, techniques=ALL_TECHNIQUES).select(delta=0.1)
+    assert (searched.technique, searched.vms) == ("fsdp", [0])
+
+
+def test_extended_algorithm1_keeps_paper_picks_when_paper_tech_wins():
+    """On every paper (cluster × model) where the paper pool's winner
+    stands, the extended probe set must not flip the selection away
+    from it arbitrarily — it only changes picks when an extended probe
+    strictly wins its tier."""
+    for cname in sorted(PAPER_CLUSTERS):
+        for wl in (WL_M,):
+            prober = CostModelProber(wl, PAPER_CLUSTERS[cname])
+            base = select_technique(prober, delta=0.1)
+            ext = select_technique(prober, delta=0.1, extended=True)
+            if ext.technique in TECHNIQUES:
+                assert (ext.technique, ext.vms) == (base.technique,
+                                                    base.vms), cname
+
+
+def test_bf16_carrier_flips_pipeshard_schedule():
+    """The acceptance scenario (ISSUE 5): a 3-site A30 metro line whose
+    3 GB/s WAN edges make the interleaved schedule's v-fold boundary
+    crossings just too dear at fp32 carriers — GPipe wins.  Halving the
+    wire bytes (carrier_dtype='bf16') flips the same cell's winning
+    schedule to interleaved: the bubble saving now outruns the p2p
+    bill."""
+    topo = line("a30line3", _sites(3), [Link(1e-3, 3.0)] * 2)
+
+    def best_all_site(carrier):
+        s = PlanSearch(WL_M, topo, techniques=("pipeshard",),
+                       carrier_dtype=carrier)
+        return max((c for c in s.search()
+                    if c.feasible and len(c.candidate.sites) == 3),
+                   key=lambda c: c.tflops)
+
+    fp32 = best_all_site("fp32")
+    bf16 = best_all_site("bf16")
+    assert fp32.candidate.schedule == "gpipe"
+    assert bf16.candidate.schedule == "interleaved"
+    assert bf16.tflops > fp32.tflops        # cheaper wire, faster plan
+    # and the fp32 pricing is untouched by the knob's existence
+    legacy = PlanSearch(WL_M, topo, techniques=("pipeshard",))
+    assert legacy.evaluate(fp32.candidate) == fp32.tflops
+
+
+def test_carrier_dtype_threads_through_probe_path():
+    """The analytic Algorithm-1 probe path prices the search's carrier
+    dtype too (same number as evaluate())."""
+    topo = line("a30line3", _sites(3), [Link(1e-3, 3.0)] * 2)
+    s = PlanSearch(WL_M, topo, carrier_dtype="bf16")
+    for cand in s.candidates():
+        if cand.technique == "pipeshard":
+            assert s._probe("pipeshard",
+                            s.placement(cand)) == s.evaluate(cand)
+            break
+
+
+# ------------------------------------------------------------------ #
 # pruning: dominated-subset elimination + stage-order beam must be
 # lossless for the best plan (the --exact escape hatch is the oracle)
 # ------------------------------------------------------------------ #
@@ -473,6 +604,30 @@ def test_pruned_equals_exhaustive_on_example_topologies():
                 PlanSearch(wl, topo, stage_balance="tflops"))
 
 
+def test_pruned_equals_exhaustive_with_extended_pool():
+    """The widened dominance test (fsdp's n-dependent memory and
+    shard_zero's intra-site corners) keeps pruning lossless over the
+    six-technique pool — incl. ragged per-site GPU counts, which only
+    shard_zero's tp/intra terms can distinguish."""
+    topos = [edge3(),
+             ring("r3", _sites(3),
+                  [Link(5e-3, 3.0), Link(5e-3, 3.0), Link(120e-3, 3.0)]),
+             line("lan3", _sites(3, gpu="T4"), [Link(0.1e-3, 3.0)] * 2),
+             make_topology(
+                 "rag4",
+                 [Site(("A30", "A30", "A30", "A30")), Site(("T4", "T4")),
+                  Site(("RTX", "RTX")), Site(("A30", "A30"))],
+                 {(0, 1): Link(1e-3, 3.0), (1, 2): Link(30e-3, 3.0),
+                  (2, 3): Link(1e-3, 3.0), (0, 3): Link(90e-3, 3.0)})]
+    for topo in topos:
+        for wl in (WL_M, WL_L):
+            _assert_prune_lossless(
+                PlanSearch(wl, topo, techniques=ALL_TECHNIQUES))
+            _assert_prune_lossless(
+                PlanSearch(wl, topo, techniques=ALL_TECHNIQUES,
+                           carrier_dtype="bf16"))
+
+
 @settings(max_examples=30, deadline=None)
 @given(n=st.integers(2, 4),
        gpus=st.lists(st.sampled_from(["RTX", "T4", "A30"]),
@@ -495,6 +650,35 @@ def test_pruned_equals_exhaustive_property(n, gpus, lats, shape):
             for i, j in itertools.combinations(range(n), 2)})
     for wl in (WL_M, WL_L):
         _assert_prune_lossless(PlanSearch(wl, topo))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 4),
+       gpus=st.lists(st.sampled_from(["RTX", "T4", "A30"]),
+                     min_size=4, max_size=4),
+       per_site=st.lists(st.sampled_from([1, 2, 4]),
+                         min_size=4, max_size=4),
+       lats=st.lists(st.floats(0.05, 150.0), min_size=6, max_size=6),
+       shape=st.sampled_from(["full", "ring", "line"]))
+def test_pruned_equals_exhaustive_extended_property(n, gpus, per_site,
+                                                    lats, shape):
+    """Pruned == exhaustive over the six-technique pool on random
+    topologies with ragged per-site GPU counts (the widened acceptance
+    gate of ISSUE 5)."""
+    sites = [Site((gpus[i],) * per_site[i], name=f"S{i}")
+             for i in range(n)]
+    links = [Link(l * 1e-3, 3.0) for l in lats]
+    if shape == "ring" and n >= 3:
+        topo = ring("t", sites, links[:n])
+    elif shape == "line":
+        topo = line("t", sites, links[:n - 1])
+    else:
+        topo = make_topology("t", sites, {
+            (i, j): links[(i * n + j) % len(links)]
+            for i, j in itertools.combinations(range(n), 2)})
+    for wl in (WL_M, WL_L):
+        _assert_prune_lossless(
+            PlanSearch(wl, topo, techniques=ALL_TECHNIQUES))
 
 
 def test_beam_stage_orders_exhaustive_below_five_sites():

@@ -157,6 +157,20 @@ def test_topology_mesh_spec_rejects_ragged_sites():
         topology_mesh_spec(t)
 
 
+def test_placement_mesh_wires_flat_plans():
+    """The extended pool's winners (fsdp / shard_zero — flat, not
+    pipelined) realize through ``launch.mesh.placement_mesh`` as plain
+    topology meshes over the placement's site subset."""
+    import jax
+    from repro.core.plans import get_plan
+    from repro.launch.mesh import placement_mesh
+    topo = make_topology("one", [Site(("A30",), name="A")], {})
+    mesh = placement_mesh(topo, get_plan("fsdp"), Placement((0,)),
+                          devices=jax.devices()[:1])
+    assert mesh.axis_names == ("pod", "data", "model")
+    assert mesh.devices.size == 1
+
+
 def test_placement_pod_permutation():
     p = Placement(sites=(1, 3, 4), stage_order=(4, 1, 3))
     assert p.pod_permutation() == (2, 0, 1)

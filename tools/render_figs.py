@@ -14,7 +14,9 @@ Renders, per matching artifact:
     curves with the winner flips marked;
   * ``topology_sweep_<mode>.json`` → winner maps — one colored cell per
     (topology × GPU mix), one panel per latency regime, one figure per
-    model.
+    model; ``topology_sweep_all_<mode>.json`` (the ``--techniques all``
+    pool) additionally tags cells a beyond-paper technique wins
+    (SZ = shard_zero, FS = fsdp — docs/cost-model.md).
 
 Colors are a fixed per-entity assignment from a validated
 colorblind-safe categorical palette (techniques and schedules each keep
@@ -272,8 +274,9 @@ def fig_winner_map(record: dict, model: str) -> str:
     panel_w = label_w + len(mixes) * cell
     w = 16 + len(regimes) * (panel_w + panel_gap)
     h = top + len(topos) * row_h + 60
+    pool = ", all techniques" if record.get("techniques") == "all" else ""
     body = [_text(16, 22, f"Winner map — {model} "
-                  f"(balance={record['balance']})", size=13,
+                  f"(balance={record['balance']}{pool})", size=13,
                   weight="600")]
     by = {(e["regime"], e["kind"], e["n"], e["mix"]): e for e in entries}
     for pi, regime in enumerate(regimes):
@@ -305,20 +308,29 @@ def fig_winner_map(record: dict, model: str) -> str:
                     f"y='{y + 1}' width='{cell - 2}' "
                     f"height='{row_h - 2}' rx='3' fill='{color}'>"
                     f"<title>{_esc(tip)}</title></rect>")
+                tag = None
                 if win and win.get("schedule", "gpipe") != "gpipe":
+                    tag = {"1f1b": "1F", "interleaved": "IL"}.get(
+                        win["schedule"], win["schedule"][:2])
+                elif win and win.get("extended"):
+                    # beyond-paper technique took the cell (mirrors the
+                    # sweep's † markdown tag, docs/cost-model.md)
+                    tag = {"shard_zero": "SZ", "fsdp": "FS"}.get(
+                        win["technique"], win["technique"][:2].upper())
+                if tag:
                     body.append(_text(
                         x0 + label_w + ci * cell + cell / 2, y + 15,
-                        {"1f1b": "1F", "interleaved": "IL"}.get(
-                            win["schedule"], win["schedule"][:2]),
-                        size=9, color=SURFACE, anchor="middle",
+                        tag, size=9, color=SURFACE, anchor="middle",
                         weight="600"))
     techs = sorted({(e["winner"] or {}).get("technique") for e in entries
                     if e["winner"]})
     leg = [(t, TECH_COLOR.get(t, OOM)) for t in techs] + [("OOM", OOM)]
     body += _legend(16, h - 28, leg, dx=96)
-    body.append(_text(16, h - 10, "1F / IL cell tags: the winning "
-                      "pipeline schedule is 1F1B / interleaved "
-                      "(docs/schedules.md)", size=10, color=INK2))
+    note = ("1F / IL cell tags: the winning pipeline schedule is 1F1B / "
+            "interleaved (docs/schedules.md)")
+    if record.get("techniques") == "all":
+        note += "; SZ / FS: a beyond-paper technique won the cell"
+    body.append(_text(16, h - 10, note, size=10, color=INK2))
     return _svg(w, h, body)
 
 
@@ -354,12 +366,14 @@ def render_all(src: str, out: str, mode: str = "full",
         rec = json.load(open(p))
         emit(f"latency_{rec['kind']}{rec['n']}_{mode}.svg",
              fig_latency_sweep(rec))
-    p = os.path.join(src, f"topology_sweep_{mode}.json")
-    if os.path.exists(p):
-        rec = json.load(open(p))
-        for model in sorted({e["model"] for e in rec["entries"]}):
-            emit(f"winners_{model}_{mode}.svg",
-                 fig_winner_map(rec, model))
+    for stem, suffix in ((f"topology_sweep_{mode}", ""),
+                         (f"topology_sweep_all_{mode}", "_all")):
+        p = os.path.join(src, f"{stem}.json")
+        if os.path.exists(p):
+            rec = json.load(open(p))
+            for model in sorted({e["model"] for e in rec["entries"]}):
+                emit(f"winners_{model}{suffix}_{mode}.svg",
+                     fig_winner_map(rec, model))
     return written
 
 
