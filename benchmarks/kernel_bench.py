@@ -1,13 +1,28 @@
 """Benchmark: kernel micro-bench (interpret mode on CPU — correctness-path
 timing only; TPU wall-times come from deployment).  Emits
-name,us_per_call,derived CSV per the harness convention."""
+name,us_per_call,derived CSV per the harness convention plus a
+machine-readable ``benchmarks/out/kernel_bench.json`` artifact with
+per-kernel us/call, GFLOP/s-equivalent throughput, and fp32 vs int8
+ratios — ``benchmarks/run.py`` aggregates it into the repo-root
+``BENCH_6.json`` perf-trajectory file.  Fails (non-zero return) when an
+int8 kernel drifts from its fp32 reference, so the timing rows can
+never outlive the numerics they claim to measure."""
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from benchmarks.sweep_common import md_table, write_outputs
 
 
 def _time(fn, *args, iters: int = 3) -> float:
@@ -18,34 +33,121 @@ def _time(fn, *args, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(print_fn=print) -> int:
+def run(print_fn=print, out: str | None = None) -> int:
     from repro.kernels import ops, ref
     rng = np.random.default_rng(0)
+    n_fail = 0
+    kernels: dict = {}
     print_fn("name,us_per_call,derived")
 
+    # -- attention: fp32 flash kernel vs the int8-KV variant ------------
     B, S, H, KV, D = 1, 128, 4, 2, 64
     q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
-    t_kernel = _time(lambda *a: ops.flash_attention(
+    t_fp = _time(lambda *a: ops.flash_attention(
         *a, causal=True, block_q=64, block_k=64, interpret=True), q, k, v)
     flops = 4 * B * S * S * H * D
-    print_fn(f"flash_attention_interp_{S},{t_kernel:.0f},"
-             f"{flops / t_kernel / 1e6:.3f}GFLOPs_equiv")
+    print_fn(f"flash_attention_interp_{S},{t_fp:.0f},"
+             f"{flops / t_fp / 1e6:.3f}GFLOPs_equiv")
+    kernels["flash_attention_fp32"] = {
+        "shape": [B, S, H, KV, D], "us_per_call": round(t_fp, 1),
+        "gflops_equiv": round(flops / t_fp / 1e3, 4)}
 
+    kq, ks = ops.quantize(k, block=D, axis=-1)
+    vq, vs = ops.quantize(v, block=D, axis=-1)
+    ks, vs = ks[..., 0], vs[..., 0]
+    t_i8 = _time(lambda *a: ops.flash_attention_int8kv(
+        *a, causal=True, block_q=64, block_k=64, interpret=True),
+        q, kq, ks, vq, vs)
+    print_fn(f"flash_attention_int8kv_interp_{S},{t_i8:.0f},"
+             f"fp32_ratio_{t_fp / t_i8:.2f}x")
+    kernels["flash_attention_int8kv"] = {
+        "shape": [B, S, H, KV, D], "us_per_call": round(t_i8, 1),
+        "gflops_equiv": round(flops / t_i8 / 1e3, 4),
+        "speedup_vs_fp32": round(t_fp / t_i8, 3)}
+    o_fp = ops.flash_attention(q, k, v, causal=True, block_q=64,
+                               block_k=64, interpret=True)
+    o_i8 = ops.flash_attention_int8kv(q, kq, ks, vq, vs, causal=True,
+                                      block_q=64, block_k=64,
+                                      interpret=True)
+    cos = float(jnp.sum(o_fp * o_i8) / jnp.maximum(
+        jnp.linalg.norm(o_fp) * jnp.linalg.norm(o_i8), 1e-9))
+    if cos < 0.999:
+        n_fail += 1
+        print_fn(f"CLAIM-FAIL: int8-KV attention cosine {cos:.5f} < 0.999 "
+                 f"vs fp32 flash — timings above measure a broken kernel")
+
+    # -- matmul: jnp fp32 vs the int8 blocked-quantized kernel ----------
+    M, K, N = 256, 256, 256
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    mm_fp = jax.jit(jnp.matmul)
+    t_mm = _time(mm_fp, x, w)
+    mm_flops = 2 * M * K * N
+    print_fn(f"matmul_fp32_{M},{t_mm:.0f},"
+             f"{mm_flops / t_mm / 1e6:.3f}GFLOPs_equiv")
+    kernels["matmul_fp32"] = {
+        "shape": [M, K, N], "us_per_call": round(t_mm, 1),
+        "gflops_equiv": round(mm_flops / t_mm / 1e3, 4)}
+    t_q = _time(lambda *a: ops.int8_matmul(
+        *a, block_m=128, block_k=128, block_n=128, interpret=True), x, w)
+    print_fn(f"int8_matmul_interp_{M},{t_q:.0f},"
+             f"fp32_ratio_{t_mm / t_q:.2f}x")
+    kernels["int8_matmul"] = {
+        "shape": [M, K, N], "us_per_call": round(t_q, 1),
+        "gflops_equiv": round(mm_flops / t_q / 1e3, 4),
+        "speedup_vs_fp32": round(t_mm / t_q, 3)}
+    y_fp = mm_fp(x, w)
+    y_q = ops.int8_matmul(x, w, block_m=128, block_k=128, block_n=128,
+                          interpret=True)
+    rel = float(jnp.linalg.norm(y_q - y_fp) / jnp.linalg.norm(y_fp))
+    if rel > 0.02:
+        n_fail += 1
+        print_fn(f"CLAIM-FAIL: int8_matmul rel error {rel:.4f} > 0.02 "
+                 f"vs fp32 — timings above measure a broken kernel")
+
+    # -- SSD scan vs the dense reference --------------------------------
     B, S, nh, hd, ds = 1, 256, 2, 32, 16
     xh = jnp.asarray(rng.standard_normal((B, S, nh, hd)), jnp.float32)
     dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, nh)), jnp.float32)
     bs = jnp.asarray(rng.standard_normal((B, S, ds)), jnp.float32)
     cs = jnp.asarray(rng.standard_normal((B, S, ds)), jnp.float32)
     a = jnp.asarray(-rng.uniform(0.5, 2, (nh,)), jnp.float32)
-    t_ssd = _time(lambda *x: ops.ssd_scan(*x, chunk=64, interpret=True),
+    t_ssd = _time(lambda *x_: ops.ssd_scan(*x_, chunk=64, interpret=True),
                   xh, dt, bs, cs, a)
-    t_ref = _time(lambda *x: ref.ssd_ref(
-        x[0].transpose(0, 2, 1, 3), x[1].transpose(0, 2, 1), *x[2:]),
+    t_ref = _time(lambda *x_: ref.ssd_ref(
+        x_[0].transpose(0, 2, 1, 3), x_[1].transpose(0, 2, 1), *x_[2:]),
         xh, dt, bs, cs, a)
     print_fn(f"ssd_scan_interp_{S},{t_ssd:.0f},vs_ref_{t_ref:.0f}us")
-    return 0
+    kernels["ssd_scan"] = {
+        "shape": [B, S, nh, hd, ds], "us_per_call": round(t_ssd, 1),
+        "ref_us_per_call": round(t_ref, 1)}
+
+    record = {
+        "backend": jax.default_backend(), "interpret": True, "iters": 3,
+        "kernels": kernels,
+        "ratios": {
+            "flash_attention_int8kv_vs_fp32": round(t_fp / t_i8, 3),
+            "int8_matmul_vs_fp32": round(t_mm / t_q, 3)},
+        "numerics": {"int8kv_cosine": round(cos, 6),
+                     "int8_matmul_rel_err": round(rel, 6)},
+    }
+    rows = [[name, f"{r['us_per_call']:.0f}",
+             f"{r.get('gflops_equiv', '-')}",
+             f"{r['speedup_vs_fp32']:.2f}x" if "speedup_vs_fp32" in r
+             else "-"]
+            for name, r in kernels.items()]
+    md = ("# Kernel micro-bench (interpret mode)\n\n"
+          "Correctness-path timings on the CPU interpreter — relative "
+          "numbers only; TPU wall-times come from deployment.\n\n"
+          + md_table(["kernel", "us/call", "GFLOP/s equiv",
+                      "speedup vs fp32"], rows))
+    if out is None:
+        out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "out")
+    write_outputs(out, "kernel_bench", record, md, print_fn=print_fn)
+    return n_fail
 
 
 if __name__ == "__main__":

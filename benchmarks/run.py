@@ -4,12 +4,65 @@ dry-run roofline and kernel micro-bench.
     PYTHONPATH=src python -m benchmarks.run            # everything cheap
     PYTHONPATH=src python -m benchmarks.run --sweep    # + re-run dry-runs
 
-Exit code = number of failed paper-claim checks.
+Aggregates the kernel micro-bench artifact and the wire-dtype winner map
+into the repo-root ``BENCH_6.json`` perf-trajectory file (the ROADMAP's
+measured-trajectory item).  Exit code = number of failed paper-claim
+checks.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def write_bench_trajectory(out_dir: str, print_fn=print) -> int:
+    """Compose ``BENCH_6.json`` at the repo root from the per-module
+    artifacts under ``out_dir``; returns 1 if an input is missing."""
+    kb_path = os.path.join(out_dir, "kernel_bench.json")
+    wire_path = os.path.join(out_dir, "topology_sweep_wire_smoke.json")
+    try:
+        with open(kb_path) as f:
+            kb = json.load(f)
+        with open(wire_path) as f:
+            wire = json.load(f)
+    except OSError as e:
+        print_fn(f"CLAIM-FAIL: BENCH_6.json inputs missing ({e})")
+        return 1
+    entries = wire["entries"]
+    int8_cells = [
+        {k: e[k] for k in ("kind", "n", "mix", "model", "regime")}
+        | {"key": e["winner"]["key"], "tflops": e["winner"]["tflops"]}
+        for e in entries
+        if (e["winner"] or {}).get("wire_dtype") == "int8"]
+    bench = {
+        "pr": 6,
+        "source": "benchmarks/run.py",
+        "backend": kb["backend"],
+        "kernels": kb["kernels"],
+        "kernel_ratios": kb["ratios"],
+        "kernel_numerics": kb["numerics"],
+        "wire_sweep": {
+            "mode": wire["mode"],
+            "wire_dtypes": wire["wire_dtypes"],
+            "n_cells": len(entries),
+            "n_int8_winners": len(int8_cells),
+            "int8_cells": int8_cells,
+        },
+    }
+    path = os.path.join(_ROOT, "BENCH_6.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print_fn(f"wrote {path} ({len(int8_cells)}/{len(entries)} int8-wire "
+             f"winner cells)")
+    return 0
 
 
 def main() -> None:
@@ -39,8 +92,14 @@ def main() -> None:
     n_fail += topology_sweep.run(smoke=True)
     print("\n===== topology_sweep (extended technique pool, smoke) =====")
     n_fail += topology_sweep.run(smoke=True, techniques="all")
+    print("\n===== topology_sweep (fp32/bf16/int8 wire pool, smoke) =====")
+    n_fail += topology_sweep.run(smoke=True, wire=True)
     print("\n===== latency_sweep (Fig.5-style curves, smoke) =====")
     n_fail += latency_sweep.run(smoke=True)
+
+    print("\n===== BENCH_6.json (perf trajectory) =====")
+    n_fail += write_bench_trajectory(
+        os.path.join(_ROOT, "benchmarks", "out"))
 
     if args.sweep:
         import subprocess

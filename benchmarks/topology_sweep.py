@@ -10,6 +10,7 @@ Table-I latency regimes, and emits per-regime winner maps
     PYTHONPATH=src python benchmarks/topology_sweep.py            # full
     PYTHONPATH=src python benchmarks/topology_sweep.py --exact    # no pruning
     PYTHONPATH=src python benchmarks/topology_sweep.py --smoke --techniques all
+    PYTHONPATH=src python benchmarks/topology_sweep.py --smoke --wire
 
 ``--smoke`` covers N∈{2,3} ring+hub in seconds (the CI gate) and
 cross-checks every pruned winner against the exhaustive search; the
@@ -19,7 +20,11 @@ restores the paper's equal splits).  ``--techniques all`` widens the
 pool to the shard_zero/fsdp specs (docs/cost-model.md): winner cells a
 beyond-paper technique takes are tagged †, and the run fails loudly
 when no extended cell ever wins (a mispriced-spec guard, wired into
-CI).  See docs/benchmarks.md.
+CI).  ``--wire`` opens the fp32/bf16/int8 wire-dtype axis
+(docs/quantization.md): winners carry a ``~int8``/``~bf16`` tag, the
+smoke grid swaps in the regional regime + all-A30 mix where the
+documented data→pipeshard flip lives, and the run fails loudly when
+int8 never wins a cell.  See docs/benchmarks.md.
 """
 from __future__ import annotations
 
@@ -53,6 +58,15 @@ FULL_GRID = dict(ns=(2, 3, 4, 5, 6), kinds=TOPOLOGY_KINDS,
 
 TECHNIQUE_POOLS = {"paper": TECHNIQUES, "all": ALL_TECHNIQUES}
 
+WIRE_POOL = ("fp32", "bf16", "int8")
+# --wire --smoke: the int8 flip needs WAN-dominated, compute-balanced
+# cells — swap in the regional regime and the all-A30 mix (the pinned
+# gate in tests/test_search.py lives at regional/a30/n=2).
+WIRE_SMOKE_GRID = dict(ns=(2, 3), kinds=("ring", "hub"),
+                       mixes=("a30", "a30+t4"),
+                       models=("gpt2m", "gpt2L"),
+                       regimes=("regional", "transatlantic"))
+
 
 def _scored_record(search: PlanSearch, s: Optional[Scored]) -> Optional[dict]:
     if s is None:
@@ -68,18 +82,20 @@ def _scored_record(search: PlanSearch, s: Optional[Scored]) -> Optional[dict]:
                          else list(placement.stage_layers)),
         "schedule": s.candidate.schedule,
         "extended": s.candidate.technique not in TECHNIQUES,
+        "wire_dtype": s.candidate.wire_dtype,
         "tflops": round(s.tflops, 4),
     }
 
 
 def sweep_entry(kind: str, n: int, mix: str, model: str, regime: str, *,
                 balance: str, exact: bool, check: bool,
-                techniques: str = "paper") -> dict:
+                techniques: str = "paper", wire: bool = False) -> dict:
     """Search one grid point; returns the winner-map entry."""
     topo = build_topology(kind, n, mix, LATENCY_REGIMES[regime])
     wl = paper_workload(get_config(model))
     search = PlanSearch(wl, topo, stage_balance=balance, prune=not exact,
-                        techniques=TECHNIQUE_POOLS[techniques])
+                        techniques=TECHNIQUE_POOLS[techniques],
+                        wire_dtypes=WIRE_POOL if wire else None)
     t0 = time.perf_counter()
     ranked = search.search()
     elapsed_ms = (time.perf_counter() - t0) * 1e3
@@ -110,11 +126,13 @@ def _cell(entry: dict) -> str:
         return "OOM"
     sites = "+".join(str(i) for i in w["sites"])
     tag = " †" if w.get("extended") else ""
+    if w.get("wire_dtype", "fp32") != "fp32":
+        tag += f" ~{w['wire_dtype']}"
     return f"{w['technique']}@{sites} ({w['tflops']:.0f}){tag}"
 
 
 def to_markdown(entries: List[dict], grid: dict, *, balance: str,
-                techniques: str = "paper") -> str:
+                techniques: str = "paper", wire: bool = False) -> str:
     """Winner-map tables: one per (model, regime), rows = topology,
     cols = GPU mix, cell = winning technique@sites (TFLOP/s)."""
     by_key: Dict[tuple, dict] = {
@@ -132,6 +150,11 @@ def to_markdown(entries: List[dict], grid: dict, *, balance: str,
         out += ["Cells tagged † are won by a beyond-paper technique "
                 "(`shard_zero` / `fsdp`, docs/cost-model.md) the "
                 "paper's four-technique pool cannot price.", ""]
+    if wire:
+        out += ["The fp32/bf16/int8 wire-dtype axis is open "
+                "(docs/quantization.md): cells tagged `~int8`/`~bf16` "
+                "are won by a quantized-wire plan; untagged cells stay "
+                "fp32 even with the cheaper wires on offer.", ""]
     for model in grid["models"]:
         out.append(f"## {model}")
         for regime in grid["regimes"]:
@@ -152,12 +175,17 @@ def to_markdown(entries: List[dict], grid: dict, *, balance: str,
 
 def run(*, smoke: bool = False, out: Optional[str] = None,
         balance: str = "tflops", exact: bool = False,
-        techniques: str = "paper", print_fn=print) -> int:
+        techniques: str = "paper", wire: bool = False,
+        print_fn=print) -> int:
     """Run the sweep; returns the number of failures (pruned/exhaustive
     winner mismatches in smoke mode, grid points that errored, or — over
     the "all" pool — an extended pool in which no beyond-paper technique
-    ever wins a cell, the loud guard against silently mispriced specs)."""
-    grid = SMOKE_GRID if smoke else FULL_GRID
+    ever wins a cell, the loud guard against silently mispriced specs;
+    the --wire analogue fails when int8 never wins a cell)."""
+    if smoke:
+        grid = WIRE_SMOKE_GRID if wire else SMOKE_GRID
+    else:
+        grid = FULL_GRID
     entries, n_fail = [], 0
     t0 = time.perf_counter()
     for model in grid["models"]:
@@ -168,7 +196,8 @@ def run(*, smoke: bool = False, out: Optional[str] = None,
                         e = sweep_entry(kind, n, mix, model, regime,
                                         balance=balance, exact=exact,
                                         check=smoke and not exact,
-                                        techniques=techniques)
+                                        techniques=techniques,
+                                        wire=wire)
                         entries.append(e)
                         if e.get("matches_exhaustive") is False:
                             n_fail += 1
@@ -188,14 +217,28 @@ def run(*, smoke: bool = False, out: Optional[str] = None,
             print_fn("CLAIM-FAIL: the extended pool never beat the "
                      "paper's four techniques in any cell — shard_zero/"
                      "fsdp pricing is suspect (docs/cost-model.md)")
+    if wire:
+        n_i8 = sum(1 for e in entries
+                   if (e["winner"] or {}).get("wire_dtype") == "int8")
+        print_fn(f"# int8-wire winners: {n_i8}/{len(entries)} cells")
+        if n_i8 == 0:
+            n_fail += 1
+            print_fn("CLAIM-FAIL: int8 wire never won a cell with the "
+                     "fp32/bf16/int8 pool open — wire_dtype pricing is "
+                     "suspect (docs/quantization.md)")
     mode_stem = f"topology_sweep_{mode}" if techniques == "paper" \
         else f"topology_sweep_all_{mode}"
+    if wire:
+        mode_stem = f"topology_sweep_wire_{mode}"
     print_fn(f"# topology sweep ({mode}): {len(entries)} grid points, "
              f"{elapsed:.1f}s, balance={balance}, pool={techniques}, "
+             f"wire={'fp32/bf16/int8' if wire else 'fp32'}, "
              f"{'exhaustive' if exact else 'pruned'}")
-    md = to_markdown(entries, grid, balance=balance, techniques=techniques)
+    md = to_markdown(entries, grid, balance=balance, techniques=techniques,
+                     wire=wire)
     record = {"mode": mode, "balance": balance, "exact": exact,
-              "techniques": techniques,
+              "techniques": techniques, "wire": wire,
+              "wire_dtypes": list(WIRE_POOL) if wire else ["fp32"],
               "elapsed_s": round(elapsed, 2), "entries": entries}
     if out is None:
         out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -223,9 +266,13 @@ def main(argv=None) -> int:
                     help="technique pool: the paper's four, or 'all' to "
                          "add the shard_zero/fsdp specs; 'all' fails "
                          "loudly when no extended cell ever wins")
+    ap.add_argument("--wire", action="store_true",
+                    help="open the fp32/bf16/int8 wire-dtype axis; "
+                         "fails loudly when int8 never wins a cell")
     args = ap.parse_args(argv)
     return run(smoke=args.smoke, out=args.out, balance=args.balance,
-               exact=args.exact, techniques=args.techniques)
+               exact=args.exact, techniques=args.techniques,
+               wire=args.wire)
 
 
 if __name__ == "__main__":

@@ -178,6 +178,67 @@ def carrier_scale(carrier_dtype: str) -> float:
         raise ValueError(f"unknown carrier_dtype {carrier_dtype!r}; "
                          f"expected one of {CARRIER_DTYPES}") from None
 
+
+# Wire dtypes generalize the p2p-only carrier axis to *collective*
+# traffic as well (docs/quantization.md): the quantizable share of each
+# technique's collective volume (``CommPrecision``) plus the pipeline
+# boundary carriers ride the wire dtype; the rest stays fp32.  int8's
+# scale is not 0.25: the per-128-block absmax scale of the kernels'
+# scheme (kernels/quantized.py) travels too — (128·1 + 4) bytes per 128
+# elements over the 128·4-byte fp32 baseline = 0.2578125.
+WIRE_DTYPES = ("fp32", "bf16", "int8")
+
+_WIRE_SCALE = {"fp32": 1.0, "bf16": 0.5, "int8": (128 + 4) / (128 * 4)}
+
+
+def wire_scale(wire_dtype: str) -> float:
+    """Byte multiplier of a wire dtype vs the fp32 baseline (1.0 fp32,
+    0.5 bf16, 0.2578125 int8 — payload + per-block absmax scales).
+
+    Raises:
+        ValueError: unknown wire dtype.
+    """
+    try:
+        return _WIRE_SCALE[wire_dtype]
+    except KeyError:
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                         f"expected one of {WIRE_DTYPES}") from None
+
+
+@dataclass(frozen=True)
+class CommPrecision:
+    """Wire-quantizable fractions of a technique's collective volume
+    (``TechniqueSpec.comm_precision``, docs/quantization.md).
+
+    Attributes:
+        act: fraction of *activation* collective volume (tensor-parallel
+            all-reduces, stage-boundary traffic) that may ride the wire
+            dtype.
+        state: fraction of *gradient/optimizer-state* collective volume
+            (DP all-reduce, ZeRO partition sync, FSDP gathers) that may
+            ride the wire dtype.  The remaining ``1 - state`` is the
+            fp32-master-weights correction term — partitioned fp32
+            master syncs and reductions landing in fp32 shards cross the
+            wire at full width whatever the wire dtype.
+    """
+    act: float = 1.0
+    state: float = 1.0
+
+
+def _eff_byte_scale(frac: float, ws: float) -> float:
+    """Effective byte multiplier of a collective whose quantizable
+    fraction is ``frac`` at wire scale ``ws``.  Exactly 1.0 at fp32 so
+    legacy prices stay bit-for-bit (``frac*1 + (1-frac)`` may not)."""
+    return 1.0 if ws == 1.0 else frac * ws + (1.0 - frac)
+
+
+def _act_byte_scale(ctx: "CostContext") -> float:
+    return _eff_byte_scale(ctx.comm.act, ctx.wire_scale)
+
+
+def _state_byte_scale(ctx: "CostContext") -> float:
+    return _eff_byte_scale(ctx.comm.state, ctx.wire_scale)
+
 # Pipeline tick-order schedules (docs/schedules.md).  "gpipe" is the
 # paper's measured Alpa behavior (all forwards, then all backwards —
 # bubble (S-1)/m, m microbatches in flight); "1f1b" is PipeDream-Flush
@@ -452,7 +513,13 @@ class CostContext:
         stage_order / stage_balance / stage_layers / schedule: the
             Pipeshard placement knobs (ignored by flat-pool components).
         carrier_scale: byte multiplier of the inter-stage carrier dtype
-            (``carrier_scale()``; 1.0 = legacy fp32 baseline).
+            (``carrier_scale()``; 1.0 = legacy fp32 baseline).  When a
+            sub-fp32 ``wire_dtype`` is active the narrower of the two
+            prices the p2p carriers.
+        wire_scale: byte multiplier of the collective wire dtype
+            (``wire_scale()``; 1.0 = legacy fp32 baseline).
+        comm: the priced technique's ``CommPrecision`` — which fractions
+            of its collective volume may ride the wire dtype.
     """
     wl: Workload
     topo: Topology
@@ -473,6 +540,8 @@ class CostContext:
     stage_layers: Optional[Sequence[int]] = None
     schedule: str = "gpipe"
     carrier_scale: float = 1.0
+    wire_scale: float = 1.0
+    comm: CommPrecision = field(default_factory=CommPrecision)
     _geom: Optional[_PipelineGeometry] = field(default=None, repr=False)
 
     @property
@@ -541,12 +610,20 @@ def _make_context(wl: Workload, cluster: ClusterLike,
                   stage_balance: str = "even",
                   stage_layers: Optional[Sequence[int]] = None,
                   schedule: str = "gpipe",
-                  carrier_dtype: str = "fp32") -> CostContext:
+                  carrier_dtype: str = "fp32",
+                  wire_dtype: str = "fp32",
+                  comm: Optional[CommPrecision] = None) -> CostContext:
     topo = as_topology(cluster)
     sel = topo.select(vms)
     sites = [topo.sites[i] for i in sel]
     gpus = [GPUS[g] for s in sites for g in s.gpus]
     n = len(gpus)
+    ws = wire_scale(wire_dtype)
+    cs = carrier_scale(carrier_dtype)
+    if ws != 1.0:
+        # stage-boundary activations are wire-quantizable (pipeshard's
+        # CommPrecision.act == 1.0) — the narrower dtype carries them
+        cs = min(cs, ws)
     return CostContext(
         wl=wl, topo=topo, sel=sel, sites=sites, n=n,
         tp=min(len(s.gpus) for s in sites),
@@ -560,7 +637,8 @@ def _make_context(wl: Workload, cluster: ClusterLike,
         mem_avail=min(g.mem_gb for g in gpus),
         stage_order=stage_order, stage_balance=stage_balance,
         stage_layers=stage_layers, schedule=schedule,
-        carrier_scale=carrier_scale(carrier_dtype))
+        carrier_scale=cs, wire_scale=ws,
+        comm=comm if comm is not None else CommPrecision())
 
 
 # ---- compute components --------------------------------------------- #
@@ -585,29 +663,38 @@ def _pipeline_compute(ctx: CostContext) -> float:
 # ---- collective components ------------------------------------------ #
 
 def _data_collective(ctx: CostContext) -> float:
-    """One gradient all-reduce over the whole pool."""
-    return _collective_time(ctx.g_bytes, ctx.n, ctx.topo, ctx.sel)
+    """One gradient all-reduce over the whole pool.  Fully
+    wire-quantizable (each rank's optimizer consumes the reduced grads
+    locally), so the byte volume scales with ``_state_byte_scale`` —
+    exactly the legacy bytes at fp32."""
+    return _collective_time(ctx.g_bytes * _state_byte_scale(ctx),
+                            ctx.n, ctx.topo, ctx.sel)
 
 
 def _zero2_collective(ctx: CostContext) -> float:
     """Reduce-scatter grads + all-gather of updated fp16 params + the
     partitioned fp32 master sync => ~2.2x the Data volume, which is the
-    paper's observed zero2-vs-data degradation ratio (Table II)."""
-    return 2.2 * _collective_time(ctx.g_bytes, ctx.n, ctx.topo, ctx.sel)
+    paper's observed zero2-vs-data degradation ratio (Table II).  Of the
+    2.2, the 0.2 master-sync share is the fp32 correction term
+    (``CommPrecision.state = 2.0/2.2``); the grad scatter + param gather
+    ride the wire dtype."""
+    return 2.2 * _collective_time(ctx.g_bytes * _state_byte_scale(ctx),
+                                  ctx.n, ctx.topo, ctx.sel)
 
 
 def _intraop_collective(ctx: CostContext) -> float:
     """Megatron-style: 4 all-reduces of activations per layer (fwd+bwd)
     over the whole pool."""
     return 4 * ctx.wl.cfg.n_layers * _collective_time(
-        ctx.act_stream_bytes, ctx.n, ctx.topo, ctx.sel)
+        ctx.act_stream_bytes * _act_byte_scale(ctx), ctx.n, ctx.topo,
+        ctx.sel)
 
 
 def _pipeline_collective(ctx: CostContext) -> float:
     """Intra-op all-reduces inside each stage's site, over its own intra
     link, weighted by the stage's layer share; the slowest stage paces."""
     g = ctx.pipeline()
-    act_bytes = ctx.act_stream_bytes
+    act_bytes = ctx.act_stream_bytes * _act_byte_scale(ctx)
     if g.split is None:       # keep the legacy expression bit-for-bit
         return max(
             4 * ctx.wl.cfg.n_layers / g.n_stages * _allreduce_time(
@@ -626,12 +713,13 @@ def _shard_zero_collective(ctx: CostContext) -> float:
     collective of ``zero2`` at 1/tp the volume (grads are already
     TP-sharded)."""
     n_rep = len(ctx.sel)
-    share = ctx.act_stream_bytes / n_rep
+    share = ctx.act_stream_bytes * _act_byte_scale(ctx) / n_rep
     intra = max(4 * ctx.wl.cfg.n_layers
                 * _allreduce_time(share, len(s.gpus), s.intra)
                 for s in ctx.sites)
-    inter = 2.2 * _collective_time(ctx.g_bytes / ctx.tp, n_rep,
-                                   ctx.topo, ctx.sel)
+    inter = 2.2 * _collective_time(
+        ctx.g_bytes * _state_byte_scale(ctx) / ctx.tp, n_rep,
+        ctx.topo, ctx.sel)
     return intra + inter
 
 
@@ -642,9 +730,11 @@ def _fsdp_collective(ctx: CostContext) -> float:
     bytes at gather rates, but 2L+1 latency rounds, which is what makes
     FSDP a LAN/single-site plan and never a WAN one."""
     layers = ctx.wl.cfg.n_layers
+    s = _state_byte_scale(ctx)
     return 2 * layers * _gather_collective_time(
-        ctx.p_bytes / layers, ctx.n, ctx.topo, ctx.sel) \
-        + _gather_collective_time(ctx.g_bytes, ctx.n, ctx.topo, ctx.sel)
+        ctx.p_bytes * s / layers, ctx.n, ctx.topo, ctx.sel) \
+        + _gather_collective_time(ctx.g_bytes * s, ctx.n, ctx.topo,
+                                  ctx.sel)
 
 
 # ---- p2p components ------------------------------------------------- #
@@ -751,6 +841,9 @@ class TechniqueSpec:
             (pipeline boundary carriers; zero for flat pools).
         paper: True for the paper's four Algorithm-1 techniques.
         summary: one-line description for docs/CLIs.
+        comm_precision: which fractions of the technique's collective
+            volume may ride a sub-fp32 ``wire_dtype``
+            (docs/quantization.md); the default quantizes everything.
     """
     name: str
     compute: Callable[[CostContext], float]
@@ -759,6 +852,7 @@ class TechniqueSpec:
     p2p: Callable[[CostContext], float] = _no_p2p
     paper: bool = False
     summary: str = ""
+    comm_precision: CommPrecision = CommPrecision()
 
 
 TECHNIQUE_SPECS: Dict[str, TechniqueSpec] = {}
@@ -791,7 +885,9 @@ register_technique(TechniqueSpec(
     "zero2", _pool_compute, _zero2_collective,
     # fp16 replica + partitioned fp32 states: the paper's low-memory plan
     MemoryModel("replicated", "pool", 1.0), paper=True,
-    summary="ZeRO-2: grads + optimizer state partitioned over the pool"))
+    summary="ZeRO-2: grads + optimizer state partitioned over the pool",
+    # the 0.2 master-sync share of the 2.2x volume stays fp32
+    comm_precision=CommPrecision(state=2.0 / 2.2)))
 register_technique(TechniqueSpec(
     "shard", _pool_compute, _intraop_collective,
     # sharded states but activation replicas + all-gather buffers
@@ -805,11 +901,16 @@ register_technique(TechniqueSpec(
 register_technique(TechniqueSpec(
     "shard_zero", _pool_compute, _shard_zero_collective,
     MemoryModel("tp", "pool", 1.5),
-    summary="intra-op inside each site x ZeRO-2 across sites"))
+    summary="intra-op inside each site x ZeRO-2 across sites",
+    # inter-site ZeRO sync carries the same fp32 master share as zero2
+    comm_precision=CommPrecision(state=2.0 / 2.2)))
 register_technique(TechniqueSpec(
     "fsdp", _pool_compute, _fsdp_collective,
     MemoryModel("pool", "pool", 1.0),
-    summary="ZeRO-3/FSDP: per-layer param gathers, lowest memory"))
+    summary="ZeRO-3/FSDP: per-layer param gathers, lowest memory",
+    # of the ~3 param-volumes moved per step, the grad reduce-scatter
+    # lands in fp32 master shards — the fp32 correction third
+    comm_precision=CommPrecision(state=2.0 / 3.0)))
 
 # Paper techniques first so exact-tie stable sorts keep paper winners;
 # the beyond-paper specs extend, never reorder.
@@ -834,7 +935,8 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                         stage_balance: str = "even",
                         stage_layers: Optional[Sequence[int]] = None,
                         schedule: str = "gpipe",
-                        carrier_dtype: str = "fp32") -> StepCost:
+                        carrier_dtype: str = "fp32",
+                        wire_dtype: str = "fp32") -> StepCost:
     """Model one optimizer step of `technique` (paper §III) on a cluster
     or N-site topology, via the technique's registered
     ``TechniqueSpec`` components (docs/cost-model.md).
@@ -873,13 +975,20 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
             dtype (``CARRIER_DTYPES``).  ``"bf16"`` halves the p2p byte
             terms vs the fp32 baseline; collectives and latency rounds
             are unaffected.
+        wire_dtype: communication wire dtype (``WIRE_DTYPES``) — scales
+            the wire-quantizable share of *collective* byte volumes per
+            the technique's ``CommPrecision`` and, when narrower than
+            ``carrier_dtype``, the Pipeshard p2p carriers too
+            (docs/quantization.md).  ``"fp32"`` (default) is bit-for-bit
+            the legacy pricing; latency rounds never scale.
 
     Returns:
         A ``StepCost`` (compute_s, comm_s, memory required/available).
 
     Raises:
-        ValueError: unknown technique / carrier dtype, or an invalid
-            pipeline placement (bad stage order, split, balance mode).
+        ValueError: unknown technique / carrier / wire dtype, or an
+            invalid pipeline placement (bad stage order, split, balance
+            mode).
     """
     try:
         spec = TECHNIQUE_SPECS[technique]
@@ -890,7 +999,9 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
     ctx = _make_context(wl, cluster, vms, stage_order=stage_order,
                         stage_balance=stage_balance,
                         stage_layers=stage_layers, schedule=schedule,
-                        carrier_dtype=carrier_dtype)
+                        carrier_dtype=carrier_dtype,
+                        wire_dtype=wire_dtype,
+                        comm=spec.comm_precision)
     compute = spec.compute(ctx)
     comm = spec.p2p(ctx) + spec.collective(ctx)
     mem = spec.memory.mem_gb(ctx)
@@ -903,7 +1014,8 @@ def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
                   stage_balance: str = "even",
                   stage_layers: Optional[Sequence[int]] = None,
                   schedule: str = "gpipe",
-                  carrier_dtype: str = "fp32") -> Optional[float]:
+                  carrier_dtype: str = "fp32",
+                  wire_dtype: str = "fp32") -> Optional[float]:
     """Minutes per `epochs` epochs; None when the technique OOMs (the
     paper's '×' bars).  Keyword args as ``technique_step_cost``."""
     c = technique_step_cost(technique, wl, cluster, vms,
@@ -911,7 +1023,8 @@ def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
                             stage_balance=stage_balance,
                             stage_layers=stage_layers,
                             schedule=schedule,
-                            carrier_dtype=carrier_dtype)
+                            carrier_dtype=carrier_dtype,
+                            wire_dtype=wire_dtype)
     if not c.fits:
         return None
     return c.total_s * wl.steps_per_epoch * wl.epochs / 60.0
@@ -923,7 +1036,8 @@ def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                stage_balance: str = "even",
                stage_layers: Optional[Sequence[int]] = None,
                schedule: str = "gpipe",
-               carrier_dtype: str = "fp32") -> Optional[float]:
+               carrier_dtype: str = "fp32",
+               wire_dtype: str = "fp32") -> Optional[float]:
     """Average achieved TFLOP/s of one step (model FLOPs / step time);
     None when the technique OOMs.  Keyword args as
     ``technique_step_cost``."""
@@ -932,7 +1046,8 @@ def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                             stage_balance=stage_balance,
                             stage_layers=stage_layers,
                             schedule=schedule,
-                            carrier_dtype=carrier_dtype)
+                            carrier_dtype=carrier_dtype,
+                            wire_dtype=wire_dtype)
     if not c.fits:
         return None
     return wl.flops_per_step / c.total_s / 1e12

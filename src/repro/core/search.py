@@ -54,7 +54,7 @@ from repro.core.costmodel import (ALL_TECHNIQUES, ClusterLike, SCHEDULES,
                                   TECHNIQUES, Workload, as_topology,
                                   avg_tflops, balanced_stage_layers,
                                   carrier_scale, parse_schedule,
-                                  stage_compute_tflops)
+                                  stage_compute_tflops, wire_scale)
 from repro.core.plans import Placement
 from repro.core.topology import Link, Topology
 
@@ -77,11 +77,17 @@ class Candidate:
         schedule: Pipeshard only — the tick-order schedule
             (``core.costmodel.SCHEDULES``, docs/schedules.md); other
             techniques keep the ignored ``"gpipe"`` default.
+        wire_dtype: communication wire dtype the candidate is priced at
+            (``core.costmodel.WIRE_DTYPES``; docs/quantization.md).
+            ``"fp32"`` — the default and the only value enumerated
+            unless ``PlanSearch.wire_dtypes`` widens the pool — is the
+            legacy pricing, bit-for-bit.
     """
     technique: str
     sites: Tuple[int, ...]
     stage_order: Optional[Tuple[int, ...]] = None
     schedule: str = "gpipe"
+    wire_dtype: str = "fp32"
 
     def placement(self) -> Placement:
         """The bare ``core.plans.Placement`` (no stage balancing; use
@@ -91,12 +97,16 @@ class Candidate:
 
     @property
     def key(self) -> str:
-        """Human-readable id, e.g. ``pipeshard@V1+V3|V3>V1#1f1b``."""
+        """Human-readable id, e.g. ``pipeshard@V1+V3|V3>V1#1f1b`` or
+        ``data@V1+V2~int8`` (the wire suffix appears only off the fp32
+        default)."""
         s = "+".join(f"V{i + 1}" for i in self.sites)
         if self.stage_order and self.stage_order != self.sites:
             s += "|" + ">".join(f"V{i + 1}" for i in self.stage_order)
         if self.schedule != "gpipe":
             s += f"#{self.schedule}"
+        if self.wire_dtype != "fp32":
+            s += f"~{self.wire_dtype}"
         return f"{self.technique}@{s}"
 
 
@@ -270,6 +280,17 @@ class PlanSearch:
             rejects.  Restrict to ``("gpipe",)`` for the legacy space
             (or to bound live-probe budgets — every schedule of every
             order is a separate ε-epoch run).
+        wire_dtypes: communication wire dtypes to enumerate as a
+            candidate dimension (``core.costmodel.WIRE_DTYPES``;
+            docs/quantization.md).  ``None`` (default) keeps the legacy
+            fp32-only space — every enumeration count and winner is
+            unchanged.  Pass ``("fp32", "bf16", "int8")`` to let every
+            candidate also be priced at quantized wire bytes; fp32 is
+            enumerated first so exact-tie stable sorts keep legacy
+            winners.  Subset dominance pruning stays lossless: a wire
+            dtype rescales every subset's byte terms by the same factor
+            and never touches latency or compute, so the dominance
+            order between subsets is unchanged.
     """
     wl: Workload
     topology: Topology
@@ -282,6 +303,7 @@ class PlanSearch:
     stage_balance: str = "even"
     schedules: Tuple[str, ...] = SCHEDULES
     carrier_dtype: str = "fp32"
+    wire_dtypes: Optional[Tuple[str, ...]] = None
     # live probe memo: probe-equivalence key -> measured TFLOP/s
     _probe_cache: Dict[Tuple, Optional[float]] = field(
         default_factory=dict, init=False, repr=False, compare=False)
@@ -328,10 +350,21 @@ class PlanSearch:
                                 dedupe_reversals=self._reversible())
                         for order in orders:
                             for sched in self.schedules:
-                                yield Candidate(tech, subset, order,
-                                                sched)
+                                for wd in self._wire_pool():
+                                    yield Candidate(tech, subset, order,
+                                                    sched, wd)
                     else:
-                        yield Candidate(tech, subset)
+                        for wd in self._wire_pool():
+                            yield Candidate(tech, subset, wire_dtype=wd)
+
+    def _wire_pool(self) -> Tuple[str, ...]:
+        """The wire-dtype dimension: ``("fp32",)`` (legacy space) unless
+        ``wire_dtypes`` widens it.  Validates every entry."""
+        if self.wire_dtypes is None:
+            return ("fp32",)
+        for wd in self.wire_dtypes:
+            wire_scale(wd)                     # raises on unknown dtypes
+        return tuple(self.wire_dtypes)
 
     def pruned_candidates(self) -> Iterator[Candidate]:
         """The pruned candidate space: per subset size, collective
@@ -350,10 +383,12 @@ class PlanSearch:
                             continue
                         for order in self.beam_stage_orders(subset):
                             for sched in self.schedules:
-                                yield Candidate(tech, subset, order,
-                                                sched)
+                                for wd in self._wire_pool():
+                                    yield Candidate(tech, subset, order,
+                                                    sched, wd)
                     elif subset in keep:
-                        yield Candidate(tech, subset)
+                        for wd in self._wire_pool():
+                            yield Candidate(tech, subset, wire_dtype=wd)
 
     def _reversible(self) -> bool:
         """Whether a stage order and its reversal are guaranteed the same
@@ -470,7 +505,8 @@ class PlanSearch:
                           cand.sites, stage_order=cand.stage_order,
                           stage_balance=self.stage_balance,
                           schedule=cand.schedule,
-                          carrier_dtype=self.carrier_dtype)
+                          carrier_dtype=self.carrier_dtype,
+                          wire_dtype=cand.wire_dtype)
 
     @staticmethod
     def probe_key(technique: str, placement: Optional[Placement]) -> Tuple:

@@ -27,7 +27,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   block_q: int, block_k: int, n_kv_blocks: int, scale: float,
-                  causal: bool, window: int):
+                  causal: bool, window: int, kv_len: int = 0):
     qi = pl.program_id(2)
     kj = pl.program_id(3)
 
@@ -52,6 +52,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         mask &= q_pos >= k_pos
     if window:
         mask &= (q_pos - k_pos) < window
+    if kv_len:
+        # keys past the unpadded length are invalid for every query —
+        # causality only hides them when q_pos is also < kv_len, so the
+        # non-causal path needs this explicit key-validity mask.
+        mask &= k_pos < kv_len
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_scr[...]                                # [bq, 1]
@@ -71,11 +76,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
                          block_q: int = 128, block_k: int = 128,
-                         scale: float | None = None,
+                         scale: float | None = None, kv_len: int = 0,
                          interpret: bool = False):
     """q: [B, H, Sq, D]; k/v: [B, KV, Sk, D] (already GQA-expanded index
     mapping, head_dim padded).  ``scale`` must be 1/sqrt(unpadded head_dim)
-    when the wrapper padded D.  Returns [B, H, Sq, D]."""
+    when the wrapper padded D.  ``kv_len`` (static) masks key positions
+    >= kv_len — required when the wrapper padded Sk and causal=False.
+    Returns [B, H, Sq, D]."""
     B, H, Sq, D = q.shape
     _, KV, Sk, Dv = v.shape
     group = H // KV
@@ -85,10 +92,12 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
     nq, nk = Sq // block_q, Sk // block_k
     if scale is None:
         scale = 1.0 / (D ** 0.5)
+    if kv_len >= Sk:
+        kv_len = 0                       # every key valid — skip the mask
 
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_k=block_k, n_kv_blocks=nk,
-        scale=scale, causal=causal, window=window)
+        scale=scale, causal=causal, window=window, kv_len=kv_len)
 
     return pl.pallas_call(
         kernel,

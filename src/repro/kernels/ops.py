@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import mamba_scan as _scan
 from repro.kernels import flash_attention as _fa
+from repro.kernels import quantized as _q
 
 
 def _default_interpret() -> bool:
@@ -43,16 +44,103 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     qT = _pad_axis(_pad_axis(q.transpose(0, 2, 1, 3), block_q, 2), 128, 3)
     kT = _pad_axis(_pad_axis(k.transpose(0, 2, 1, 3), block_k, 2), 128, 3)
     vT = _pad_axis(_pad_axis(v.transpose(0, 2, 1, 3), block_k, 2), 128, 3)
-    # padded kv positions are masked out by causality for q<=Sq... they are
-    # NOT in general: mask them via an additive key of -inf is handled by
-    # the kernel's position mask only when causal. For non-causal inputs we
-    # rely on Sk % block_k == 0 after padding with window/causal masking;
-    # serving paths always run causal.
+    # padded kv positions past Sk are masked in-kernel via the static
+    # kv_len key-validity mask — causality alone only hides them for
+    # causal inputs, so the non-causal path needs it too.
     o = _fa.flash_attention_bhsd(qT, kT, vT, causal=causal, window=window,
                                  block_q=min(block_q, qT.shape[2]),
                                  block_k=min(block_k, kT.shape[2]),
-                                 scale=1.0 / (Dk ** 0.5),
+                                 scale=1.0 / (Dk ** 0.5), kv_len=Sk,
                                  interpret=interpret)
+    o = o.transpose(0, 2, 1, 3)[:, :Sq, :, :Dv]
+    return o.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ #
+# int8 quantization (kernels/quantized.py; docs/quantization.md)
+# ------------------------------------------------------------------ #
+
+@partial(jax.jit, static_argnames=("block", "axis"))
+def quantize(x, *, block: int = 128, axis: int = -1):
+    """Symmetric per-block absmax int8 quantization along ``axis``:
+    scale = absmax/127 per block of ``block`` elements (all-zero blocks
+    take scale 1.0).  Returns (q int8, x.shape) and (scale fp32, with
+    the ``axis`` dim shrunk to ceil(n/block))."""
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    xm = jnp.moveaxis(x, axis, -1).astype(jnp.float32)
+    pad = (-n) % block
+    if pad:
+        xm = jnp.pad(xm, [(0, 0)] * (xm.ndim - 1) + [(0, pad)])
+    nb = xm.shape[-1] // block
+    t = xm.reshape(xm.shape[:-1] + (nb, block))
+    absmax = jnp.max(jnp.abs(t), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(t / scale[..., None]), -127, 127)
+    q = q.astype(jnp.int8).reshape(xm.shape)[..., :n]
+    return jnp.moveaxis(q, -1, axis), jnp.moveaxis(scale, -1, axis)
+
+
+@partial(jax.jit, static_argnames=("block", "axis"))
+def dequantize(q, scale, *, block: int = 128, axis: int = -1):
+    """Inverse of ``quantize``: q int8 * per-block scale -> fp32."""
+    axis = axis % q.ndim
+    n = q.shape[axis]
+    qm = jnp.moveaxis(q, axis, -1).astype(jnp.float32)
+    sm = jnp.repeat(jnp.moveaxis(scale, axis, -1), block, axis=-1)[..., :n]
+    return jnp.moveaxis(qm * sm, -1, axis)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_k", "block_n",
+                                   "interpret"))
+def int8_matmul(x, w, *, block_m: int = 128, block_k: int = 128,
+                block_n: int = 128, interpret: bool | None = None):
+    """Quantize fp x [M, K] and w [K, N] into per-tile int8 and multiply
+    with the Pallas kernel (int32 MXU accumulate, fp32 dequant epilogue).
+    Pads to block multiples (zero pads quantize to 0 and contribute
+    nothing), unpads.  Returns fp32 [M, N]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    M, K = x.shape
+    N = w.shape[1]
+    xp = _pad_axis(_pad_axis(x, block_m, 0), block_k, 1)
+    wp = _pad_axis(_pad_axis(w, block_k, 0), block_n, 1)
+    xq, xs = _q.quantize_blocks(xp, block_m, block_k)
+    wq, ws = _q.quantize_blocks(wp, block_k, block_n)
+    out = _q.int8_matmul_blocked(xq, xs, wq, ws, block_m=block_m,
+                                 block_k=block_k, block_n=block_n,
+                                 interpret=interpret)
+    return out[:M, :N]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention_int8kv(q, k_q, k_scale, v_q, v_scale, *, valid=None,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool | None = None):
+    """Model-layout attention over int8-quantized keys/values.
+    q: [B, Sq, H, Dk] fp; k_q/v_q: [B, Sk, KV, D*] int8 with per-token
+    absmax scales k_scale/v_scale: [B, Sk, KV] fp32 (``quantize`` over
+    the head dim, one block); valid: optional [B, Sk], >0 = key live —
+    traced, so the decode ring-cache fill state can flow through it.
+    Pads seq/head_dim, dequantizes in-kernel, unpads."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, Sq, H, Dk = q.shape
+    Sk, Dv = k_q.shape[1], v_q.shape[-1]
+    if valid is None:
+        valid = jnp.ones((B, Sk), jnp.float32)
+    qT = _pad_axis(_pad_axis(q.transpose(0, 2, 1, 3), block_q, 2), 128, 3)
+    kT = _pad_axis(_pad_axis(k_q.transpose(0, 2, 1, 3), block_k, 2), 128, 3)
+    vT = _pad_axis(_pad_axis(v_q.transpose(0, 2, 1, 3), block_k, 2), 128, 3)
+    ksT = _pad_axis(k_scale.transpose(0, 2, 1), block_k, 2)
+    vsT = _pad_axis(v_scale.transpose(0, 2, 1), block_k, 2)
+    validp = _pad_axis(valid.astype(jnp.float32), block_k, 1)  # pad => dead
+    o = _q.flash_attention_int8kv_bhsd(
+        qT, kT, ksT, vT, vsT, validp, causal=causal, window=window,
+        block_q=min(block_q, qT.shape[2]), block_k=min(block_k, kT.shape[2]),
+        scale=1.0 / (Dk ** 0.5), interpret=interpret)
     o = o.transpose(0, 2, 1, 3)[:, :Sq, :, :Dv]
     return o.astype(q.dtype)
 

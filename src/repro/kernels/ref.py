@@ -80,3 +80,9 @@ def rmsnorm_ref(x, weight, *, eps: float = 1e-5):
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps)
             * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def matmul_ref(x, w):
+    """fp32 reference matmul — the accuracy oracle for the int8 blocked
+    matmul (kernels/quantized.py; tests/test_quantized.py)."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))

@@ -20,6 +20,8 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window cache (long-context decode)")
+    ap.add_argument("--kv-dtype", default="fp32", choices=("fp32", "int8"),
+                    help="int8: quantized KV cache + int8-KV decode kernel")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
@@ -62,10 +64,11 @@ def main() -> None:
 
     eng = Engine(model, get_plan(args.plan), mesh, batch_size=args.batch,
                  max_len=args.prompt_len + args.gen + 8, window=args.window,
-                 temperature=args.temperature)
+                 temperature=args.temperature, kv_dtype=args.kv_dtype)
     out = eng.generate(params, batch, n_tokens=args.gen)
     s = out["stats"]
-    print(f"{cfg.name} [{cfg.family}] plan={args.plan} batch={args.batch}")
+    print(f"{cfg.name} [{cfg.family}] plan={args.plan} batch={args.batch} "
+          f"kv={args.kv_dtype}")
     print(f"prefill {s.prefill_s * 1e3:.0f} ms | decode "
           f"{s.tokens_per_s:.1f} steps/s "
           f"({s.tokens_per_s * args.batch:.1f} tok/s aggregate)")

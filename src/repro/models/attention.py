@@ -194,6 +194,101 @@ def cache_append(cache: KVCache, k_new, v_new) -> KVCache:
 
 
 # --------------------------------------------------------------------- #
+# int8-quantized KV cache (docs/quantization.md): per-(token, head)
+# absmax scales over head_dim; decode attends through the int8-KV Pallas
+# kernel (kernels/quantized.py) with the ring fill state as its dynamic
+# key-validity mask
+# --------------------------------------------------------------------- #
+
+class QuantKVCache(NamedTuple):
+    """Ring-buffered int8 KV cache — 4x smaller than the fp32 ``KVCache``
+    at the cost of one absmax scale per (token, kv-head)."""
+    k_q: jax.Array        # [B, S, KV, Dk] int8
+    k_scale: jax.Array    # [B, S, KV] fp32
+    v_q: jax.Array        # [B, S, KV, Dv] int8
+    v_scale: jax.Array    # [B, S, KV] fp32
+    index: jax.Array      # scalar int32: next write position (total tokens)
+
+    @property
+    def capacity(self) -> int:
+        return self.k_q.shape[1]
+
+    def valid(self, batch: int):
+        S = self.capacity
+        slots = jnp.arange(S, dtype=jnp.int32)
+        filled = jnp.where(self.index >= S, S, self.index)
+        return jnp.broadcast_to(slots[None, :] < filled, (batch, S))
+
+
+def init_quant_kv_cache(batch: int, capacity: int, kv_heads: int, dk: int,
+                        dv: int) -> QuantKVCache:
+    return QuantKVCache(
+        k_q=jnp.zeros((batch, capacity, kv_heads, dk), jnp.int8),
+        k_scale=jnp.ones((batch, capacity, kv_heads), jnp.float32),
+        v_q=jnp.zeros((batch, capacity, kv_heads, dv), jnp.int8),
+        v_scale=jnp.ones((batch, capacity, kv_heads), jnp.float32),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def _quant_kv(x):
+    """[B, S, KV, D] fp -> (int8 payload, [B, S, KV] fp32 scales): one
+    absmax block spanning the whole head_dim per (token, kv-head)."""
+    from repro.kernels import ops as kernel_ops
+    q, s = kernel_ops.quantize(x, block=x.shape[-1], axis=-1)
+    return q, s[..., 0]
+
+
+def quant_cache_append(cache: QuantKVCache, k_new, v_new) -> QuantKVCache:
+    """Quantize + append one token (k_new/v_new: [B, 1, KV, D])."""
+    slot = jnp.mod(cache.index, cache.capacity)
+    kq, ks = _quant_kv(k_new)
+    vq, vs = _quant_kv(v_new)
+    upd = jax.lax.dynamic_update_slice_in_dim
+    return QuantKVCache(
+        k_q=upd(cache.k_q, kq, slot, 1),
+        k_scale=upd(cache.k_scale, ks, slot, 1),
+        v_q=upd(cache.v_q, vq, slot, 1),
+        v_scale=upd(cache.v_scale, vs, slot, 1),
+        index=cache.index + 1)
+
+
+def _ring_fill(buf, new, S: int):
+    """Prefill a ring buffer leaf: keep the most recent ``capacity``
+    entries of ``new`` [B, S, ...] in slot = pos % capacity layout."""
+    cap = buf.shape[1]
+    if S >= cap:
+        roll = -((S - cap) % cap) if cap else 0
+        return jnp.roll(new[:, S - cap:], roll, axis=1).astype(buf.dtype)
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, new.astype(buf.dtype), 0, 1)
+
+
+def quant_cache_prefill(cache: QuantKVCache, k, v, S: int) -> QuantKVCache:
+    """Fill the quantized cache from full-sequence k/v [B, S, KV, D]."""
+    kq, ks = _quant_kv(k)
+    vq, vs = _quant_kv(v)
+    return QuantKVCache(
+        k_q=_ring_fill(cache.k_q, kq, S),
+        k_scale=_ring_fill(cache.k_scale, ks, S),
+        v_q=_ring_fill(cache.v_q, vq, S),
+        v_scale=_ring_fill(cache.v_scale, vs, S),
+        index=jnp.asarray(S, jnp.int32))
+
+
+def quant_decode_attention(q, cache: QuantKVCache):
+    """One-token attention over the int8 cache via the Pallas int8-KV
+    kernel; the traced ring fill state rides the kernel's dynamic
+    key-validity input.  Every cached token is in the past, so the mask
+    alone (causal=False) reproduces ``decode_attention``'s semantics."""
+    from repro.kernels import ops as kernel_ops
+    B = q.shape[0]
+    return kernel_ops.flash_attention_int8kv(
+        q, cache.k_q, cache.k_scale, cache.v_q, cache.v_scale,
+        valid=cache.valid(B).astype(jnp.float32), causal=False, block_q=8)
+
+
+# --------------------------------------------------------------------- #
 # standard GQA attention parameters
 # --------------------------------------------------------------------- #
 
@@ -258,6 +353,8 @@ def attention_prefill(x, params, cfg: ModelConfig, *, positions,
     o = chunked_attention(q, k, v, causal=True, window=window,
                           q_positions=positions, kv_positions=positions)
     S = x.shape[1]
+    if isinstance(cache, QuantKVCache):
+        return _out(o, params), quant_cache_prefill(cache, k, v, S)
     cap = cache.capacity
     if S >= cap:  # keep the most recent `cap` tokens
         k_keep, v_keep = k[:, S - cap:], v[:, S - cap:]
@@ -286,8 +383,12 @@ def attention_decode(x, params, cfg: ModelConfig, *, cache: KVCache,
     if cfg.rope_theta:
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
-    cache = cache_append(cache, k, v)
-    o = decode_attention(q, cache.k, cache.v, cache.valid(B))
+    if isinstance(cache, QuantKVCache):
+        cache = quant_cache_append(cache, k, v)
+        o = quant_decode_attention(q, cache)
+    else:
+        cache = cache_append(cache, k, v)
+        o = decode_attention(q, cache.k, cache.v, cache.valid(B))
     return _out(o, params), cache
 
 

@@ -256,12 +256,26 @@ class Model:
     # caches
     # ----------------------------------------------------------------- #
     def init_cache(self, batch: int, capacity: int, *,
-                   window: int = 0) -> Any:
+                   window: int = 0, kv_dtype: str = "fp32") -> Any:
         """Decode cache pytree, leaves stacked on the layer axis.
         ``capacity`` is the KV length to materialize; a nonzero ``window``
-        bounds it (ring buffer) for the long-context decode variant."""
+        bounds it (ring buffer) for the long-context decode variant.
+        ``kv_dtype='int8'`` (plain-GQA attention families only) swaps in
+        the quantized ``QuantKVCache`` — decode then runs through the
+        int8-KV Pallas kernel (docs/quantization.md)."""
         cfg, dt = self.cfg, self.compute_dtype
         cap = min(capacity, window) if window else capacity
+        if kv_dtype not in ("fp32", "int8"):
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                             f"expected 'fp32' or 'int8'")
+        if kv_dtype == "int8" and (
+                cfg.family not in ("dense", "vlm", "moe")
+                or cfg.mla is not None):
+            raise ValueError(
+                "kv_dtype='int8' needs a plain-GQA attention cache; "
+                f"family {cfg.family!r}"
+                + (" with MLA" if cfg.mla is not None else "")
+                + " stores no quantizable k/v tensors")
 
         def stack(make, n):
             return jax.tree.map(
@@ -270,6 +284,9 @@ class Model:
         if cfg.family in ("dense", "vlm", "moe"):
             if cfg.mla is not None:
                 make = lambda: attn_mod.init_mla_cache(batch, cap, cfg.mla, dt)
+            elif kv_dtype == "int8":
+                make = lambda: attn_mod.init_quant_kv_cache(
+                    batch, cap, cfg.n_kv_heads, cfg.head_dim, cfg.head_dim)
             else:
                 make = lambda: attn_mod.init_kv_cache(
                     batch, cap, cfg.n_kv_heads, cfg.head_dim, cfg.head_dim, dt)

@@ -46,13 +46,15 @@ class Engine:
 
     def __init__(self, model: Model, plan: Plan, mesh, *, batch_size: int,
                  max_len: int, window: int = 0, temperature: float = 0.0,
-                 top_k: int = 0):
+                 top_k: int = 0, kv_dtype: str = "fp32"):
         self.model, self.plan, self.mesh = model, plan, mesh
         self.window = window
         self.temperature, self.top_k = temperature, top_k
         self.batch_size, self.max_len = batch_size, max_len
+        self.kv_dtype = kv_dtype
         with jax.set_mesh(mesh):
-            cache = model.init_cache(batch_size, max_len, window=window)
+            cache = model.init_cache(batch_size, max_len, window=window,
+                                     kv_dtype=kv_dtype)
             self._cache0 = cache
             c_shapes = jax.eval_shape(lambda: cache)
             self._serve_step = None

@@ -543,3 +543,93 @@ def test_interleaved_prices_the_wrap_link():
         - technique_step_cost("pipeshard", wl, cheap,
                               schedule="interleaved").comm_s
     assert d_il > d_gp
+
+
+# --------------------------------------------------------------------- #
+# the wire_dtype axis (docs/quantization.md): quantized collective and
+# p2p payloads with an fp32-master-weights correction term
+# --------------------------------------------------------------------- #
+
+def test_wire_scale_values():
+    from repro.core.costmodel import WIRE_DTYPES, wire_scale
+    assert WIRE_DTYPES == ("fp32", "bf16", "int8")
+    assert wire_scale("fp32") == 1.0
+    assert wire_scale("bf16") == 0.5
+    # int8 payload + fp32 per-128-block absmax scale: (128+4)/(128*4)
+    assert wire_scale("int8") == 0.2578125
+    for bad in ("fp16", "int4", "fp8"):
+        with pytest.raises(ValueError):
+            wire_scale(bad)
+
+
+def test_fp32_wire_is_bit_for_bit_legacy():
+    """wire_dtype='fp32' must be the identity — every component of every
+    technique's step cost equals the no-kwarg pricing exactly, on all
+    paper clusters and the topology zoo."""
+    for cluster in list(PAPER_CLUSTERS.values()) + _topology_zoo():
+        for wl in (WL_M, WL_L):
+            for tech in ALL_TECHNIQUES:
+                a = technique_step_cost(tech, wl, cluster)
+                b = technique_step_cost(tech, wl, cluster,
+                                        wire_dtype="fp32")
+                assert (a.compute_s, a.comm_s, a.total_s,
+                        a.mem_required_gb) \
+                    == (b.compute_s, b.comm_s, b.total_s,
+                        b.mem_required_gb), tech
+
+
+def test_wire_dtype_monotone_and_compute_invariant():
+    """Cheaper wire dtypes price a strictly cheaper comm term on WAN
+    clusters (fp32 > bf16 > int8) and never touch compute or memory."""
+    c = PAPER_CLUSTERS["UTAH-GPN"]
+    for tech in ALL_TECHNIQUES:
+        costs = {wd: technique_step_cost(tech, WL_M, c, wire_dtype=wd)
+                 for wd in ("fp32", "bf16", "int8")}
+        assert costs["fp32"].comm_s > costs["bf16"].comm_s \
+            > costs["int8"].comm_s, tech
+        assert len({r.compute_s for r in costs.values()}) == 1, tech
+        assert len({r.mem_required_gb for r in costs.values()}) == 1, tech
+
+
+def test_eff_byte_scale_master_weight_correction():
+    """_eff_byte_scale: the quantizable fraction rides the wire scale,
+    the remainder (fp32 master-weight sync) stays full fat — and
+    ws == 1.0 short-circuits to the literal 1.0 (fp32 exactness)."""
+    from repro.core.costmodel import CommPrecision, _eff_byte_scale
+    assert _eff_byte_scale(0.3, 1.0) == 1.0
+    assert _eff_byte_scale(1.0, 0.25) == 0.25
+    assert _eff_byte_scale(0.5, 0.25) == 0.5 * 0.25 + 0.5
+    # defaults: everything quantizable
+    cp = CommPrecision()
+    assert cp.act == 1.0 and cp.state == 1.0
+
+
+def test_zero2_wire_saving_capped_by_master_share():
+    """zero2's grad bucket is 2.0 of its 2.2x volume — the 0.2x
+    master-sync share stays fp32, so the int8 comm saving is strictly
+    smaller than data's (whose volume quantizes fully).  On a
+    zero-latency link the ratios are exact byte ratios."""
+    from repro.core.costmodel import wire_scale
+    sites = [Site(("A30",), name=f"S{i}") for i in range(2)]
+    topo = line("z", sites, [Link(0.0, 3.0)])
+    ratio = {}
+    for tech, frac in (("data", 1.0), ("zero2", 2.0 / 2.2)):
+        q = technique_step_cost(tech, WL_M, topo, wire_dtype="int8")
+        f = technique_step_cost(tech, WL_M, topo)
+        ratio[tech] = q.comm_s / f.comm_s
+        want = frac * wire_scale("int8") + (1.0 - frac)
+        assert ratio[tech] == pytest.approx(want, rel=1e-12), tech
+    assert ratio["data"] < ratio["zero2"]
+
+
+def test_int8_wire_stacks_with_carrier_dtype():
+    """A pipeline's p2p carrier rides min(carrier, wire): int8 wire on
+    top of a bf16 carrier prices the int8 p2p bytes, never more."""
+    c = PAPER_CLUSTERS["UTAH-MASS"]
+    both = technique_step_cost("pipeshard", WL_M, c, wire_dtype="int8",
+                               carrier_dtype="bf16")
+    wire_only = technique_step_cost("pipeshard", WL_M, c,
+                                    wire_dtype="int8")
+    assert both.comm_s == wire_only.comm_s
+    bf16 = technique_step_cost("pipeshard", WL_M, c, carrier_dtype="bf16")
+    assert both.comm_s < bf16.comm_s

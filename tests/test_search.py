@@ -14,7 +14,8 @@ from repro.core.costmodel import (ALL_TECHNIQUES, PAPER_CLUSTERS,
 from repro.core.search import (Candidate, PlanSearch, algorithm1_select,
                                stage_orders)
 from repro.core.selector import CostModelProber, select_technique
-from repro.core.topology import Link, Site, line, make_topology, ring
+from repro.core.topology import (Link, Site, line, make_topology, ring,
+                                 two_site)
 
 WL_M = paper_workload(get_config("gpt2m"))
 WL_L = paper_workload(get_config("gpt2L"))
@@ -713,3 +714,83 @@ def test_exact_escape_hatch_restores_full_enumeration():
     assert len(PlanSearch(WL_M, edge3(), prune=False).search()) == 39
     assert len(PlanSearch(WL_M, edge3(), prune=False,
                           schedules=("gpipe",)).search()) == 27
+
+
+# ------------------------------------------------------------------ #
+# the wire_dtype axis (docs/quantization.md): quantized collective
+# carriers as a search dimension
+# ------------------------------------------------------------------ #
+
+WIRE_POOL = ("fp32", "bf16", "int8")
+
+
+def test_candidate_key_wire_suffix():
+    assert Candidate("data", (0,), wire_dtype="fp32").key == "data@V1"
+    assert Candidate("data", (0,), wire_dtype="int8").key == "data@V1~int8"
+    c = Candidate("pipeshard", (0, 2), (2, 0), "1f1b", "int8")
+    assert c.key == "pipeshard@V1+V3|V3>V1#1f1b~int8"
+
+
+def test_wire_pool_scales_enumeration_uniformly():
+    t = make_topology("f", _sites(3), {
+        (i, j): Link(1e-3, 3.0)
+        for i, j in itertools.combinations(range(3), 2)})
+    base = list(PlanSearch(WL_M, t).candidates())
+    wired = list(PlanSearch(WL_M, t, wire_dtypes=WIRE_POOL).candidates())
+    # the wire pool multiplies the space; the fp32 slice is exactly the
+    # legacy space (same order, so exact-tie stable sorts keep winners)
+    assert len(wired) == 3 * len(base)
+    assert [c.key for c in wired if c.wire_dtype == "fp32"] \
+        == [c.key for c in base]
+    with pytest.raises(ValueError):
+        list(PlanSearch(WL_M, t, wire_dtypes=("fp32", "fp16")).candidates())
+
+
+def test_int8_wire_flips_regional_a30_cell_to_pipeshard():
+    """The acceptance gate (ISSUE 6): the paper's two-site A30 shape at
+    the Table-I regional RTT (UTAH-GPN, 20.2 ms) picks single-site Data
+    at fp32 wire — the 20 ms link makes every cross-WAN collective too
+    dear.  Pricing int8 wire bytes (0.258x) shrinks Pipeshard's p2p +
+    DP-stream bill enough that the two-site pipeline overtakes: the
+    winner flips from ``data`` to ``pipeshard`` purely by widening the
+    wire pool.  Reproduced by `benchmarks/topology_sweep.py --wire`."""
+    topo = two_site("a30x2", ("A30", "A30"), ("A30", "A30"), 20.2)
+    base = PlanSearch(WL_M, topo).best()
+    assert base.candidate.key == "data@V1"
+    wired = PlanSearch(WL_M, topo, wire_dtypes=WIRE_POOL).best()
+    assert wired.candidate.key == "pipeshard@V1+V2~int8"
+    assert wired.tflops > base.tflops
+    # fp32 candidates inside the widened pool price bit-for-bit legacy
+    s = PlanSearch(WL_M, topo, wire_dtypes=WIRE_POOL)
+    assert s.evaluate(base.candidate) == base.tflops
+
+
+def test_wire_dtype_prices_strictly_cheaper_on_wan():
+    """For any WAN-crossing candidate, int8 wire must price <= bf16 <=
+    fp32 (byte volume scales down monotonically; latency floors keep it
+    from being strictly proportional)."""
+    topo = two_site("a30x2", ("A30", "A30"), ("A30", "A30"), 20.2)
+    s = PlanSearch(WL_M, topo, wire_dtypes=WIRE_POOL)
+    for tech in ("data", "zero2", "pipeshard"):
+        perf = {wd: s.evaluate(Candidate(
+            tech, (0, 1), (0, 1) if tech == "pipeshard" else None,
+            wire_dtype=wd)) for wd in WIRE_POOL}
+        assert perf["int8"] > perf["bf16"] > perf["fp32"], tech
+
+
+def test_pruned_equals_exhaustive_with_wire_pool():
+    """Dominance pruning stays lossless when the wire pool widens the
+    space: a wire dtype rescales every subset's byte terms uniformly and
+    never touches latency or compute, so subset dominance is preserved
+    per dtype."""
+    topos = [edge3(),
+             ring("r3", _sites(3),
+                  [Link(5e-3, 3.0), Link(5e-3, 3.0), Link(120e-3, 3.0)]),
+             line("lan3", _sites(3, gpu="T4"), [Link(0.1e-3, 3.0)] * 2)]
+    for topo in topos:
+        for wl in (WL_M, WL_L):
+            _assert_prune_lossless(
+                PlanSearch(wl, topo, wire_dtypes=WIRE_POOL))
+            _assert_prune_lossless(
+                PlanSearch(wl, topo, techniques=ALL_TECHNIQUES,
+                           wire_dtypes=WIRE_POOL))

@@ -16,7 +16,10 @@ Renders, per matching artifact:
     (topology × GPU mix), one panel per latency regime, one figure per
     model; ``topology_sweep_all_<mode>.json`` (the ``--techniques all``
     pool) additionally tags cells a beyond-paper technique wins
-    (SZ = shard_zero, FS = fsdp — docs/cost-model.md).
+    (SZ = shard_zero, FS = fsdp — docs/cost-model.md);
+    ``topology_sweep_wire_<mode>.json`` (the ``--wire`` pool) tags cells
+    a quantized wire wins (I8 = int8, B16 = bf16 —
+    docs/quantization.md).
 
 Colors are a fixed per-entity assignment from a validated
 colorblind-safe categorical palette (techniques and schedules each keep
@@ -275,6 +278,8 @@ def fig_winner_map(record: dict, model: str) -> str:
     w = 16 + len(regimes) * (panel_w + panel_gap)
     h = top + len(topos) * row_h + 60
     pool = ", all techniques" if record.get("techniques") == "all" else ""
+    if record.get("wire"):
+        pool += ", fp32/bf16/int8 wire"
     body = [_text(16, 22, f"Winner map — {model} "
                   f"(balance={record['balance']}{pool})", size=13,
                   weight="600")]
@@ -309,7 +314,12 @@ def fig_winner_map(record: dict, model: str) -> str:
                     f"height='{row_h - 2}' rx='3' fill='{color}'>"
                     f"<title>{_esc(tip)}</title></rect>")
                 tag = None
-                if win and win.get("schedule", "gpipe") != "gpipe":
+                if win and win.get("wire_dtype", "fp32") != "fp32":
+                    # quantized wire took the cell (mirrors the sweep's
+                    # ~int8/~bf16 markdown tag, docs/quantization.md)
+                    tag = {"int8": "I8", "bf16": "B16"}.get(
+                        win["wire_dtype"], win["wire_dtype"][:2].upper())
+                elif win and win.get("schedule", "gpipe") != "gpipe":
                     tag = {"1f1b": "1F", "interleaved": "IL"}.get(
                         win["schedule"], win["schedule"][:2])
                 elif win and win.get("extended"):
@@ -330,6 +340,8 @@ def fig_winner_map(record: dict, model: str) -> str:
             "interleaved (docs/schedules.md)")
     if record.get("techniques") == "all":
         note += "; SZ / FS: a beyond-paper technique won the cell"
+    if record.get("wire"):
+        note += "; I8 / B16: a quantized wire won the cell"
     body.append(_text(16, h - 10, note, size=10, color=INK2))
     return _svg(w, h, body)
 
@@ -367,7 +379,8 @@ def render_all(src: str, out: str, mode: str = "full",
         emit(f"latency_{rec['kind']}{rec['n']}_{mode}.svg",
              fig_latency_sweep(rec))
     for stem, suffix in ((f"topology_sweep_{mode}", ""),
-                         (f"topology_sweep_all_{mode}", "_all")):
+                         (f"topology_sweep_all_{mode}", "_all"),
+                         (f"topology_sweep_wire_{mode}", "_wire")):
         p = os.path.join(src, f"{stem}.json")
         if os.path.exists(p):
             rec = json.load(open(p))
