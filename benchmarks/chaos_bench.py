@@ -1,0 +1,234 @@
+"""Chaos benchmark: kill-site-at-step-k recovery over the topology zoo.
+
+Two layers (docs/elasticity.md):
+
+  * **analytic sweep** — for every (kind, N, mix) zoo cell and every
+    kill target, drop the site and re-run the plan search over the
+    survivors (``repro.train.replan.replan``): records the surviving
+    technique, the TFLOP/s before/after, the search wall-clock, and the
+    steps-lost-to-checkpoint accounting.  Gates: every degraded cell
+    must still have a feasible plan, and severed-line kills must place
+    within a single component.
+  * **live gate** — the pinned recovery scenario runs for real in a
+    subprocess (``repro.launch.reshard_check --chaos``): one site of a
+    two-site Pipeshard run is killed mid-epoch; the replan must land on
+    the survivor, the resharded optimizer state must be bit-exact vs
+    the host-side reference re-placement, and the resumed loss sequence
+    must match the single-site control exactly.  Recovery seconds are
+    recorded against the pre-failure step-time budget as a metric (not
+    a wall-clock gate — CI boxes jitter).
+
+Emits ``benchmarks/out/chaos_bench.json`` and the repo-root
+``BENCH_7.json`` perf-trajectory file (PR-6's ``BENCH_6.json`` format
+family).  Exit code = number of failed gates.
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.sweep_common import (LATENCY_REGIMES, TOPOLOGY_KINDS,
+                                     build_topology)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
+
+KILL_STEP = 7          # analytic accounting: failure step ...
+CKPT_EVERY = 2         # ... against this checkpoint cadence
+STEPS_LOST = KILL_STEP % CKPT_EVERY
+
+
+def analytic_scenarios(smoke: bool) -> List[Dict]:
+    """Kill each site of each zoo cell and replan the survivors."""
+    from repro.configs import get_config
+    from repro.core.costmodel import paper_workload
+    from repro.core.search import PlanSearch
+    from repro.train.replan import replan
+
+    kinds = ("ring", "line") if smoke else TOPOLOGY_KINDS
+    ns = (2, 3) if smoke else (2, 3, 4)
+    mixes = ("a30", "a30+t4") if smoke else ("a30", "a30+t4", "rtx+t4")
+    regimes = ("regional",) if smoke else ("metro", "regional",
+                                           "continental")
+    wl = paper_workload(get_config("gpt2m"))
+    rows = []
+    for kind in kinds:
+        for n in ns:
+            if kind == "hub" and n < 3:
+                continue
+            for mix in mixes:
+                for regime in regimes:
+                    topo = build_topology(kind, n, mix,
+                                          LATENCY_REGIMES[regime])
+                    before = PlanSearch(wl, topo,
+                                        stage_balance="tflops").best()
+                    for dead in range(n):
+                        row = {"kind": kind, "n": n, "mix": mix,
+                               "regime": regime, "dead": dead,
+                               "tflops_before":
+                                   round(before.tflops, 2) if before
+                                   else None,
+                               "kill_step": KILL_STEP,
+                               "ckpt_every": CKPT_EVERY,
+                               "steps_lost": STEPS_LOST}
+                        t0 = time.perf_counter()
+                        try:
+                            rp = replan(topo, (dead,), wl)
+                            survivor, kept = topo.without_sites((dead,))
+                            comps = [{kept[s] for s in comp}
+                                     for comp in survivor.components()]
+                            row |= {
+                                "feasible": True,
+                                "technique": rp.technique,
+                                "sites_old": list(rp.sites_old),
+                                "tflops_after": round(rp.tflops, 2),
+                                "search_s": round(
+                                    time.perf_counter() - t0, 4),
+                                "n_components": len(comps),
+                                "within_one_component": any(
+                                    set(rp.sites_old) <= c
+                                    for c in comps),
+                            }
+                            if before and before.tflops:
+                                row["retained_frac"] = round(
+                                    rp.tflops / before.tflops, 3)
+                                # steps-lost work vs one pre-failure step
+                                step_s = wl.flops_per_step / (
+                                    before.tflops * 1e12)
+                                row["step_time_before_s"] = round(
+                                    step_s, 4)
+                        except RuntimeError as e:
+                            row |= {"feasible": False, "error": str(e)}
+                        rows.append(row)
+    return rows
+
+
+def live_gate(print_fn=print) -> Dict:
+    """The pinned two-site Pipeshard kill, executed for real."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "repro.launch.reshard_check", "--chaos",
+           "--kill-step", "3", "--dead", "1", "--total-steps", "6",
+           "--ckpt-every", "2"]
+    t0 = time.perf_counter()
+    out = subprocess.run(cmd, capture_output=True, text=True,
+                         timeout=560, env=env)
+    if out.returncode != 0:
+        print_fn(f"live gate subprocess failed:\n{out.stderr[-2000:]}")
+        return {"ok": False, "error": out.stderr[-500:]}
+    res = json.loads([l for l in out.stdout.splitlines()
+                      if l.startswith("{")][-1])
+    losses = res["losses_pre"] + res["losses_post"]
+    pre_times = res.get("losses_pre", [])
+    checks = {
+        "failed_and_recovered": bool(res["failed"]),
+        "single_site_survivor": res["sites_old"] == [0],
+        "opt_bitexact": bool(res["opt_bitexact"]),
+        "params_bitexact": bool(res["params_bitexact"]),
+        "loss_matches_control":
+            res["losses_post"] == res["losses_control"],
+        "steps_lost_within_cadence": res["steps_lost"] <= 2,
+        "losses_finite": all(x == x and abs(x) < 1e9 for x in losses),
+    }
+    return {
+        "ok": all(checks.values()),
+        "checks": checks,
+        "technique": res["technique"],
+        "resumed_from": res["resumed_from"],
+        "steps_lost": res["steps_lost"],
+        "search_s": round(res["search_s"], 4),
+        "reshard_s": round(res["reshard_s"], 4),
+        "recovery_s": round(res["recovery_s"], 4),
+        "wall_s": round(time.perf_counter() - t0, 1),
+        "n_pre_steps": len(pre_times),
+    }
+
+
+def run(smoke: bool = True, live: bool = True, print_fn=print) -> int:
+    """Run the chaos bench; returns the number of failed gates."""
+    n_fail = 0
+    rows = analytic_scenarios(smoke)
+    infeasible = [r for r in rows if not r["feasible"]]
+    if infeasible:
+        n_fail += 1
+        print_fn(f"GATE-FAIL: {len(infeasible)} degraded cells with no "
+                 f"feasible plan (gpt2m fits everywhere in the zoo)")
+    # severed topologies must never place across a partition
+    bad_span = [r for r in rows
+                if r["feasible"]
+                and not r.get("within_one_component", True)]
+    if bad_span:
+        n_fail += 1
+        print_fn(f"GATE-FAIL: {len(bad_span)} replans span a partition")
+    retained = [r["retained_frac"] for r in rows
+                if r.get("retained_frac")]
+    print_fn(f"analytic: {len(rows)} kill scenarios, "
+             f"{len(rows) - len(infeasible)} feasible; retained "
+             f"throughput {min(retained):.2f}x..{max(retained):.2f}x "
+             f"(median {sorted(retained)[len(retained) // 2]:.2f}x)")
+
+    gate: Dict = {"skipped": True}
+    if live:
+        gate = live_gate(print_fn)
+        if not gate.get("ok"):
+            n_fail += 1
+            print_fn(f"GATE-FAIL: live chaos gate {gate.get('checks')}")
+        else:
+            print_fn(f"live gate: recovered via {gate['technique']} in "
+                     f"{gate['recovery_s']:.2f}s (search "
+                     f"{gate['search_s']:.3f}s + reshard "
+                     f"{gate['reshard_s']:.2f}s), "
+                     f"{gate['steps_lost']} step(s) lost")
+
+    record = {"mode": "smoke" if smoke else "full",
+              "kill_step": KILL_STEP, "ckpt_every": CKPT_EVERY,
+              "scenarios": rows, "live_gate": gate,
+              "n_gate_failures": n_fail}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    art = os.path.join(OUT_DIR, "chaos_bench.json")
+    with open(art, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+        f.write("\n")
+    bench = {
+        "pr": 7,
+        "source": "benchmarks/chaos_bench.py",
+        "chaos": {
+            "mode": record["mode"],
+            "n_scenarios": len(rows),
+            "n_feasible": len(rows) - len(infeasible),
+            "retained_frac_min": min(retained) if retained else None,
+            "retained_frac_max": max(retained) if retained else None,
+            "live_gate": gate,
+        },
+    }
+    path = os.path.join(_ROOT, "BENCH_7.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print_fn(f"wrote {art} and {path}")
+    return n_fail
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small zoo slice + the single live gate")
+    ap.add_argument("--no-live", action="store_true",
+                    help="analytic sweep only (no subprocess training)")
+    args = ap.parse_args(argv)
+    return run(smoke=args.smoke, live=not args.no_live)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,9 @@ dry-run roofline and kernel micro-bench.
 
 Aggregates the kernel micro-bench artifact and the wire-dtype winner map
 into the repo-root ``BENCH_6.json`` perf-trajectory file (the ROADMAP's
-measured-trajectory item).  Exit code = number of failed paper-claim
-checks.
+measured-trajectory item), and runs the chaos recovery bench
+(``benchmarks/chaos_bench.py``), which writes ``BENCH_7.json``.  Exit
+code = number of failed paper-claim checks.
 """
 from __future__ import annotations
 
@@ -100,6 +101,10 @@ def main() -> None:
     print("\n===== BENCH_6.json (perf trajectory) =====")
     n_fail += write_bench_trajectory(
         os.path.join(_ROOT, "benchmarks", "out"))
+
+    print("\n===== chaos_bench (elastic recovery, smoke) =====")
+    import benchmarks.chaos_bench as chaos_bench
+    n_fail += chaos_bench.run(smoke=True)
 
     if args.sweep:
         import subprocess

@@ -166,6 +166,46 @@ def validate_stages(cfg, stack, n_stages: int,
     return None if virt == 1 else (L // n_chunks,) * n_chunks
 
 
+def stage_gather_index(split, n_stages: int, virt: int = 1):
+    """Gather index + validity mask realizing a per-chunk layer split.
+
+    This is THE pad-and-mask convention: stage s holds its chunks
+    (chunk ``c = k * n_stages + s``, ``k < virt``) back to back, each
+    padded to the longest chunk by repeating its last layer; padded
+    slots are identity-masked via the validity mask.  Both the pipeline
+    runtime (``make_pipeline_loss``) and cross-plan checkpoint
+    resharding (``repro.train.reshard.stage_view``) apply exactly this
+    index, so a resharded layout is bit-for-bit what the runtime would
+    have gathered.
+
+    Args:
+        split: per-chunk layer counts (``n_stages * virt`` entries, each
+            >= 1, summing to the stack length).
+        n_stages: pipeline stages.
+        virt: virtual stages per device (interleaved schedules).
+
+    Returns:
+        ``(idx, layer_valid)`` numpy arrays of length
+        ``n_stages * virt * max(split)``: the stack-row gather index in
+        stage-major chunk order, and whether each padded slot holds a
+        real (unrepeated) layer.
+    """
+    split = tuple(int(l) for l in split)
+    if len(split) != n_stages * virt:
+        raise ValueError(f"split {split} has {len(split)} entries for "
+                         f"{n_stages} stages x {virt} virtual")
+    max_l = max(split)
+    offs = np.concatenate(([0], np.cumsum(split)))
+    chunk_of = [k * n_stages + s
+                for s in range(n_stages) for k in range(virt)]
+    idx = np.concatenate([
+        offs[c] + np.minimum(np.arange(max_l), split[c] - 1)
+        for c in chunk_of]).astype(np.int32)
+    layer_valid = np.concatenate(
+        [np.arange(max_l) < split[c] for c in chunk_of])
+    return idx, layer_valid
+
+
 def schedule_tables(schedule: str, n_stages: int,
                     n_micro: int) -> Dict[str, np.ndarray]:
     """Static forward-slot tables driving the scheduled pipeline runner.
@@ -345,25 +385,16 @@ def make_pipeline_loss(model, mesh: Mesh, n_micro: int, *,
                                 schedule=schedule)
         layer_valid = None
         if split is not None:
-            # per-chunk gather realizing Placement.stage_layers: stage s
-            # holds its chunks (chunk c = k*n_stages + s, k < virt) back
-            # to back, each padded to the longest chunk by repeating its
-            # last layer; padded slots are masked to identity (and zero
-            # aux) inside run_stack, so the where() never sees
-            # uninitialized params.  virt == 1 is PR 3's per-stage
-            # gather unchanged.
-            max_l = max(split)
-            offs = np.concatenate(([0], np.cumsum(split)))
-            chunk_of = [k * n_stages + s
-                        for s in range(n_stages) for k in range(virt)]
-            idx = np.concatenate([
-                offs[c] + np.minimum(np.arange(max_l), split[c] - 1)
-                for c in chunk_of]).astype(np.int32)
+            # per-chunk gather realizing Placement.stage_layers
+            # (stage_gather_index — the shared pad-and-mask convention):
+            # padded slots are masked to identity (and zero aux) inside
+            # run_stack, so the where() never sees uninitialized params.
+            # virt == 1 is PR 3's per-stage gather unchanged.
+            idx, valid = stage_gather_index(split, n_stages, virt)
             stack = jax.tree.map(
                 lambda leaf: jnp.take(leaf, jnp.asarray(idx), axis=0),
                 stack)
-            layer_valid = jnp.asarray(np.concatenate(
-                [np.arange(max_l) < split[c] for c in chunk_of]))
+            layer_valid = jnp.asarray(valid)
         shared = params.get("shared")
         if shared is None:
             shared = jnp.zeros(())

@@ -216,6 +216,82 @@ class Topology:
                    key=lambda l: (l.effective_gbps, -l.latency_s))
 
     # ----------------------------------------------------------------- #
+    # topology surgery (elastic re-planning, docs/elasticity.md)
+    # ----------------------------------------------------------------- #
+
+    def without_sites(self, dead: Sequence[int]
+                      ) -> Tuple["Topology", Tuple[int, ...]]:
+        """The surviving topology after site failures.
+
+        Sites are reindexed densely (links follow); the returned ``kept``
+        tuple maps each *new* site index back to its old one, which is
+        what lets a re-planned ``core.plans.Placement`` on the survivor
+        be realized on the original devices (``train.replan``).
+
+        Args:
+            dead: old site indices that disappeared (duplicates and
+                out-of-range indices are rejected via ``select``).
+
+        Returns:
+            ``(survivor, kept)`` — the degraded topology and the
+            new→old index map.
+
+        Raises:
+            ValueError: every site died (nothing to re-plan onto).
+        """
+        gone = set(self.select(tuple(dead)) if dead else ())
+        kept = tuple(i for i in range(self.n_sites) if i not in gone)
+        if not kept:
+            raise ValueError(f"all {self.n_sites} sites of {self.name!r} "
+                             f"died — no survivor to re-plan onto")
+        remap = {old: new for new, old in enumerate(kept)}
+        links = {(remap[i], remap[j]): l for (i, j), l in self.links.items()
+                 if i in remap and j in remap}
+        name = self.name if not gone else \
+            f"{self.name}-S{'S'.join(str(i) for i in sorted(gone))}"
+        return Topology(name, tuple(self.sites[i] for i in kept),
+                        links), kept
+
+    def without_link(self, i: int, j: int) -> "Topology":
+        """The topology with the direct edge between sites i and j
+        removed (site indices unchanged).  Traffic between the pair is
+        then priced over the remaining routed path — or becomes
+        unreachable, which ``components`` makes visible.
+
+        Raises:
+            ValueError: no direct link exists between the pair.
+        """
+        k = _key(i, j)
+        if k not in self.links:
+            raise ValueError(f"no direct link between sites {i} and {j} "
+                             f"in topology {self.name!r}")
+        links = {p: l for p, l in self.links.items() if p != k}
+        return Topology(f"{self.name}-L{k[0]}{k[1]}", self.sites, links)
+
+    def components(self) -> List[Tuple[int, ...]]:
+        """Connected components of the link graph, each a sorted site
+        tuple, largest-first (ties: smallest leading index).  A healthy
+        topology has exactly one; after ``without_sites`` /
+        ``without_link`` the survivors may split, and a re-plan must
+        place within a single component (collectives cannot cross a
+        partition) — ``train.replan.replan`` searches each component."""
+        parent = list(range(self.n_sites))
+
+        def find(a: int) -> int:
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        for (i, j) in self.links:
+            parent[find(i)] = find(j)
+        groups: Dict[int, List[int]] = {}
+        for i in range(self.n_sites):
+            groups.setdefault(find(i), []).append(i)
+        return sorted((tuple(sorted(g)) for g in groups.values()),
+                      key=lambda g: (-len(g), g))
+
+    # ----------------------------------------------------------------- #
     def describe(self) -> str:
         """Multi-line human-readable summary (sites, links, eff GB/s)."""
         parts = [f"{self.name}: {self.n_sites} sites"]

@@ -1,6 +1,14 @@
 from repro.train.checkpoint import (latest_checkpoint, restore_checkpoint,
-                                    save_checkpoint)
+                                    save_checkpoint, verify_checkpoint)
 from repro.train.loop import TrainResult, model_flops_per_step, train
+from repro.train.replan import (ElasticRun, ReplanResult, SiteFailure,
+                                kill_site_at, replan, train_elastic)
+from repro.train.reshard import (reshard_checkpoint, reshard_state, restage,
+                                 stage_view, unstage_view)
 
-__all__ = ["TrainResult", "latest_checkpoint", "model_flops_per_step",
-           "restore_checkpoint", "save_checkpoint", "train"]
+__all__ = ["ElasticRun", "ReplanResult", "SiteFailure", "TrainResult",
+           "kill_site_at", "latest_checkpoint", "model_flops_per_step",
+           "replan", "reshard_checkpoint", "reshard_state",
+           "restore_checkpoint", "restage", "save_checkpoint",
+           "stage_view", "train", "train_elastic", "unstage_view",
+           "verify_checkpoint"]

@@ -4,12 +4,29 @@ Leaves are flattened with tree paths as keys; arrays are gathered to host
 (fine at SLM scale, the paper's regime) and split across ``n_files`` npz
 shards to bound file sizes.  Restore reproduces the exact pytree and can
 re-place leaves onto any sharding (plan changes between runs are allowed —
-the technique-selection algorithm may switch plans mid-project).
+the technique-selection algorithm may switch plans mid-project, and
+elastic re-planning reshards checkpoints across plans wholesale:
+``repro.train.reshard``, docs/elasticity.md).
+
+Durability contract (what the chaos path leans on):
+
+  * saves are *atomic*: shards and manifest are written to a
+    ``step_XXXXXXXX.tmp`` staging directory, the manifest is fsynced,
+    and the directory is renamed into place last — a crash mid-save can
+    never leave a directory ``latest_checkpoint`` would return;
+  * every shard's sha256 is recorded in ``manifest.json`` and verified
+    on restore, so a truncated or bit-rotted shard fails loudly instead
+    of silently resuming from garbage;
+  * restore refuses dtype mismatches (a saved fp32 master leaf restored
+    onto a bf16 template used to downcast silently) unless the caller
+    passes ``allow_cast=True``.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import shutil
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -27,15 +44,34 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 def save_checkpoint(ckpt_dir: str, step: int, params, opt_state=None, *,
                     n_files: int = 4, extra: Optional[Dict] = None) -> str:
+    """Atomically write one checkpoint directory; returns its path.
+
+    All shards land in ``step_XXXXXXXX.tmp`` first; the manifest (with
+    per-shard sha256 checksums) is written and fsynced, then the staging
+    directory is renamed to its final name.  ``latest_checkpoint``
+    ignores ``.tmp`` and manifest-less directories, so a save that dies
+    at any point is invisible to resume.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    tmp = path + ".tmp"
+    if os.path.isdir(tmp):                   # stale staging from a crash
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     trees = {"params": params}
     if opt_state is not None:
         trees["opt"] = opt_state
     manifest: Dict[str, Any] = {"step": step, "files": {},
-                                "extra": extra or {}}
+                                "checksums": {}, "extra": extra or {}}
     for name, tree in trees.items():
         flat = _flatten(tree)
         keys = sorted(flat)
@@ -44,26 +80,92 @@ def save_checkpoint(ckpt_dir: str, step: int, params, opt_state=None, *,
             if not ks:
                 continue
             fname = f"{name}_{i:02d}.npz"
-            np.savez(os.path.join(path, fname), **{k: flat[k] for k in ks})
+            np.savez(os.path.join(tmp, fname), **{k: flat[k] for k in ks})
             manifest["files"].setdefault(name, []).append(fname)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+            manifest["checksums"][fname] = _sha256(os.path.join(tmp, fname))
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.isdir(path):                  # re-saving the same step
+        shutil.rmtree(path)
+    os.replace(tmp, path)
     return path
 
 
+def _complete(ckpt_dir: str, d: str) -> bool:
+    return not d.endswith(".tmp") and \
+        os.path.isfile(os.path.join(ckpt_dir, d, "manifest.json"))
+
+
 def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    """Newest *complete* checkpoint: ``.tmp`` staging directories and
+    directories without a manifest (a pre-atomic partial save) are
+    skipped — they can never be resumed from."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and _complete(ckpt_dir, d))
     return os.path.join(ckpt_dir, steps[-1]) if steps else None
 
 
-def restore_checkpoint(path: str, params_like, opt_like=None,
-                       shardings: Optional[Dict] = None
-                       ) -> Tuple[Any, Any, int]:
-    """Restore onto templates; optional shardings re-place the leaves."""
-    with open(os.path.join(path, "manifest.json")) as f:
+def verify_checkpoint(path: str) -> Dict[str, Any]:
+    """Integrity-check a checkpoint directory and return its manifest.
+
+    Raises:
+        ValueError: manifest missing (partial save), a listed shard file
+            is missing, or a shard's sha256 does not match the manifest
+            (truncation / corruption).  Legacy manifests without
+            checksums verify shard *existence* only.
+    """
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.isfile(mpath):
+        raise ValueError(f"{path}: no manifest.json — incomplete "
+                         f"checkpoint (crashed mid-save?)")
+    with open(mpath) as f:
         manifest = json.load(f)
+    sums = manifest.get("checksums", {})
+    for name, fnames in manifest.get("files", {}).items():
+        for fname in fnames:
+            fpath = os.path.join(path, fname)
+            if not os.path.isfile(fpath):
+                raise ValueError(f"{path}: shard {fname} listed in the "
+                                 f"manifest is missing")
+            want = sums.get(fname)
+            if want is not None and _sha256(fpath) != want:
+                raise ValueError(f"{path}: shard {fname} fails its "
+                                 f"sha256 check — truncated or corrupt")
+    return manifest
+
+
+def restore_checkpoint(path: str, params_like, opt_like=None,
+                       shardings: Optional[Dict] = None, *,
+                       allow_cast: bool = False,
+                       verify: bool = True) -> Tuple[Any, Any, int]:
+    """Restore onto templates; optional shardings re-place the leaves.
+
+    Args:
+        path: checkpoint directory (from ``save_checkpoint`` /
+            ``latest_checkpoint``).
+        params_like: params template (arrays or ShapeDtypeStructs) fixing
+            tree structure, shapes, and dtypes.
+        opt_like: optional optimizer-state template.
+        shardings: optional ``{"params": ..., "opt": ...}`` sharding
+            pytrees the restored leaves are placed onto.
+        allow_cast: permit dtype-changing restores (saved fp32 onto a
+            bf16 template, or vice versa).  Off by default — a silent
+            downcast destroys master-weight precision, so mismatches
+            raise ``ValueError``.
+        verify: check per-shard sha256 checksums before loading
+            (``verify_checkpoint``).
+
+    Raises:
+        ValueError: integrity failure, shape mismatch, or (without
+            ``allow_cast``) dtype mismatch.
+    """
+    manifest = verify_checkpoint(path) if verify else \
+        json.load(open(os.path.join(path, "manifest.json")))
 
     def load(name, like, shard_tree):
         flat: Dict[str, np.ndarray] = {}
@@ -78,9 +180,17 @@ def restore_checkpoint(path: str, params_like, opt_like=None,
             key = "/".join(
                 str(getattr(q, "key", getattr(q, "name", getattr(q, "idx", q))))
                 for q in p)
+            if key not in flat:
+                raise ValueError(f"{name}/{key}: not in checkpoint {path}")
             arr = flat[key]
             if arr.shape != tuple(leaf.shape):
                 raise ValueError(f"{key}: ckpt {arr.shape} != {leaf.shape}")
+            if arr.dtype != np.dtype(leaf.dtype) and not allow_cast:
+                raise ValueError(
+                    f"{key}: checkpoint dtype {arr.dtype} != template "
+                    f"{np.dtype(leaf.dtype)}; a silent cast would lose "
+                    f"master-weight precision — pass allow_cast=True to "
+                    f"convert deliberately")
             a = jnp.asarray(arr, dtype=leaf.dtype)
             if shard_leaves is not None:
                 a = jax.device_put(a, shard_leaves[i])

@@ -46,20 +46,37 @@ def train(model: Model, plan: Plan, mesh, tcfg: TrainConfig, loader, *,
           steps: int, params=None, opt_state=None,
           log_every: int = 10, ckpt_dir: Optional[str] = None,
           ckpt_every: int = 0, stage_layers=None,
-          schedule: str = "gpipe",
+          schedule: str = "gpipe", start_step: int = 0,
+          on_step_failure: Optional[Callable[[int], None]] = None,
           log_fn: Callable[[str], None] = print) -> TrainResult:
     """Plan-aware training driver; ``stage_layers`` and ``schedule``
     thread a searched pipeline ``Placement``'s per-stage layer split and
     tick-order schedule into the step builder (uneven splits run
     pad-and-masked, alternative schedules via the scheduled runner —
-    core/pipeline.py, docs/schedules.md)."""
+    core/pipeline.py, docs/schedules.md).
+
+    ``start_step`` resumes mid-run: steps ``start_step..steps-1`` are
+    executed against the same deterministic batch sequence
+    (``loader.batch_at(i)``) and absolute step numbers, so a restored
+    checkpoint continues exactly where the original run would have been
+    — the elastic-recovery resume path (``repro.train.replan``,
+    docs/elasticity.md).
+
+    ``on_step_failure`` is the fault-injection hook: called with the
+    absolute step index before each step executes; raising from it
+    (e.g. ``repro.train.replan.SiteFailure``, via ``kill_site_at``)
+    kills the run deterministically mid-epoch — the exception leaves
+    ``train`` with the partial ``TrainResult`` attached as its
+    ``result`` attribute, so the chaos benchmark can account for
+    steps-lost and pre-failure step times.
+    """
     cfg = model.cfg
     with jax.set_mesh(mesh):
         if params is None:
             params = model.init(jax.random.key(tcfg.seed))
         if opt_state is None:
             opt_state = init_adamw(params)
-        first = loader.batch_at(0)
+        first = loader.batch_at(start_step)
         p_shapes = jax.eval_shape(lambda: params)
         b_shapes = jax.eval_shape(lambda: first)
         step_fn, sh = build_train_step(model, plan, mesh, tcfg,
@@ -71,10 +88,17 @@ def train(model: Model, plan: Plan, mesh, tcfg: TrainConfig, loader, *,
         opt_state = jax.device_put(opt_state, sh["opt"])
 
         result = TrainResult()
+        metrics: Dict[str, Any] = {}
         flops = model_flops_per_step(
             cfg, first["tokens"].shape[0] * first["tokens"].shape[1]
             * loader.n_shards)
-        for i in range(steps):
+        for i in range(start_step, steps):
+            if on_step_failure is not None:
+                try:
+                    on_step_failure(i)
+                except BaseException as e:
+                    e.result = result        # partial losses/step times
+                    raise
             batch = jax.device_put(loader.batch_at(i), sh["batch"])
             t0 = time.perf_counter()
             params, opt_state, metrics = step_fn(params, opt_state, batch)

@@ -1,0 +1,346 @@
+"""Elastic re-planning: lose a site mid-run, search the survivors, resume.
+
+The recovery path the chaos benchmark exercises (docs/elasticity.md):
+
+  1. a deterministic fault (``SiteFailure``, injected through
+     ``train(on_step_failure=...)`` by ``kill_site_at``) kills the run at
+     an exact step;
+  2. ``replan`` drops the dead sites from the ``core.topology.Topology``
+     (``without_sites``), splits the survivors into connected
+     ``components`` (a dead site can sever the only path between the
+     rest), runs ``core.search.PlanSearch`` inside each component, and
+     keeps the globally best feasible plan — with the index maps back to
+     the *original* topology so device blocks can be re-used;
+  3. ``reshard_checkpoint`` restores the newest complete checkpoint
+     straight onto the new plan's layout (``repro.train.reshard``) —
+     params and AdamW moments bit-exact, no recomputation;
+  4. ``train(start_step=...)`` resumes against the same deterministic
+     batch sequence, so the post-recovery loss sequence matches a run
+     that never failed (tests/test_reshard.py pins this).
+
+``train_elastic`` wires all four into one driver and reports the
+recovery accounting (search / reshard seconds, steps lost) that
+``benchmarks/chaos_bench.py`` gates on a step-time budget.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.configs.base import TrainConfig
+from repro.core.costmodel import TECHNIQUES, Workload
+from repro.core.plans import Placement, get_plan
+from repro.core.search import PlanSearch
+from repro.core.topology import Topology
+from repro.launch.mesh import placement_mesh
+from repro.models.model import Model
+from repro.optim import init_adamw
+from repro.train.checkpoint import latest_checkpoint, save_checkpoint
+from repro.train.loop import TrainResult, train
+from repro.train.reshard import reshard_checkpoint
+
+
+class SiteFailure(RuntimeError):
+    """A site (or set of sites) dropped out at a training step.
+
+    Raised from a ``train(on_step_failure=...)`` hook; ``train`` attaches
+    the partial ``TrainResult`` as the exception's ``result`` attribute
+    before re-raising, so the driver can account for pre-failure steps.
+
+    Attributes:
+        step: the absolute step index the failure struck at (that step
+            and everything after it did not execute).
+        dead_sites: original-topology indices of the lost sites.
+    """
+
+    def __init__(self, step: int, dead_sites: Sequence[int],
+                 reason: str = "site lost"):
+        self.step = int(step)
+        self.dead_sites = tuple(int(i) for i in dead_sites)
+        super().__init__(
+            f"step {self.step}: site(s) "
+            f"{'+'.join(f'V{i + 1}' for i in self.dead_sites)} "
+            f"failed ({reason})")
+
+
+def kill_site_at(step: int, dead_sites: Sequence[int]
+                 ) -> Callable[[int], None]:
+    """Deterministic fault injector for ``train(on_step_failure=...)``:
+    raises ``SiteFailure(step, dead_sites)`` the moment the run reaches
+    ``step`` — the chaos benchmark's kill-site-at-step-k scenario."""
+    dead = tuple(dead_sites)
+
+    def hook(i: int) -> None:
+        if i == step:
+            raise SiteFailure(i, dead)
+
+    return hook
+
+
+@dataclass(frozen=True)
+class ReplanResult:
+    """What the survivor search decided.
+
+    Attributes:
+        topology: the component sub-topology the winning plan was
+            searched on (site indices are *local* to it).
+        technique: winning technique (a ``core.plans.PLANS`` key).
+        placement: winning ``core.plans.Placement`` — sites index into
+            ``topology``.
+        sites_old: per placed site, its index in the ORIGINAL topology
+            (so the original per-site device blocks can be re-used:
+            ``placement_devices``).
+        tflops: the cost model's score for the winner.
+        search_s: wall-clock seconds the survivor search took.
+        dead_sites: original indices of the sites that were removed.
+    """
+    topology: Topology
+    technique: str
+    placement: Placement
+    sites_old: Tuple[int, ...]
+    tflops: float
+    search_s: float
+    dead_sites: Tuple[int, ...]
+
+
+def replan(topo: Topology, dead_sites: Sequence[int], wl: Workload, *,
+           techniques: Tuple[str, ...] = TECHNIQUES,
+           stage_balance: str = "tflops",
+           schedules: Optional[Tuple[str, ...]] = None,
+           **search_kw) -> ReplanResult:
+    """Search the surviving topology for the best feasible plan.
+
+    Drops ``dead_sites``, splits the survivors into connected components
+    (``Topology.components`` — losing a middle site can disconnect the
+    rest, and a plan cannot span sites with no path between them), runs
+    a ``core.search.PlanSearch`` inside each component, and returns the
+    globally best feasible candidate with its index maps composed back
+    to the original topology.
+
+    Args:
+        topo: the original topology the failed run was planned on.
+        dead_sites: original site indices that died.
+        wl: the workload being re-placed (same model/batch as the run).
+        techniques: technique pool (default: the paper's four).
+        stage_balance: stage balancing for pipeline candidates; defaults
+            to ``"tflops"`` — degraded survivor sets are exactly where
+            uneven splits pay (the searched ``stage_layers`` then ride
+            into ``reshard_checkpoint``'s validation).
+        schedules: pipeline schedule pool (default: the search's).
+        **search_kw: forwarded to ``PlanSearch``.
+
+    Raises:
+        ValueError: ``dead_sites`` is empty/invalid or kills every site.
+        RuntimeError: no surviving component has a feasible plan (every
+            candidate OOMs) — need more GPU memory.
+    """
+    if not dead_sites:
+        raise ValueError("replan without dead sites — nothing to do")
+    t0 = time.perf_counter()
+    survivor, kept = topo.without_sites(dead_sites)
+    if schedules is not None:
+        search_kw["schedules"] = tuple(schedules)
+    best: Optional[Tuple[float, PlanSearch, "object", Topology,
+                         Tuple[int, ...]]] = None
+    for comp in survivor.components():
+        drop = [i for i in range(survivor.n_sites) if i not in comp]
+        sub, sub_kept = survivor.without_sites(drop) if drop \
+            else (survivor, tuple(range(survivor.n_sites)))
+        search = PlanSearch(wl, sub, techniques=tuple(techniques),
+                            stage_balance=stage_balance, **search_kw)
+        top = search.best()
+        if top is not None and (best is None or top.tflops > best[0]):
+            best = (top.tflops, search, top, sub, sub_kept)
+    if best is None:
+        raise RuntimeError(
+            f"no feasible plan on the survivors of {topo.name} minus "
+            f"{tuple(dead_sites)} — every candidate exceeds memory")
+    tflops, search, top, sub, sub_kept = best
+    placement = search.placement(top.candidate)
+    sites_old = tuple(kept[sub_kept[s]] for s in placement.sites)
+    return ReplanResult(
+        topology=sub, technique=top.candidate.technique,
+        placement=placement, sites_old=sites_old, tflops=float(tflops),
+        search_s=time.perf_counter() - t0,
+        dead_sites=tuple(int(i) for i in dead_sites))
+
+
+# --------------------------------------------------------------------- #
+# site -> device blocks (one device per GPU, in site order)
+# --------------------------------------------------------------------- #
+
+def site_device_blocks(topo: Topology, devices=None) -> List[Tuple]:
+    """Per-site device blocks under the one-device-per-GPU convention
+    ``launch.mesh.make_topology_mesh`` consumes: site i owns the next
+    ``len(topo.sites[i].gpus)`` devices.  Fixing the blocks up front
+    means a replanned run re-uses exactly the surviving sites' devices.
+    """
+    devs = list(jax.devices()) if devices is None else list(devices)
+    blocks, off = [], 0
+    for s in topo.sites:
+        n = len(s.gpus)
+        if off + n > len(devs):
+            raise ValueError(f"topology {topo.name} needs "
+                             f"{sum(len(t.gpus) for t in topo.sites)} "
+                             f"devices, have {len(devs)}")
+        blocks.append(tuple(devs[off:off + n]))
+        off += n
+    return blocks
+
+
+def placement_devices(blocks: Sequence[Tuple],
+                      sites_old: Sequence[int]) -> List:
+    """Flatten the original-topology device blocks of a placement's
+    sites (``ReplanResult.sites_old`` order) into the device list
+    ``launch.mesh.placement_mesh`` consumes."""
+    return [d for i in sites_old for d in blocks[i]]
+
+
+# --------------------------------------------------------------------- #
+# the elastic driver
+# --------------------------------------------------------------------- #
+
+@dataclass
+class ElasticRun:
+    """One elastic training run's outcome + recovery accounting.
+
+    Attributes:
+        result: the final ``TrainResult`` (the post-recovery segment
+            when a failure struck, else the whole run).
+        pre: the pre-failure partial ``TrainResult`` (None: no failure).
+        failure: the ``SiteFailure`` that struck (None: clean run).
+        replan: the survivor search's ``ReplanResult`` (None: clean run).
+        resumed_from: checkpoint step the recovery restarted at.
+        steps_lost: steps re-executed = failure step - checkpoint step.
+        search_s / reshard_s / recovery_s: recovery phase wall-clocks
+            (recovery covers search + restore + reshard, NOT the resumed
+            training itself).
+    """
+    result: TrainResult
+    pre: Optional[TrainResult] = None
+    failure: Optional[SiteFailure] = None
+    replan: Optional[ReplanResult] = None
+    resumed_from: Optional[int] = None
+    steps_lost: int = 0
+    search_s: float = 0.0
+    reshard_s: float = 0.0
+    recovery_s: float = 0.0
+
+    @property
+    def failed(self) -> bool:
+        return self.failure is not None
+
+    @property
+    def losses(self) -> List[float]:
+        """Pre-failure + post-recovery losses, concatenated in executed
+        order (re-executed steps appear twice, as they ran twice)."""
+        pre = self.pre.losses if self.pre else []
+        return list(pre) + list(self.result.losses)
+
+
+def train_elastic(model: Model, topo: Topology, technique: str,
+                  placement: Placement, tcfg: TrainConfig, loader, *,
+                  steps: int, ckpt_dir: str, ckpt_every: int = 1,
+                  on_step_failure: Optional[Callable[[int], None]] = None,
+                  devices=None, model_axis: int = 1,
+                  techniques: Tuple[str, ...] = TECHNIQUES,
+                  log_every: int = 0,
+                  log_fn: Callable[[str], None] = print,
+                  **search_kw) -> ElasticRun:
+    """Run a plan with fault tolerance: on ``SiteFailure``, replan over
+    the survivors, reshard the newest checkpoint onto the winner, and
+    resume — the whole elastic path of docs/elasticity.md in one call.
+
+    A step-0 checkpoint is saved before training starts (params/opt
+    initialized here, deterministically from ``tcfg.seed``), so recovery
+    is possible even when the failure strikes before the first periodic
+    checkpoint lands.
+
+    Args:
+        model: the model to train.
+        topo: the full (pre-failure) topology.
+        technique: initial plan name (``core.plans.PLANS`` key).
+        placement: initial ``core.plans.Placement`` on ``topo``.
+        tcfg: training config.
+        loader: deterministic ``data.pipeline.Loader``.
+        steps: total steps to reach (absolute).
+        ckpt_dir: checkpoint directory (required — it IS the recovery
+            mechanism).
+        ckpt_every: periodic checkpoint interval in steps.
+        on_step_failure: fault hook forwarded to ``train`` (e.g.
+            ``kill_site_at``); only fires on the first segment.
+        devices: explicit devices (default all local); carved into
+            per-site blocks (``site_device_blocks``).
+        model_axis: tensor-parallel degree inside each site.
+        techniques: survivor-search technique pool.
+        log_every / log_fn: forwarded to ``train``.
+        **search_kw: forwarded to ``replan`` / ``PlanSearch``.
+
+    Returns:
+        An ``ElasticRun`` — clean or recovered.
+
+    Raises:
+        RuntimeError: no feasible plan on the survivors, or no complete
+            checkpoint to recover from.
+    """
+    if not ckpt_dir:
+        raise ValueError("train_elastic needs ckpt_dir — checkpoints are "
+                         "the recovery mechanism")
+    plan = get_plan(technique)
+    blocks = site_device_blocks(topo, devices)
+    mesh = placement_mesh(topo, plan, placement, model=model_axis,
+                          devices=placement_devices(
+                              blocks, placement.sites))
+    params = model.init(jax.random.key(tcfg.seed))
+    opt_state = init_adamw(params)
+    save_checkpoint(ckpt_dir, 0, params, opt_state)
+    try:
+        res = train(model, plan, mesh, tcfg, loader, steps=steps,
+                    params=params, opt_state=opt_state,
+                    ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                    stage_layers=placement.stage_layers,
+                    schedule=placement.schedule,
+                    on_step_failure=on_step_failure,
+                    log_every=log_every, log_fn=log_fn)
+        return ElasticRun(result=res)
+    except SiteFailure as fail:
+        pre = getattr(fail, "result", TrainResult())
+        first = loader.batch_at(0)
+        wl = Workload(model.cfg, int(first["tokens"].shape[1]),
+                      loader.global_batch, steps_per_epoch=steps,
+                      microbatches=tcfg.microbatches)
+        t0 = time.perf_counter()
+        rp = replan(topo, fail.dead_sites, wl, techniques=techniques,
+                    **search_kw)
+        ckpt = latest_checkpoint(ckpt_dir)
+        if ckpt is None:
+            raise RuntimeError(
+                f"no complete checkpoint in {ckpt_dir} to recover "
+                f"from") from fail
+        plan2 = get_plan(rp.technique)
+        mesh2 = placement_mesh(rp.topology, plan2, rp.placement,
+                               model=model_axis,
+                               devices=placement_devices(
+                                   blocks, rp.sites_old))
+        t1 = time.perf_counter()
+        params2, opt2, step0 = reshard_checkpoint(
+            ckpt, model, plan2, mesh2, placement=rp.placement)
+        t2 = time.perf_counter()
+        log_fn(f"recovered at step {step0}: {rp.technique}@"
+               f"{'+'.join(f'V{i + 1}' for i in rp.sites_old)} "
+               f"(search {rp.search_s:.2f}s, reshard {t2 - t1:.2f}s, "
+               f"{fail.step - step0} step(s) lost)")
+        post = train(model, plan2, mesh2, tcfg, loader, steps=steps,
+                     start_step=step0, params=params2, opt_state=opt2,
+                     ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                     stage_layers=rp.placement.stage_layers,
+                     schedule=rp.placement.schedule,
+                     log_every=log_every, log_fn=log_fn)
+        return ElasticRun(result=post, pre=pre, failure=fail, replan=rp,
+                          resumed_from=step0,
+                          steps_lost=fail.step - step0,
+                          search_s=rp.search_s, reshard_s=t2 - t1,
+                          recovery_s=t2 - t0)

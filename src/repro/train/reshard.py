@@ -1,0 +1,230 @@
+"""Cross-plan checkpoint resharding: restore any saved run onto any plan.
+
+``train/checkpoint.py`` saves gathered-to-host canonical pytrees — every
+leaf is the full array, the layer stack is in logical layer order — so a
+checkpoint is already layout-independent.  Resharding between two
+(technique x placement x stage_layers) layouts therefore decomposes:
+
+  * **re-placement**: compute the destination plan's param/optimizer
+    shardings on the destination mesh (``core.plans.Plan
+    .param_shardings`` / ``opt_specs``) and ``device_put`` every leaf
+    onto them — ``reshard_checkpoint`` — with AdamW moments carried
+    leaf-for-leaf (m/v live on exactly the param sharding under fsdp,
+    and on the ZeRO largest-dim spec under zero2/shard_zero);
+  * **re-staging**: when the destination is a pipeline with a different
+    stage count or ``stage_layers`` split, the per-stage layer
+    assignment changes.  The runtime gathers stages from the canonical
+    stack at trace time via the pad-and-mask convention
+    (``core.pipeline.stage_gather_index``), so ``stage_view`` /
+    ``unstage_view`` / ``restage`` here apply the *same* index outside
+    the runtime: they materialize a layout's padded stage-major view,
+    invert it back to canonical, and map one pipeline layout straight
+    into another — the host-side reference re-placement the chaos gate
+    checks bit-exactness against (docs/elasticity.md).
+
+Everything is bit-exact: no leaf is recomputed, cast (unless
+``allow_cast``), or renormalized — ``tests/test_reshard.py`` pins parity
+across zero2→fsdp, data→pipeshard, stage-count and stage-order changes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import parse_schedule
+from repro.core.pipeline import stage_gather_index
+from repro.core.plans import Placement, Plan
+from repro.core.sharding import named_shardings
+from repro.optim import AdamWState, init_adamw
+from repro.train.checkpoint import restore_checkpoint
+
+
+# --------------------------------------------------------------------- #
+# stage re-slicing: canonical stack <-> padded stage-major views
+# --------------------------------------------------------------------- #
+
+def normalized_stage_layers(n_layers: int,
+                            placement: Placement) -> Tuple[int, ...]:
+    """The per-chunk layer split a pipeline placement runs: its explicit
+    ``stage_layers`` when present, else the even split — which must
+    divide (``core.pipeline.validate_stages`` enforces the same rule at
+    trace time).
+
+    Raises:
+        ValueError: no explicit split and ``n_layers`` does not divide
+            into the placement's chunk count.
+    """
+    _, virt = parse_schedule(placement.schedule)
+    n_chunks = placement.n_stages * virt
+    if placement.stage_layers is not None:
+        return tuple(int(l) for l in placement.stage_layers)
+    if n_layers % n_chunks != 0:
+        raise ValueError(
+            f"{n_layers} layers do not divide into {n_chunks} chunks "
+            f"({placement.n_stages} stages, {placement.schedule}) and the "
+            f"placement carries no explicit stage_layers")
+    return (n_layers // n_chunks,) * n_chunks
+
+
+def stage_view(stack, stage_layers, n_stages: int,
+               schedule: str = "gpipe") -> Tuple[Any, np.ndarray]:
+    """A layout's padded stage-major view of a canonical layer stack.
+
+    Applies ``core.pipeline.stage_gather_index`` — bit-for-bit the
+    gather ``make_pipeline_loss`` performs at trace time — on host
+    arrays: chunk ``c = k * n_stages + s`` of stage s lands back to
+    back, padded to the longest chunk by repeating its last layer.
+
+    Args:
+        stack: canonical ``[L, ...]`` stacked layer pytree (host or
+            device arrays).
+        stage_layers: per-chunk layer counts (see
+            ``normalized_stage_layers``).
+        n_stages: pipeline stages.
+        schedule: tick-order schedule (fixes the virtual-stage factor).
+
+    Returns:
+        ``(staged, layer_valid)``: the gathered pytree with leading axis
+        ``n_stages * virt * max(stage_layers)`` and the boolean validity
+        mask over that axis (False = padding slot).
+    """
+    _, virt = parse_schedule(schedule)
+    idx, valid = stage_gather_index(stage_layers, n_stages, virt)
+    staged = jax.tree.map(
+        lambda leaf: np.take(np.asarray(jax.device_get(leaf)), idx, axis=0),
+        stack)
+    return staged, valid
+
+
+def unstage_view(staged, stage_layers, n_stages: int,
+                 schedule: str = "gpipe"):
+    """Invert ``stage_view``: drop padding slots and reorder the chunks
+    back into logical layer order, recovering the canonical stack
+    bit-exactly (property-tested round trip, tests/test_reshard.py).
+    """
+    _, virt = parse_schedule(schedule)
+    split = tuple(int(l) for l in stage_layers)
+    if len(split) != n_stages * virt:
+        raise ValueError(f"split {split} has {len(split)} entries for "
+                         f"{n_stages} stages x {virt} virtual")
+    max_l = max(split)
+    # position of chunk c inside the stage-major view
+    chunk_of = [k * n_stages + s
+                for s in range(n_stages) for k in range(virt)]
+    pos = {c: p for p, c in enumerate(chunk_of)}
+    rows = np.concatenate([
+        pos[c] * max_l + np.arange(split[c])
+        for c in range(len(split))]).astype(np.int32)
+
+    def un(leaf):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.shape[0] != n_stages * virt * max_l:
+            raise ValueError(
+                f"staged leaf has leading axis {arr.shape[0]}, expected "
+                f"{n_stages * virt * max_l} for split {split}")
+        return np.take(arr, rows, axis=0)
+
+    return jax.tree.map(un, staged)
+
+
+def restage(staged, src_layers, src_stages: int, dst_layers,
+            dst_stages: int, *, src_schedule: str = "gpipe",
+            dst_schedule: str = "gpipe"):
+    """Map one pipeline layout's staged view directly into another's —
+    the per-stage layer re-slice of a stage-count / split / schedule
+    change, e.g. a 2-stage even view into a 3-stage uneven one after a
+    site joins (or the reverse after one dies).
+
+    Returns:
+        ``(staged_dst, layer_valid_dst)`` as from ``stage_view``.
+    """
+    canon = unstage_view(staged, src_layers, src_stages,
+                         schedule=src_schedule)
+    return stage_view(canon, dst_layers, dst_stages, schedule=dst_schedule)
+
+
+# --------------------------------------------------------------------- #
+# re-placement: host checkpoint -> any plan's device layout
+# --------------------------------------------------------------------- #
+
+def state_templates(model, *, seed: int = 0) -> Tuple[Any, AdamWState]:
+    """Abstract (shape/dtype) templates for a model's params + AdamW
+    state, without allocating either — what ``restore_checkpoint``
+    validates a checkpoint against."""
+    p_like = jax.eval_shape(lambda: model.init(jax.random.key(seed)))
+    o_like = jax.eval_shape(init_adamw, p_like)
+    return p_like, o_like
+
+
+def plan_state_shardings(plan: Plan, params_like, cfg: ModelConfig,
+                         mesh) -> Dict[str, Any]:
+    """The (params, opt) NamedSharding trees a plan trains under on a
+    mesh — the same shardings ``core.steps.build_train_step`` jits with,
+    so a checkpoint restored onto them needs no further movement."""
+    p_specs = plan.param_specs(params_like, cfg, mesh)
+    o_specs = plan.opt_specs(params_like, cfg, mesh)
+    opt_specs = AdamWState(step=P(), m=o_specs, v=o_specs)
+    return {"params": named_shardings(p_specs, mesh),
+            "opt": named_shardings(opt_specs, mesh)}
+
+
+def reshard_state(params_host, opt_host, plan: Plan, cfg: ModelConfig,
+                  mesh) -> Tuple[Any, Optional[AdamWState]]:
+    """Place host-canonical (params, opt) pytrees onto a plan's layout.
+
+    The host-side reference re-placement: pure ``device_put`` onto
+    ``plan_state_shardings`` — no values change, AdamW moments map
+    leaf-for-leaf.  ``reshard_checkpoint`` is this plus the restore.
+    """
+    sh = plan_state_shardings(plan, params_host, cfg, mesh)
+    params = jax.device_put(params_host, sh["params"])
+    opt = None if opt_host is None else jax.device_put(opt_host, sh["opt"])
+    return params, opt
+
+
+def reshard_checkpoint(path: str, model, plan: Plan, mesh, *,
+                       placement: Optional[Placement] = None,
+                       allow_cast: bool = False,
+                       verify: bool = True) -> Tuple[Any, Any, int]:
+    """Restore a checkpoint onto a (possibly different) plan's layout.
+
+    The full cross-plan map: integrity-verified restore of the canonical
+    host pytrees, templates from the model, destination shardings from
+    ``(plan, mesh)``, every leaf — params and AdamW moments alike —
+    placed onto them.  For a pipeline destination, ``placement`` is
+    validated up front: its ``stage_layers`` (or the even split) must
+    partition the model's stack, so an impossible re-stage fails here
+    rather than steps later at trace time.
+
+    Args:
+        path: checkpoint directory.
+        model: the ``repro.models.Model`` being restored (shapes,
+            dtypes, and the config the plan's sharding rules read).
+        plan: destination execution plan (``core.plans.PLANS``).
+        mesh: destination mesh (from ``launch.mesh.placement_mesh`` for
+            a searched placement).
+        placement: the destination ``core.plans.Placement``; required
+            checks apply only to pipeline plans.
+        allow_cast: forwarded to ``restore_checkpoint`` (dtype-changing
+            restores are refused by default).
+        verify: forwarded to ``restore_checkpoint`` (sha256 shard
+            verification).
+
+    Returns:
+        ``(params, opt_state, step)`` on the destination layout;
+        ``opt_state`` is None when the checkpoint carries none.
+    """
+    cfg = model.cfg
+    if plan.pipeline:
+        if placement is None:
+            raise ValueError("pipeline destination needs the Placement "
+                             "(stage count + stage_layers)")
+        normalized_stage_layers(cfg.n_layers, placement)  # raises if bad
+    p_like, o_like = state_templates(model)
+    shardings = plan_state_shardings(plan, p_like, cfg, mesh)
+    return restore_checkpoint(path, p_like, o_like, shardings,
+                              allow_cast=allow_cast, verify=verify)

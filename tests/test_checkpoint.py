@@ -1,13 +1,22 @@
-"""Checkpoint roundtrip tests."""
+"""Checkpoint roundtrip + durability tests: atomic saves, sha256 shard
+integrity, and the no-silent-dtype-cast restore contract
+(docs/elasticity.md — the chaos-recovery path leans on all three)."""
+import json
+import os
+import shutil
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from prophelpers import given, settings, st
 from repro.configs import get_config
 from repro.models import Model
 from repro.optim import init_adamw
 from repro.train import (latest_checkpoint, restore_checkpoint,
-                         save_checkpoint)
+                         save_checkpoint, verify_checkpoint)
 
 
 def test_roundtrip_params_and_opt(tmp_path):
@@ -46,3 +55,154 @@ def test_restore_rejects_shape_mismatch(tmp_path):
         raise AssertionError("expected shape mismatch")
     except ValueError:
         pass
+
+
+# ------------------------------------------------------------------ #
+# no silent dtype casts
+# ------------------------------------------------------------------ #
+
+def test_restore_rejects_dtype_mismatch_unless_allow_cast(tmp_path):
+    """Regression: a saved fp32 master leaf restored onto a bf16
+    template used to downcast silently, destroying master-weight
+    precision."""
+    params = {"w": jnp.ones((4, 4), jnp.float32) * (1 + 2 ** -20)}
+    path = save_checkpoint(str(tmp_path), 1, params)
+    bf16_like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+    with pytest.raises(ValueError, match="allow_cast"):
+        restore_checkpoint(path, bf16_like)
+    p2, _, _ = restore_checkpoint(path, bf16_like, allow_cast=True)
+    assert p2["w"].dtype == jnp.bfloat16         # deliberate cast works
+    p3, _, _ = restore_checkpoint(path, params)  # matching dtype is exact
+    np.testing.assert_array_equal(np.asarray(p3["w"]),
+                                  np.asarray(params["w"]))
+
+
+# ------------------------------------------------------------------ #
+# atomic saves + integrity
+# ------------------------------------------------------------------ #
+
+def test_partial_save_is_invisible_and_fails_loudly(tmp_path):
+    """A crash mid-save (a step_* dir without a fsynced manifest, or a
+    .tmp staging dir) must be skipped by latest_checkpoint and refuse
+    to restore."""
+    params = {"w": jnp.ones((2, 2))}
+    good = save_checkpoint(str(tmp_path), 3, params)
+    # simulate a crash: a staging dir and a manifest-less partial
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    partial = tmp_path / "step_00000007"
+    os.makedirs(partial)
+    np.savez(partial / "params_00.npz", w=np.ones((2, 2)))
+    assert latest_checkpoint(str(tmp_path)) == good
+    with pytest.raises(ValueError, match="manifest"):
+        restore_checkpoint(str(partial), params)
+    with pytest.raises(ValueError, match="manifest"):
+        verify_checkpoint(str(partial))
+
+
+def test_save_leaves_no_staging_dir_and_resaves_steps(tmp_path):
+    params = {"w": jnp.ones((2, 2))}
+    save_checkpoint(str(tmp_path), 4, params)
+    path = save_checkpoint(str(tmp_path), 4, params)   # re-save same step
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert verify_checkpoint(path)["step"] == 4
+
+
+def test_truncated_shard_fails_checksum(tmp_path):
+    params = {"w": jnp.arange(64, dtype=jnp.float32)}
+    opt = init_adamw(params)
+    path = save_checkpoint(str(tmp_path), 2, params, opt, n_files=2)
+    shard = next(f for f in os.listdir(path) if f.endswith(".npz"))
+    with open(os.path.join(path, shard), "r+b") as f:
+        f.truncate(os.path.getsize(os.path.join(path, shard)) - 7)
+    with pytest.raises(ValueError, match="sha256"):
+        verify_checkpoint(path)
+    with pytest.raises(ValueError, match="sha256"):
+        restore_checkpoint(path, params, opt)
+
+
+def test_missing_shard_fails_verification(tmp_path):
+    params = {"a": jnp.ones(3), "b": jnp.zeros(5)}
+    path = save_checkpoint(str(tmp_path), 2, params, n_files=2)
+    shards = [f for f in os.listdir(path) if f.endswith(".npz")]
+    assert len(shards) == 2
+    os.remove(os.path.join(path, shards[0]))
+    with pytest.raises(ValueError, match="missing"):
+        verify_checkpoint(path)
+
+
+def test_corrupt_shard_fails_checksum_but_skippable(tmp_path):
+    """Flipping bytes past the npz header trips sha256; verify=False is
+    the explicit escape hatch (np.load may still read stale values)."""
+    params = {"w": jnp.arange(1024, dtype=jnp.float32)}
+    path = save_checkpoint(str(tmp_path), 1, params, n_files=1)
+    shard = next(f for f in os.listdir(path) if f.endswith(".npz"))
+    with open(os.path.join(path, shard), "ab") as f:
+        f.write(b"garbage")
+    with pytest.raises(ValueError, match="sha256"):
+        restore_checkpoint(path, params)
+    p2, _, _ = restore_checkpoint(path, params, verify=False)
+    assert p2["w"].shape == (1024,)
+
+
+def test_legacy_manifest_without_checksums_still_verifies_existence(
+        tmp_path):
+    params = {"w": jnp.ones(4)}
+    path = save_checkpoint(str(tmp_path), 1, params)
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["checksums"]                    # pre-integrity manifest
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    verify_checkpoint(path)                      # existence-only: passes
+    shard = manifest["files"]["params"][0]
+    os.remove(os.path.join(path, shard))
+    with pytest.raises(ValueError, match="missing"):
+        verify_checkpoint(path)
+
+
+# ------------------------------------------------------------------ #
+# property: any pytree x any shard count round-trips
+# ------------------------------------------------------------------ #
+
+_KEY = st.text(alphabet="abcdefghij_0123456789", min_size=1, max_size=8)
+_LEAF = st.tuples(
+    st.sampled_from([np.float32, np.int32, np.float16]),
+    st.lists(st.integers(1, 4), min_size=0, max_size=3))
+
+
+def _tree_strategy():
+    return st.recursive(
+        st.dictionaries(_KEY, _LEAF, min_size=1, max_size=3),
+        lambda children: st.dictionaries(_KEY, children, min_size=1,
+                                         max_size=2),
+        max_leaves=6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(tree=_tree_strategy(), n_files=st.sampled_from([1, 2, 4, 7]),
+       seed=st.integers(0, 99))
+def test_checkpoint_roundtrip_property(tree, n_files, seed):
+    """Random nested pytrees round-trip bit-exactly through save/restore
+    for any shard count — including n_files larger than the leaf count
+    (empty shards are simply not written)."""
+    rng = np.random.default_rng(seed)
+
+    def materialize(node):
+        if isinstance(node, dict):
+            return {k: materialize(v) for k, v in node.items()}
+        dtype, shape = node
+        arr = rng.standard_normal(tuple(shape)) * 10
+        return arr.astype(dtype)
+
+    params = materialize(tree)
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 11, params, n_files=n_files)
+        manifest = verify_checkpoint(path)
+        assert set(manifest["checksums"]) == {
+            f for fs in manifest["files"].values() for f in fs}
+        p2, _, step = restore_checkpoint(path, params)
+        assert step == 11
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)), params, p2)

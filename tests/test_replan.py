@@ -1,0 +1,164 @@
+"""Elastic re-planning (ROADMAP "Elastic re-planning"): the survivor
+search must respect connectivity (components), compose its index maps
+back to the original topology, and the launcher must drive the full
+kill → replan → reshard → resume path.
+
+Analytic tests run the search layer only (no devices); the slow test
+drives ``repro.launch.replan`` as a subprocess in both modes (chaos
+demo, then checkpoint recovery on the degraded topology)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import paper_workload
+from repro.core.topology import Link, Site, fully_connected, line, ring
+from repro.launch.replan import build_cli_topology, parse_gpus
+from repro.train.replan import (SiteFailure, kill_site_at,
+                                placement_devices, replan,
+                                site_device_blocks)
+
+WL = paper_workload(get_config("gpt2m"))
+
+
+def _sites(n, gpu="A30"):
+    return [Site((gpu, gpu), name=f"S{i}") for i in range(n)]
+
+
+# ------------------------------------------------------------------ #
+# fault injection
+# ------------------------------------------------------------------ #
+
+def test_kill_site_at_fires_only_at_its_step():
+    hook = kill_site_at(3, (1,))
+    for i in (0, 1, 2, 4):
+        hook(i)                                  # no-op off the step
+    with pytest.raises(SiteFailure) as e:
+        hook(3)
+    assert e.value.step == 3
+    assert e.value.dead_sites == (1,)
+    assert "V2" in str(e.value)
+
+
+# ------------------------------------------------------------------ #
+# the survivor search
+# ------------------------------------------------------------------ #
+
+def test_replan_ring_survivors_stay_connected():
+    topo = ring("r3", _sites(3), [Link(20e-3, 3.0)] * 3)
+    rp = replan(topo, (1,), WL)
+    assert rp.dead_sites == (1,)
+    # the winner's sites map back to surviving original indices
+    assert set(rp.sites_old) <= {0, 2}
+    assert rp.tflops > 0
+    assert rp.search_s >= 0
+    # placement indexes the searched sub-topology, not the original
+    assert all(s < rp.topology.n_sites for s in rp.placement.sites)
+
+
+def test_replan_line_kill_middle_splits_components():
+    """Killing the middle site of a line disconnects the ends; the
+    replan must place within one component — never span the partition."""
+    topo = line("l3", _sites(3), [Link(20e-3, 3.0)] * 2)
+    survivor, kept = topo.without_sites((1,))
+    assert kept == (0, 2)
+    assert survivor.components() == [(0,), (1,)]
+    rp = replan(topo, (1,), WL)
+    assert len(rp.placement.sites) == 1          # single-site winner only
+    assert rp.sites_old in ((0,), (2,))
+    assert rp.technique != "pipeshard"           # 1 site can't pipeline
+
+
+def test_replan_heterogeneous_prefers_faster_survivor():
+    """A30 vs T4 ends of a severed line: the search should land on the
+    strictly faster component."""
+    topo = line("het", [Site(("A30", "A30")), Site(("A30", "A30")),
+                        Site(("T4", "T4"))], [Link(20e-3, 3.0)] * 2)
+    rp = replan(topo, (1,), WL)
+    assert rp.sites_old == (0,)                  # the A30 site wins
+
+
+def test_replan_validates_and_raises_when_nothing_fits():
+    topo = ring("r3", _sites(3), [Link(20e-3, 3.0)] * 3)
+    with pytest.raises(ValueError, match="nothing to do"):
+        replan(topo, (), WL)
+    with pytest.raises(ValueError, match="died"):
+        replan(topo, (0, 1, 2), WL)
+    # a 405B model fits nowhere on two-GPU sites: every candidate OOMs
+    big = paper_workload(get_config("llama3-405b"))
+    with pytest.raises(RuntimeError, match="memory"):
+        replan(topo, (1,), big)
+
+
+# ------------------------------------------------------------------ #
+# device-block bookkeeping
+# ------------------------------------------------------------------ #
+
+def test_site_device_blocks_follow_site_order():
+    topo = fully_connected("f", _sites(3), Link(20e-3, 3.0))
+    devs = list(range(6))                        # any objects work
+    blocks = site_device_blocks(topo, devs)
+    assert blocks == [(0, 1), (2, 3), (4, 5)]
+    # a replanned placement re-uses its original sites' devices
+    assert placement_devices(blocks, (2, 0)) == [4, 5, 0, 1]
+    with pytest.raises(ValueError, match="devices"):
+        site_device_blocks(topo, devs[:5])
+
+
+# ------------------------------------------------------------------ #
+# launcher plumbing
+# ------------------------------------------------------------------ #
+
+def test_cli_gpu_spec_parsing():
+    assert parse_gpus("A30,A30;T4") == [("A30", "A30"), ("T4",)]
+    with pytest.raises(ValueError, match="empty"):
+        parse_gpus(" ; ")
+
+
+def test_cli_topology_kinds():
+    t = build_cli_topology("line", "A30;A30;T4", 20.0, 3.0)
+    assert t.n_sites == 3 and (0, 2) not in t.links
+    t = build_cli_topology("full", "A30;T4", 20.0, 3.0)
+    assert t.n_sites == 2 and t.link(0, 1).latency_s == pytest.approx(
+        20e-3)
+    with pytest.raises(ValueError, match="unknown"):
+        build_cli_topology("mesh", "A30;A30", 20.0, 3.0)
+
+
+@pytest.mark.slow
+def test_replan_launcher_chaos_then_recovery(subproc_env, tmp_path):
+    """End-to-end through the CLI: (1) chaos-demo mode kills site V2 of
+    a two-site pipeshard run and recovers; (2) recovery mode picks up
+    the checkpoints the first run left and resumes further on the
+    degraded topology."""
+    common = ["--ckpt-dir", str(tmp_path), "--gpus", "A30;A30",
+              "--kind", "full", "--dead", "1", "--devices", "2",
+              "--arch", "gpt2m", "--reduced", "--seq", "16",
+              "--batch", "4", "--docs", "60", "--vocab", "256",
+              "--ckpt-every", "2"]
+
+    def run(extra):
+        cmd = [sys.executable, "-m", "repro.launch.replan",
+               *common, *extra]
+        out = subprocess.run(cmd, capture_output=True, text=True,
+                             timeout=560, env=subproc_env)
+        assert out.returncode == 0, out.stderr[-2000:]
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("{")][-1]
+        return json.loads(line)
+
+    chaos = run(["--steps", "5", "--kill-step", "3",
+                 "--plan", "pipeshard"])
+    assert chaos["mode"] == "chaos" and chaos["failed"]
+    assert chaos["sites_old"] == [0]
+    assert chaos["resumed_from"] == 2            # ckpt_every=2, killed at 3
+    assert chaos["steps_lost"] == 1
+    assert chaos["final_loss"] is not None
+
+    rec = run(["--steps", "8"])                  # no --kill-step: recovery
+    assert rec["mode"] == "recovery"
+    assert rec["sites_old"] == [0]
+    assert rec["resumed_from"] == 5              # the chaos run's final save
+    assert rec["final_loss"] is not None

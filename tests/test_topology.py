@@ -96,6 +96,46 @@ def test_conflicting_duplicate_links_rejected():
 
 
 # ------------------------------------------------------------------ #
+# degradation helpers (elastic re-planning, docs/elasticity.md)
+# ------------------------------------------------------------------ #
+
+def test_without_sites_reindexes_and_maps_back():
+    t = ring("r4", _sites(4), [Link(1e-3, 3.0)] * 4)
+    survivor, kept = t.without_sites((1,))
+    assert survivor.n_sites == 3
+    assert kept == (0, 2, 3)                     # new index -> old index
+    assert "S1" in survivor.name                 # provenance in the name
+    # surviving links follow the reindexing: old (2,3) -> new (1,2)
+    assert (1, 2) in survivor.links
+    # old edges through the dead site are gone: new 0 (old 0) and new 1
+    # (old 2) had no direct edge on the ring
+    assert (0, 1) not in survivor.links
+    with pytest.raises(ValueError, match="died"):
+        t.without_sites((0, 1, 2, 3))
+    with pytest.raises(IndexError):
+        t.without_sites((9,))
+
+
+def test_without_link_removes_edge_and_routes_around():
+    t = ring("r3", _sites(3), [Link(1e-3, 3.0)] * 3)
+    cut = t.without_link(0, 1)
+    assert t.link(0, 1).latency_s == pytest.approx(1e-3)
+    # the pair now routes the long way around the ring
+    assert cut.link(0, 1).latency_s == pytest.approx(2e-3)
+    with pytest.raises(ValueError, match="no direct link"):
+        cut.without_link(0, 1)
+
+
+def test_components_split_and_ordering():
+    t = line("l5", _sites(5), [Link(1e-3, 3.0)] * 4)
+    assert t.components() == [(0, 1, 2, 3, 4)]
+    survivor, _ = t.without_sites((2,))          # sever the middle
+    assert survivor.components() == [(0, 1), (2, 3)]
+    lone = make_topology("iso", _sites(3), {(0, 1): Link(1e-3, 3.0)})
+    assert lone.components() == [(0, 1), (2,)]   # largest first
+
+
+# ------------------------------------------------------------------ #
 # the N=2 special case is the legacy Cluster, bit for bit
 # ------------------------------------------------------------------ #
 
