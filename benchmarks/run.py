@@ -6,9 +6,10 @@ dry-run roofline and kernel micro-bench.
 
 Aggregates the kernel micro-bench artifact and the wire-dtype winner map
 into the repo-root ``BENCH_6.json`` perf-trajectory file (the ROADMAP's
-measured-trajectory item), and runs the chaos recovery bench
-(``benchmarks/chaos_bench.py``), which writes ``BENCH_7.json``.  Exit
-code = number of failed paper-claim checks.
+measured-trajectory item), runs the chaos recovery bench
+(``benchmarks/chaos_bench.py``), which writes ``BENCH_7.json``, and
+summarizes the static-analysis run (``repro.analysis``) into
+``BENCH_8.json``.  Exit code = number of failed paper-claim checks.
 """
 from __future__ import annotations
 
@@ -66,6 +67,45 @@ def write_bench_trajectory(out_dir: str, print_fn=print) -> int:
     return 0
 
 
+def write_analysis_trajectory(report_path: str = None,
+                              print_fn=print) -> int:
+    """Compose ``BENCH_8.json`` at the repo root from the static-analysis
+    JSON report (the CI ``static-analysis`` job writes one); runs the
+    analyzer in-process when no report file exists yet.  Returns the
+    analyzer's exit code: 1 when any finding is not baselined."""
+    report = None
+    if report_path and os.path.exists(report_path):
+        with open(report_path) as f:
+            report = json.load(f)
+    if report is None:
+        import contextlib
+        import io
+        from repro.analysis.__main__ import main as analysis_main
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            analysis_main(["--format", "json"])
+        report = json.loads(buf.getvalue())
+    bench = {
+        "pr": 8,
+        "source": "benchmarks/run.py",
+        "passes": report["passes"],
+        "summary": report["summary"],
+        "exit_code": report["exit_code"],
+    }
+    path = os.path.join(_ROOT, "BENCH_8.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+        f.write("\n")
+    s = report["summary"]
+    if report["exit_code"]:
+        print_fn(f"CLAIM-FAIL: static analysis has {s['new']} "
+                 f"non-baselined finding(s)")
+    print_fn(f"wrote {path} ({s['total']} finding(s), "
+             f"{s['baselined']} baselined, over "
+             f"{len(report['passes'])} passes)")
+    return report["exit_code"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", action="store_true",
@@ -101,6 +141,9 @@ def main() -> None:
     print("\n===== BENCH_6.json (perf trajectory) =====")
     n_fail += write_bench_trajectory(
         os.path.join(_ROOT, "benchmarks", "out"))
+
+    print("\n===== BENCH_8.json (static-analysis trajectory) =====")
+    n_fail += write_analysis_trajectory()
 
     print("\n===== chaos_bench (elastic recovery, smoke) =====")
     import benchmarks.chaos_bench as chaos_bench

@@ -1,0 +1,586 @@
+"""Donation-aliasing checker: flags reads of a buffer after it was
+passed to a ``jax.jit(..., donate_argnums=...)`` callable — the PR-7
+``reshard_check`` bug class, where ``device_put`` aliased a restored
+checkpoint into a donating ``train()`` call and the "control" run then
+read deleted arrays.
+
+An AST pass over ``src/`` (no imports, no execution) with three layers:
+
+  1. **Donating callables** — ``jax.jit(..., donate_argnums=(i, ...))``
+     bindings, and *donating factories*: functions that return such a
+     callable (possibly inside a tuple), e.g. ``core.steps
+     .build_train_step`` → element 0 donates args (0, 1).  Callers that
+     unpack the factory result inherit the donation signature.
+  2. **Donating wrappers** — a function that passes one of its own
+     formal parameters (or an alias of it — ``y = x`` and
+     ``y = jax.device_put(x, ...)`` both alias: ``device_put`` may
+     return the input buffer when shardings coincide) into a donated
+     position donates that parameter itself.  ``train(... params=...)``
+     is the canonical wrapper; its call sites are checked like any
+     jitted call.  Promotion iterates to a fixpoint across modules.
+  3. **Read-after-donation** — at every donating call, each donated
+     argument is resolved to its root bindings; a later load of a root
+     that the call's own assignment did not rebind is DON001.  A
+     donating call inside a loop whose donated root is never re-stored
+     in that loop donates a dead buffer on the second iteration — also
+     DON001.  Sanctioned fresh-copy idioms (``np.array`` /
+     ``np.asarray`` / ``jnp.copy`` / a ``host_copy`` helper /
+     ``copy.deepcopy``) break the alias chain.
+
+Rules: DON001 read-after-donation, DON002 one buffer in both a donated
+and a non-donated slot of the same call, DON003 non-literal
+``donate_argnums`` (unverifiable — warning).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import Finding, PassResult
+
+#: calls that provably return fresh buffers (alias chain breakers)
+FRESH_CALLS = {"array", "asarray", "copy", "deepcopy", "host_copy",
+               "zeros_like", "ones_like"}
+#: calls that may alias their first argument (the PR-7 lesson)
+ALIAS_CALLS = {"device_put"}
+
+
+@dataclass(frozen=True)
+class DonSig:
+    """Donation signature of a callable: positional indices and (for
+    wrappers, whose signatures we know) parameter names donated."""
+    argnums: Tuple[int, ...] = ()
+    argnames: Tuple[str, ...] = ()
+    params: Tuple[str, ...] = ()    # wrapper formals, for kwarg mapping
+
+
+@dataclass
+class Registry:
+    """Cross-module fixpoint state, keyed by qualified function name."""
+    #: factory qname -> {return position (None = bare) -> DonSig}
+    factories: Dict[str, Dict[Optional[int], DonSig]] = \
+        field(default_factory=dict)
+    #: wrapper qname -> DonSig (argnames filled, params known)
+    wrappers: Dict[str, DonSig] = field(default_factory=dict)
+    #: module qual -> _Module, for resolving package re-exports
+    modules: Dict[str, "_Module"] = field(default_factory=dict)
+
+    def canon(self, qname: Optional[str]) -> Optional[str]:
+        """Follow re-export chains (``repro.train.train`` ->
+        ``repro.train.loop.train``) to the defining module."""
+        for _ in range(8):
+            if qname is None:
+                return None
+            head, _, tail = qname.rpartition(".")
+            mod = self.modules.get(head)
+            if mod is None or tail not in mod.import_map \
+                    or mod.import_map[tail] == qname:
+                return qname
+            qname = mod.import_map[tail]
+        return qname
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain, e.g. ``self._cache0``."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    """Trailing name of the called expression (``jax.jit`` -> ``jit``)."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _literal_argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in v.elts):
+            return tuple(e.value for e in v.elts)
+        return None                      # present but not a literal
+    return ()                            # no donation at all
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    return _call_name(call) == "jit"
+
+
+@dataclass
+class _Event:
+    """One donating call inside a function body."""
+    lineno: int
+    stmt_idx: int
+    callee: str
+    roots: Set[str]                      # donated arg roots
+    other_roots: Set[str]                # non-donated arg roots
+    rebound: Set[str]                    # names the same stmt assigns
+    loops: Tuple[int, ...]               # enclosing loop ids
+
+
+@dataclass
+class _Access:
+    stmt_idx: int
+    lineno: int
+    name: str
+    kind: str                            # "load" | "store"
+    loops: Tuple[int, ...]
+
+
+class _FuncWalker:
+    """Linearizes one function body: alias map, donating-callable
+    bindings, donation events, and name accesses in source order."""
+
+    def __init__(self, module: "_Module", reg: Registry,
+                 func: ast.FunctionDef):
+        self.module, self.reg, self.func = module, reg, func
+        self.aliases: Dict[str, str] = {}
+        self.donating_vars: Dict[str, DonSig] = {}
+        self.events: List[_Event] = []
+        self.accesses: List[_Access] = []
+        self.non_literal: List[int] = []
+        self.idx = 0
+
+    # -- roots ------------------------------------------------------- #
+    def _root(self, name: str) -> str:
+        seen = set()
+        while name in self.aliases and name not in seen:
+            seen.add(name)
+            name = self.aliases[name]
+        return name
+
+    def _expr_roots(self, node: ast.AST) -> Set[str]:
+        """Root bindings an argument expression may alias."""
+        if isinstance(node, ast.Name):
+            return {self._root(node.id)}
+        if isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            return {self._root(chain)} if chain else set()
+        if isinstance(node, (ast.Tuple, ast.List)):
+            out: Set[str] = set()
+            for e in node.elts:
+                out |= self._expr_roots(e)
+            return out
+        if isinstance(node, ast.Call):
+            cname = _call_name(node)
+            if cname in ALIAS_CALLS and node.args:
+                return self._expr_roots(node.args[0])
+            return set()                 # fresh (or unknown) result
+        return set()
+
+    # -- statement walk ---------------------------------------------- #
+    def walk(self) -> None:
+        self._walk_body(self.func.body, ())
+
+    def _walk_body(self, body: Sequence[ast.stmt],
+                   loops: Tuple[int, ...]) -> None:
+        for stmt in body:
+            self.idx += 1
+            self._statement(stmt, loops)
+            for child_body, child_loops in _sub_bodies(stmt, loops):
+                self._walk_body(child_body, child_loops)
+
+    def _statement(self, stmt: ast.stmt, loops: Tuple[int, ...]) -> None:
+        idx = self.idx
+        targets = _target_names(stmt)
+        # only the statement's own expressions: bodies of compound
+        # statements are walked (and indexed) by _walk_body, so a
+        # try/for header must not pre-record its children's loads
+        exprs = _own_exprs(stmt)
+        # donation events before bindings: the call reads old state
+        for e in exprs:
+            for call in _calls_in(e):
+                self._maybe_event(call, idx, targets, loops)
+        self._bindings(stmt, targets)
+        self._record_accesses(exprs, stmt, idx, targets, loops)
+
+    def _record_accesses(self, exprs, stmt: ast.stmt, idx: int,
+                         targets: Set[str],
+                         loops: Tuple[int, ...]) -> None:
+        own = set()
+        for e in exprs:
+            for node in ast.walk(e):
+                if isinstance(node, ast.Lambda):
+                    continue
+                name = None
+                if isinstance(node, ast.Attribute):
+                    name = _attr_chain(node)
+                elif isinstance(node, ast.Name):
+                    name = node.id
+                if name is None or name in own:
+                    continue
+                own.add(name)
+                kind = "store" if name in targets else "load"
+                self.accesses.append(_Access(
+                    idx, getattr(node, "lineno", stmt.lineno),
+                    self._root(name), kind, loops))
+        for t in targets:
+            if t not in own:
+                self.accesses.append(_Access(
+                    idx, stmt.lineno, t, "store", loops))
+
+    def _bindings(self, stmt: ast.stmt, targets: Set[str]) -> None:
+        if not isinstance(stmt, ast.Assign) or not targets:
+            return
+        value = stmt.value
+        tnodes = stmt.targets[0]
+        # step = jax.jit(..., donate_argnums=...)
+        if isinstance(value, ast.Call) and _is_jit_call(value):
+            nums = _literal_argnums(value)
+            if nums is None:
+                self.non_literal.append(value.lineno)
+            elif nums and isinstance(tnodes, ast.Name):
+                self.donating_vars[tnodes.id] = DonSig(argnums=nums)
+            return
+        # step_fn, sh = build_train_step(...)
+        if isinstance(value, ast.Call):
+            qname = self.reg.canon(self.module.resolve_call(value))
+            rets = self.reg.factories.get(qname or "")
+            if rets:
+                if isinstance(tnodes, ast.Name) and None in rets:
+                    self.donating_vars[tnodes.id] = rets[None]
+                elif isinstance(tnodes, (ast.Tuple, ast.List)):
+                    for pos, el in enumerate(tnodes.elts):
+                        if isinstance(el, ast.Name) and pos in rets:
+                            self.donating_vars[el.id] = rets[pos]
+                return
+        # aliases: y = x / y = jax.device_put(x, ...)
+        src: Optional[str] = None
+        if isinstance(value, ast.Name):
+            src = value.id
+        elif isinstance(value, ast.Attribute):
+            src = _attr_chain(value)
+        elif isinstance(value, ast.Call) \
+                and _call_name(value) in ALIAS_CALLS and value.args:
+            a0 = value.args[0]
+            src = a0.id if isinstance(a0, ast.Name) else \
+                _attr_chain(a0) if isinstance(a0, ast.Attribute) else None
+        if src is not None and isinstance(tnodes, ast.Name):
+            if self._root(src) != tnodes.id:
+                self.aliases[tnodes.id] = self._root(src)
+            return
+        # fresh (unconditional) binding severs an earlier alias
+        if isinstance(tnodes, ast.Name):
+            self.aliases.pop(tnodes.id, None)
+
+    def _maybe_event(self, call: ast.Call, idx: int, targets: Set[str],
+                     loops: Tuple[int, ...]) -> None:
+        sig: Optional[DonSig] = None
+        callee = ""
+        if isinstance(call.func, ast.Name) \
+                and call.func.id in self.donating_vars:
+            sig, callee = self.donating_vars[call.func.id], call.func.id
+        else:
+            qname = self.reg.canon(self.module.resolve_call(call))
+            if qname and qname in self.reg.wrappers:
+                sig, callee = self.reg.wrappers[qname], qname
+        if sig is None:
+            if isinstance(call.func, ast.Name) or \
+                    isinstance(call.func, ast.Attribute):
+                pass
+            return
+        donated: Set[str] = set()
+        other: Set[str] = set()
+        pos_names = sig.params
+        for i, arg in enumerate(call.args):
+            roots = self._expr_roots(arg)
+            is_donated = i in sig.argnums or (
+                i < len(pos_names) and pos_names[i] in sig.argnames)
+            (donated if is_donated else other).update(roots)
+        for kw in call.keywords:
+            if kw.arg is None:
+                continue
+            roots = self._expr_roots(kw.value)
+            (donated if kw.arg in sig.argnames else other).update(roots)
+        if donated:
+            self.events.append(_Event(call.lineno, idx, callee, donated,
+                                      other, set(targets), loops))
+
+
+def _own_exprs(stmt: ast.stmt) -> List[ast.AST]:
+    """The expression nodes a statement itself evaluates — compound
+    statements contribute only their headers (bodies are separate
+    statements); nested function/class defs are opaque (their bodies
+    are analyzed as functions in their own right)."""
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.target, stmt.iter]
+    if isinstance(stmt, (ast.While, ast.If)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        out: List[ast.AST] = []
+        for item in stmt.items:
+            out.append(item.context_expr)
+            if item.optional_vars is not None:
+                out.append(item.optional_vars)
+        return out
+    if isinstance(stmt, (ast.Try, ast.FunctionDef,
+                         ast.AsyncFunctionDef, ast.ClassDef)):
+        return []
+    return [stmt]
+
+
+def _sub_bodies(stmt: ast.stmt, loops: Tuple[int, ...]):
+    """(body, loop-stack) pairs for a compound statement's children."""
+    if isinstance(stmt, (ast.For, ast.While, ast.AsyncFor)):
+        inner = loops + (id(stmt),)
+        yield stmt.body, inner
+        yield stmt.orelse, loops
+    elif isinstance(stmt, ast.If):
+        yield stmt.body, loops
+        yield stmt.orelse, loops
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        yield stmt.body, loops
+    elif isinstance(stmt, ast.Try):
+        yield stmt.body, loops
+        for h in stmt.handlers:
+            yield h.body, loops
+        yield stmt.orelse, loops
+        yield stmt.finalbody, loops
+
+
+def _target_names(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+    tnodes: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        tnodes = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)) \
+            and stmt.target is not None:
+        tnodes = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        tnodes = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        tnodes = [i.optional_vars for i in stmt.items
+                  if i.optional_vars is not None]
+    for t in tnodes:
+        if isinstance(t, ast.Name):
+            out.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            out |= {e.id for e in t.elts if isinstance(e, ast.Name)}
+        elif isinstance(t, ast.Attribute):
+            chain = _attr_chain(t)
+            if chain:
+                out.add(chain)
+    return out
+
+
+def _calls_in(stmt: ast.stmt):
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+class _Module:
+    """One parsed file: import map + function defs."""
+
+    def __init__(self, path: str, rel: str, qual: str, tree: ast.Module):
+        self.path, self.rel, self.qual, self.tree = path, rel, qual, tree
+        self.import_map: Dict[str, str] = {}
+        self.local_funcs: Dict[str, str] = {}
+        for node in tree.body:
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.import_map[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    self.import_map[a.asname or a.name] = a.name
+        for func in self.functions():
+            self.local_funcs[func.name] = f"{qual}.{func.name}"
+        # function-local imports (the launch CLIs import inside main)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.import_map.setdefault(
+                        a.asname or a.name, f"{node.module}.{a.name}")
+
+    def functions(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.FunctionDef):
+                yield node
+
+    def resolve_call(self, call: ast.Call) -> Optional[str]:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return self.local_funcs.get(f.id) or \
+                self.import_map.get(f.id)
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+            mod = self.import_map.get(f.value.id)
+            if mod:
+                return f"{mod}.{f.attr}"
+        return None
+
+
+def _load_modules(root: str,
+                  rel_dirs: Sequence[str]) -> List[_Module]:
+    mods = []
+    for rel_dir in rel_dirs:
+        base = os.path.join(root, rel_dir)
+        for dirpath, _, files in os.walk(base):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root).replace(os.sep, "/")
+                mod_rel = os.path.relpath(path, base)
+                qual = mod_rel[:-3].replace(os.sep, ".")
+                if qual.endswith(".__init__"):
+                    qual = qual[: -len(".__init__")]
+                with open(path) as f:
+                    try:
+                        tree = ast.parse(f.read(), filename=path)
+                    except SyntaxError:
+                        continue
+                mods.append(_Module(path, rel, qual, tree))
+    return mods
+
+
+def _scan_function(module: _Module, reg: Registry,
+                   func: ast.FunctionDef) -> _FuncWalker:
+    w = _FuncWalker(module, reg, func)
+    w.walk()
+    return w
+
+
+def _promote(module: _Module, reg: Registry, func: ast.FunctionDef,
+             w: _FuncWalker) -> bool:
+    """Factory + wrapper promotion; returns True when the registry grew."""
+    changed = False
+    qname = module.local_funcs.get(func.name,
+                                   f"{module.qual}.{func.name}")
+    # factory: returns a donating callable (possibly inside a tuple)
+    rets: Dict[Optional[int], DonSig] = {}
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Return) or node.value is None:
+            continue
+        v = node.value
+        def _sig_of(e):
+            if isinstance(e, ast.Name):
+                return w.donating_vars.get(e.id)
+            if isinstance(e, ast.Call) and _is_jit_call(e):
+                nums = _literal_argnums(e)
+                return DonSig(argnums=nums) if nums else None
+            return None
+        if isinstance(v, ast.Tuple):
+            for pos, e in enumerate(v.elts):
+                sig = _sig_of(e)
+                if sig:
+                    rets[pos] = sig
+        else:
+            sig = _sig_of(v)
+            if sig:
+                rets[None] = sig
+    if rets and reg.factories.get(qname) != rets:
+        reg.factories[qname] = rets
+        changed = True
+    # wrapper: a formal parameter reaches a donated position
+    formals = [a.arg for a in (func.args.posonlyargs + func.args.args
+                               + func.args.kwonlyargs)]
+    donated_formals = [p for p in formals
+                       if any(p in ev.roots for ev in w.events)]
+    if donated_formals:
+        sig = DonSig(argnums=tuple(
+            i for i, p in enumerate(formals) if p in donated_formals),
+            argnames=tuple(donated_formals), params=tuple(formals))
+        if reg.wrappers.get(qname) != sig:
+            reg.wrappers[qname] = sig
+            changed = True
+    return changed
+
+
+def check_function(module: _Module, reg: Registry,
+                   func: ast.FunctionDef) -> List[Finding]:
+    """Emit DON001/DON002 findings for one function body."""
+    w = _scan_function(module, reg, func)
+    findings: List[Finding] = []
+    for ev in w.events:
+        live = {r for r in ev.roots if r not in ev.rebound}
+        for root in sorted(live & ev.other_roots):
+            findings.append(Finding(
+                "DON002", "error", module.rel, ev.lineno,
+                f"{root!r} is passed to both a donated and a "
+                f"non-donated argument of {ev.callee}() — the "
+                f"non-donated view reads a deleted buffer"))
+        for root in sorted(live):
+            hit = _read_after(w, ev, root)
+            if hit is not None:
+                findings.append(Finding(
+                    "DON001", "error", module.rel, hit[0],
+                    f"{root!r} is read after being donated to "
+                    f"{ev.callee}() at line {ev.lineno} — {hit[1]}; "
+                    f"donation deletes the caller's buffer (take a "
+                    f"fresh host copy first)"))
+    for lineno in w.non_literal:
+        findings.append(Finding(
+            "DON003", "warning", module.rel, lineno,
+            f"donate_argnums of this jax.jit call is not a literal — "
+            f"the donation contract cannot be statically checked"))
+    return findings
+
+
+def _read_after(w: _FuncWalker, ev: _Event,
+                root: str) -> Optional[Tuple[int, str]]:
+    # linear scan: a load after the event, before any re-store
+    for acc in w.accesses:
+        if acc.stmt_idx <= ev.stmt_idx or acc.name != root:
+            continue
+        if acc.kind == "store":
+            break
+        return (acc.lineno, "read reaches the donated buffer")
+    # loop rule: donated in a loop that never re-stores the root —
+    # iteration k+1 re-donates (and re-reads) the deleted buffer
+    if ev.loops:
+        loop_id = ev.loops[-1]
+        stored = any(acc.kind == "store" and acc.name == root
+                     and loop_id in acc.loops for acc in w.accesses)
+        if not stored:
+            return (ev.lineno, "the enclosing loop never rebinds it, "
+                               "so the next iteration donates a dead "
+                               "buffer")
+    return None
+
+
+def analyze(root: str,
+            rel_dirs: Sequence[str] = ("src",)) -> Tuple[List[Finding],
+                                                         Dict[str, int]]:
+    mods = _load_modules(root, rel_dirs)
+    reg = Registry(modules={m.qual: m for m in mods})
+    for _ in range(3):                   # factory/wrapper fixpoint
+        changed = False
+        for mod in mods:
+            for func in mod.functions():
+                w = _scan_function(mod, reg, func)
+                changed |= _promote(mod, reg, func, w)
+        if not changed:
+            break
+    findings: List[Finding] = []
+    n_funcs = 0
+    for mod in mods:
+        for func in mod.functions():
+            n_funcs += 1
+            findings.extend(check_function(mod, reg, func))
+    stats = {"modules": len(mods), "functions": n_funcs,
+             "donating_factories": len(reg.factories),
+             "donating_wrappers": len(reg.wrappers)}
+    return findings, stats
+
+
+def run(root: str) -> PassResult:
+    findings, stats = analyze(root)
+    return PassResult("donatecheck", findings, stats)

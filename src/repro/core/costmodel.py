@@ -929,6 +929,20 @@ def technique_state_bytes(technique: str, wl: Workload,
     return spec.memory.state_bytes(_make_context(wl, cluster, vms))
 
 
+def memory_envelope_gb(cluster: ClusterLike,
+                       vms: Optional[Sequence[int]] = None) -> float:
+    """The site memory envelope every ``MemoryModel.mem_gb`` is judged
+    against: the smallest participating GPU's memory in GB (the fp32
+    training state must fit *everywhere* it is placed).  Exported so
+    the static plan verifier (``repro.analysis.planlint``) can check
+    ``technique_state_bytes`` against exactly the bound the feasibility
+    filter uses."""
+    topo = as_topology(cluster)
+    sel = topo.select(vms)
+    return min(GPUS[g].mem_gb
+               for i in sel for g in topo.sites[i].gpus)
+
+
 def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                         vms: Optional[Sequence[int]] = None, *,
                         stage_order: Optional[Sequence[int]] = None,

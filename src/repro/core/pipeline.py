@@ -206,6 +206,18 @@ def stage_gather_index(split, n_stages: int, virt: int = 1):
     return idx, layer_valid
 
 
+def banked_slot(stage: int, chunk: int, n_stages: int,
+                virt: int = 1) -> bool:
+    """Whether ``stage``'s output for local ``chunk`` is banked (kept as
+    a finished microbatch) instead of sent on the ring — true only for
+    the last stage's last chunk.  Shared by ``schedule_tables``'s
+    arrival construction and the schedule race detector
+    (``repro.analysis.schedlint``) so both sides agree on which sends
+    must pair with receives.
+    """
+    return stage == n_stages - 1 and chunk == virt - 1
+
+
 def schedule_tables(schedule: str, n_stages: int,
                     n_micro: int) -> Dict[str, np.ndarray]:
     """Static forward-slot tables driving the scheduled pipeline runner.
@@ -294,7 +306,7 @@ def schedule_tables(schedule: str, n_stages: int,
             if not active[prev, t - 1]:
                 continue
             k, i = int(chunk[prev, t - 1]), int(mb[prev, t - 1])
-            if prev == S - 1 and k == virt - 1:
+            if banked_slot(prev, k, S, virt):
                 continue                    # last chunk: banked, not sent
             arr_valid[s, t] = True
             arr_chunk[s, t] = k + (1 if prev == S - 1 else 0)

@@ -41,6 +41,44 @@ STAGE_AXIS = "stage"
 
 
 @dataclass(frozen=True)
+class MeshSpec:
+    """Device-free stand-in for a ``jax.sharding.Mesh``: axis names and
+    sizes only, no devices.
+
+    Every ``Plan`` spec method (``param_specs`` / ``opt_specs`` /
+    ``batch_spec`` / ``cache_spec``) consults only ``mesh.axis_names``
+    and ``mesh.shape``, so the static plan verifier
+    (``repro.analysis.planlint``) can compute the exact shardings the
+    launch layer would build — for every candidate the search emits —
+    without constructing a single device.
+    """
+    axes: Tuple[Tuple[str, int], ...]
+
+    @classmethod
+    def of(cls, shape: Sequence[int],
+           names: Sequence[str]) -> "MeshSpec":
+        if len(shape) != len(names):
+            raise ValueError(f"shape {tuple(shape)} vs axis names "
+                             f"{tuple(names)}")
+        return cls(tuple(zip(names, (int(n) for n in shape))))
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(a for a, _ in self.axes)
+
+    @property
+    def shape(self) -> Dict[str, int]:
+        return dict(self.axes)
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for _, s in self.axes:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
 class Plan:
     """A hardware-independent execution plan: how params, optimizer
     state, and the batch are sharded over a mesh, keyed by the paper's

@@ -51,10 +51,11 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
 from repro.core.costmodel import (ALL_TECHNIQUES, ClusterLike, SCHEDULES,
-                                  TECHNIQUES, Workload, as_topology,
-                                  avg_tflops, balanced_stage_layers,
-                                  carrier_scale, parse_schedule,
-                                  stage_compute_tflops, wire_scale)
+                                  StepCost, TECHNIQUES, Workload,
+                                  as_topology, avg_tflops,
+                                  balanced_stage_layers, carrier_scale,
+                                  parse_schedule, stage_compute_tflops,
+                                  technique_step_cost, wire_scale)
 from repro.core.plans import Placement
 from repro.core.topology import Link, Topology
 
@@ -507,6 +508,24 @@ class PlanSearch:
                           schedule=cand.schedule,
                           carrier_dtype=self.carrier_dtype,
                           wire_dtype=cand.wire_dtype)
+
+    def step_cost(self, cand: Candidate) -> StepCost:
+        """The modelled ``StepCost`` behind ``evaluate`` — compute /
+        comm seconds and the memory-vs-envelope pair, priced exactly as
+        the scorer prices the candidate (same stage balance, schedule,
+        carrier and wire dtypes).  The introspection hook the static
+        plan verifier (``repro.analysis.planlint``) checks
+        ``technique_state_bytes`` and feasibility consistency against.
+        """
+        place = self.placement(cand)
+        return technique_step_cost(
+            cand.technique, self.wl, self.topology, cand.sites,
+            stage_order=cand.stage_order,
+            stage_balance=self.stage_balance,
+            stage_layers=place.stage_layers,
+            schedule=cand.schedule,
+            carrier_dtype=self.carrier_dtype,
+            wire_dtype=cand.wire_dtype)
 
     @staticmethod
     def probe_key(technique: str, placement: Optional[Placement]) -> Tuple:

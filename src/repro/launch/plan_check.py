@@ -44,7 +44,7 @@ def main() -> None:
     from repro.core.plans import PLANS, get_plan
     from repro.core.steps import build_train_step
     from repro.models import Model
-    from repro.models.registry import input_specs
+    from repro.models.registry import abstractify, input_specs
     from repro.optim import init_adamw
 
     # "all" derives from the plan registry (imported only after the
@@ -75,8 +75,8 @@ def main() -> None:
         with jax.set_mesh(mesh):
             params = model.init(jax.random.key(0))
             opt = init_adamw(params)
-            p_shapes = jax.eval_shape(lambda: params)
-            b_shapes = jax.eval_shape(lambda: batch)
+            p_shapes = abstractify(params)
+            b_shapes = abstractify(batch)
             step, sh = build_train_step(model, plan, mesh, tcfg,
                                         params_shapes=p_shapes,
                                         batch_shapes=b_shapes)

@@ -1,3 +1,4 @@
 from repro.models.model import Model, cast_params
+from repro.models.registry import abstractify
 
-__all__ = ["Model", "cast_params"]
+__all__ = ["Model", "cast_params", "abstractify"]

@@ -23,6 +23,18 @@ def _struct(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
 
 
+def abstractify(pytree) -> Any:
+    """ShapeDtypeStruct skeleton of a pytree of (possibly concrete)
+    arrays — the one way the runtime (``train.loop``, ``serve.engine``)
+    and the static plan verifier (``repro.analysis.planlint``) build
+    abstract pytrees, so shardings computed from either agree.  Leaves
+    that are already abstract pass through unchanged; sharding metadata
+    is deliberately dropped (specs are the plans' job)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                       jnp.result_type(x)), pytree)
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
                 abstract: bool = True, rng: np.random.Generator = None
                 ) -> Dict[str, Any]:

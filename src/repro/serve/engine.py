@@ -15,6 +15,7 @@ from repro.configs.base import ModelConfig
 from repro.core.plans import Plan
 from repro.core.steps import build_prefill_step, build_serve_step
 from repro.models.model import Model
+from repro.models.registry import abstractify
 
 
 def sample_tokens(logits, rng_key, *, temperature: float = 0.0,
@@ -56,14 +57,13 @@ class Engine:
             cache = model.init_cache(batch_size, max_len, window=window,
                                      kv_dtype=kv_dtype)
             self._cache0 = cache
-            c_shapes = jax.eval_shape(lambda: cache)
             self._serve_step = None
-            self._cache_shapes = c_shapes
+            self._cache_shapes = abstractify(cache)
 
     def _build(self, params, batch):
         with jax.set_mesh(self.mesh):
-            p_shapes = jax.eval_shape(lambda: params)
-            b_shapes = jax.eval_shape(lambda: batch)
+            p_shapes = abstractify(params)
+            b_shapes = abstractify(batch)
             self._prefill, sh_p = build_prefill_step(
                 self.model, self.plan, self.mesh, params_shapes=p_shapes,
                 batch_shapes=b_shapes, cache_shapes=self._cache_shapes,

@@ -17,6 +17,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.plans import Plan
 from repro.core.steps import build_train_step
 from repro.models.model import Model
+from repro.models.registry import abstractify
 from repro.optim import init_adamw
 from repro.train.checkpoint import save_checkpoint
 
@@ -77,8 +78,8 @@ def train(model: Model, plan: Plan, mesh, tcfg: TrainConfig, loader, *,
         if opt_state is None:
             opt_state = init_adamw(params)
         first = loader.batch_at(start_step)
-        p_shapes = jax.eval_shape(lambda: params)
-        b_shapes = jax.eval_shape(lambda: first)
+        p_shapes = abstractify(params)
+        b_shapes = abstractify(first)
         step_fn, sh = build_train_step(model, plan, mesh, tcfg,
                                        params_shapes=p_shapes,
                                        batch_shapes=b_shapes,

@@ -1,0 +1,3 @@
+# Negative-test fixtures for repro.analysis (tests/test_analysis.py).
+# These files are parsed by the analyzers, never imported or executed;
+# no test_ prefix, so pytest does not collect them.

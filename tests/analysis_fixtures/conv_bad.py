@@ -1,0 +1,44 @@
+"""Seeded convention violations for tests/test_analysis.py: a
+unit-mixing arithmetic expression (CONV001) and broad exception
+handlers that swallow (CONV002).  The clean shapes sit alongside so
+the tests also prove the rules do not overfire.
+"""
+
+
+def mixed_units(compute_s, bytes_wire, link_gbps, overhead_ms):
+    # CONV001: seconds + bytes
+    bad_total = compute_s + bytes_wire
+    # CONV001: milliseconds - gigabits per second
+    bad_delta = overhead_ms - link_gbps
+    # fine: same unit, and unitless scaling
+    ok_total = compute_s + overhead_ms / 1e3
+    ok_scaled = 2.0 * compute_s
+    return bad_total, bad_delta, ok_total, ok_scaled
+
+
+def swallow_and_return_none(path):
+    try:
+        return open(path).read()
+    except Exception:
+        return None  # CONV002: broad except that hides every failure
+
+
+def swallow_and_pass(path):
+    try:
+        return open(path).read()
+    except Exception:  # CONV002
+        pass
+
+
+def narrow_is_fine(path):
+    try:
+        return open(path).read()
+    except FileNotFoundError:
+        return None
+
+
+def broad_but_reraises(path):
+    try:
+        return open(path).read()
+    except Exception as exc:
+        raise RuntimeError(path) from exc

@@ -1,0 +1,49 @@
+"""The PR-7 ``reshard_check`` bug, reduced: ``train`` donates its state
+buffers (device_put may alias when src and dst shardings coincide), and
+the parity check then reuses the restored host arrays for the control
+run — reading deleted buffers.  donatecheck must flag every marked
+line (DON001/DON002); the fixed twin is donate_good.py.
+"""
+import jax
+
+
+def build_train_step(model):
+    step = jax.jit(model.step, donate_argnums=(0, 1))
+    return step, {"params": None, "opt": None}
+
+
+def train(model, params, opt_state, batch):
+    step_fn, sh = build_train_step(model)
+    params = jax.device_put(params, sh["params"])      # may alias!
+    opt_state = jax.device_put(opt_state, sh["opt"])
+    params, opt_state, loss = step_fn(params, opt_state, batch)
+    return loss
+
+
+def run_place(model, ckpt, batch):
+    params_h, opt_h = ckpt.restore()
+    # resharded run donates the restored arrays ...
+    loss_resharded = train(model, params_h, opt_h, batch)
+    # ... and the control run reads them again: DON001 x2
+    loss_control = train(model, params_h, opt_h, batch)
+    return loss_resharded, loss_control
+
+
+def loop_never_rebinds(model, params, opt_state, batches):
+    step_fn, _ = build_train_step(model)
+    for batch in batches:
+        # DON001: next iteration donates the buffer iteration one freed
+        out = step_fn(params, opt_state, batch)
+    return out
+
+
+def donated_and_read_slot(model, params, opt_state, batch):
+    step_fn, _ = build_train_step(model)
+    # DON002: params is both donated (arg 0) and read (inside arg 2)
+    return step_fn(params, opt_state, (batch, params))
+
+
+def unverifiable_argnums(model, nums):
+    # DON003: the donation contract is not a literal
+    step = jax.jit(model.step, donate_argnums=nums)
+    return step

@@ -1,0 +1,42 @@
+"""The fixed twin of donate_bad.py: the parity check snapshots the
+restored state with ``host_copy`` (a fresh-copy call) before the
+donating run, loops rebind their donated operands, and no argument
+slot is both donated and read.  donatecheck must report nothing here.
+"""
+import copy
+
+import jax
+import numpy as np
+
+
+def host_copy(tree):
+    return jax.tree.map(np.asarray, tree)
+
+
+def build_train_step(model):
+    step = jax.jit(model.step, donate_argnums=(0, 1))
+    return step, {"params": None, "opt": None}
+
+
+def train(model, params, opt_state, batch):
+    step_fn, sh = build_train_step(model)
+    params = jax.device_put(params, sh["params"])
+    opt_state = jax.device_put(opt_state, sh["opt"])
+    params, opt_state, loss = step_fn(params, opt_state, batch)
+    return loss
+
+
+def run_place(model, ckpt, batch):
+    params_h, opt_h = ckpt.restore()
+    params_ctl = host_copy(params_h)
+    opt_ctl = copy.deepcopy(opt_h)
+    loss_resharded = train(model, params_h, opt_h, batch)
+    loss_control = train(model, params_ctl, opt_ctl, batch)
+    return loss_resharded, loss_control
+
+
+def loop_rebinds(model, params, opt_state, batches):
+    step_fn, _ = build_train_step(model)
+    for batch in batches:
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+    return params, opt_state, loss

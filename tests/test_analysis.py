@@ -1,0 +1,387 @@
+"""repro.analysis (ISSUE 8 tentpole): each pass must stay clean on the
+real tree AND fire on seeded violations — a detector that never fires
+is indistinguishable from one that is broken, so every rule gets a
+negative test.  The donation fixtures under tests/analysis_fixtures/
+reproduce the PR-7 ``reshard_check`` bug (control run reading buffers
+the resharded run donated) and its ``host_copy`` fix.
+
+The pure cores (``schedlint.check_tables``, ``planlint.check_registry``
+/ ``check_specs``, ``conventions.check_units`` / ``check_excepts``)
+take data in and return problems out, so corruption is a dict edit,
+not a monkeypatch.  CLI / baseline round-trips run ``__main__.main``
+in-process against a temp root.
+"""
+import ast
+import copy
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import (Baseline, Finding, PASSES, RULES, repo_root,
+                            run_passes)
+from repro.analysis import conventions, donatecheck, planlint, schedlint
+from repro.analysis.__main__ import main as cli_main
+from repro.core.pipeline import banked_slot, schedule_tables
+from repro.core.plans import PLANS, MeshSpec
+from repro.core.costmodel import TECHNIQUE_SPECS
+from repro.models.registry import abstractify
+
+ROOT = repo_root()
+FIXTURES = os.path.join("tests", "analysis_fixtures")
+
+
+def rules_of(problems):
+    """{rule, ...} from (rule, msg) pairs or Finding lists."""
+    return {p[0] if isinstance(p, tuple) else p.rule for p in problems}
+
+
+# ---------------------------------------------------------------- schedlint
+
+def test_schedlint_full_acceptance_grid_is_sound():
+    """The ISSUE 8 guarantee: every schedule over S in 1..4, m in 1..8
+    (v in 1..3 via the interleaved variants) verifies clean."""
+    checked = 0
+    for sched in schedlint.GRID_SCHEDULES:
+        for S in schedlint.GRID_S:
+            for m in schedlint.GRID_M:
+                tables = schedule_tables(sched, S, m)
+                assert schedlint.check_tables(tables, sched, S, m) == [], \
+                    f"{sched} S={S} m={m}"
+                checked += 1
+    assert checked == 128
+
+
+def test_schedlint_run_on_tree_is_clean():
+    res = schedlint.run(ROOT)
+    assert res.findings == []
+    assert res.stats["cells_checked"] == 128
+
+
+def _corrupt(sched, S, m, mutate):
+    tables = {k: v.copy() for k, v in schedule_tables(sched, S, m).items()}
+    mutate(tables)
+    return schedlint.check_tables(tables, sched, S, m)
+
+
+def test_schedlint_dropped_arrival_fires():
+    def drop(t):
+        live = np.argwhere(t["arr_valid"])
+        s, tick = live[len(live) // 2]
+        t["arr_valid"][s, tick] = False
+    probs = _corrupt("gpipe", 3, 4, drop)
+    assert "SCHED003" in rules_of(probs) or "SCHED004" in rules_of(probs)
+
+
+def test_schedlint_mislabeled_chunk_fires():
+    def mislabel(t):
+        live = np.argwhere(t["arr_valid"])
+        s, tick = live[0]
+        t["arr_chunk"][s, tick] += 1
+    probs = _corrupt("interleaved2", 2, 3, mislabel)
+    assert "SCHED004" in rules_of(probs)
+
+
+def test_schedlint_dropped_run_slot_fires():
+    def drop(t):
+        assert t["active"][2, 2]
+        t["active"][2, 2] = False
+    probs = _corrupt("1f1b", 4, 4, drop)
+    assert "SCHED001" in rules_of(probs)
+
+
+def test_schedlint_out_of_range_slot_fires():
+    def blow(t):
+        assert t["active"][0, 0]
+        t["mb"][0, 0] = 9
+    probs = _corrupt("gpipe", 2, 2, blow)
+    assert "SCHED002" in rules_of(probs)
+
+
+def test_schedlint_double_run_fires():
+    def dup(t):
+        # stage 0's second tick re-runs microbatch 0
+        assert t["active"][0, 1]
+        t["mb"][0, 1] = 0
+    probs = _corrupt("gpipe", 2, 3, dup)
+    assert "SCHED001" in rules_of(probs)
+
+
+def test_schedlint_tick_formula_fires():
+    def pad(t):
+        for k in t:
+            pad_col = np.zeros((t[k].shape[0], 1), t[k].dtype)
+            t[k] = np.concatenate([t[k], pad_col], axis=1)
+    probs = _corrupt("gpipe", 2, 4, pad)
+    assert "SCHED005" in rules_of(probs)
+
+
+def test_banked_slot_is_last_stage_last_chunk():
+    assert banked_slot(3, 0, 4)                 # v=1: last stage banks
+    assert not banked_slot(2, 0, 4)
+    assert banked_slot(3, 1, 4, virt=2)         # v=2: only the last chunk
+    assert not banked_slot(3, 0, 4, virt=2)
+    assert banked_slot(0, 0, 1)                 # S=1: everything banks
+
+
+# ----------------------------------------------------------------- planlint
+
+def test_plan_registry_drift_fires_both_ways():
+    assert planlint.check_registry(["dp", "pp"], ["dp", "pp"]) == []
+    priced_only = planlint.check_registry(["dp", "pp"], ["dp"])
+    assert len(priced_only) == 1 and priced_only[0][1] == "priced-only"
+    exec_only = planlint.check_registry(["dp"], ["dp", "pp"])
+    assert len(exec_only) == 1 and exec_only[0][1] == "executable-only"
+    assert planlint.check_registry(sorted(TECHNIQUE_SPECS),
+                                   sorted(PLANS)) == []
+
+
+def _spec_case(spec, shape=(8, 16), mesh=None):
+    mesh = mesh or MeshSpec.of((2, 2), ("data", "model"))
+    shapes = {"w": jax.ShapeDtypeStruct(shape, jnp.float32)}
+    return planlint.check_specs(shapes, {"w": spec}, mesh, "t")
+
+
+def test_check_specs_clean_and_negatives():
+    assert _spec_case(P("data", "model")) == []
+    assert _spec_case(P(None, ("data", "model"))) == []
+    assert any("names axis" in p for p in _spec_case(P("tensor")))
+    assert any("reuses" in p for p in _spec_case(P("data", "data")))
+    assert any("not divisible" in p
+               for p in _spec_case(P("data"), shape=(7, 16)))
+    assert any("more entries" in p
+               for p in _spec_case(P("data", None, "model"), shape=(8,)))
+    mesh = MeshSpec.of((2, 2), ("data", "model"))
+    shapes = {"w": jax.ShapeDtypeStruct((8,), jnp.float32),
+              "b": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    bad = planlint.check_specs(shapes, {"w": P()}, mesh, "t")
+    assert any("leaves but" in p for p in bad)
+
+
+def test_mesh_spec_duck_types_like_a_mesh():
+    ms = MeshSpec.of((2, 4), ("stage", "model"))
+    assert ms.axis_names == ("stage", "model")
+    assert ms.shape == {"stage": 2, "model": 4}
+    assert ms.size == 8
+    with pytest.raises(ValueError):
+        MeshSpec.of((2,), ("a", "b"))
+
+
+# -------------------------------------------------------------- donatecheck
+
+@pytest.fixture(scope="module")
+def fixture_findings():
+    findings, stats = donatecheck.analyze(ROOT, rel_dirs=(FIXTURES,))
+    assert stats["donating_factories"] >= 1
+    assert stats["donating_wrappers"] >= 1
+    return findings
+
+
+def test_donatecheck_reproduces_pr7_reshard_bug(fixture_findings):
+    """donate_bad.run_place is the PR-7 reshard_check bug: the control
+    run reads params/opt the resharded run's train() call donated."""
+    hits = [f for f in fixture_findings
+            if f.rule == "DON001" and "donate_bad" in f.file
+            and "train()" in f.message]
+    assert len(hits) == 2, [f.render() for f in fixture_findings]
+    assert {f.line for f in hits} == {28}
+
+
+def test_donatecheck_loop_without_rebind_fires(fixture_findings):
+    hits = [f for f in fixture_findings
+            if f.rule == "DON001" and f.line == 36]
+    assert len(hits) == 2
+    assert all("loop" in f.message for f in hits)
+
+
+def test_donatecheck_double_slot_fires(fixture_findings):
+    assert any(f.rule == "DON002" and f.line == 43
+               for f in fixture_findings)
+
+
+def test_donatecheck_non_literal_argnums_fires(fixture_findings):
+    assert any(f.rule == "DON003" for f in fixture_findings)
+
+
+def test_donatecheck_fixed_code_passes(fixture_findings):
+    """The host_copy twin of the bug is clean — the fix pattern that
+    landed in launch/reshard_check.py really is what the rule accepts."""
+    assert [f for f in fixture_findings if "donate_good" in f.file] == []
+
+
+def test_donatecheck_tree_is_clean():
+    res = donatecheck.run(ROOT)
+    assert res.findings == [], [f.render() for f in res.findings]
+    # the real donation surfaces must be in the model, or the pass
+    # proves nothing about the tree
+    assert res.stats["donating_factories"] >= 2
+    assert res.stats["donating_wrappers"] >= 2
+
+
+# -------------------------------------------------------------- conventions
+
+@pytest.fixture(scope="module")
+def conv_tree():
+    path = os.path.join(ROOT, FIXTURES, "conv_bad.py")
+    with open(path) as f:
+        return ast.parse(f.read())
+
+
+def test_check_units_flags_only_cross_unit_arithmetic(conv_tree):
+    lines = {line for line, _ in conventions.check_units(conv_tree)}
+    assert lines == {10, 12}                    # s+bytes, ms-gbps
+
+
+def test_check_excepts_flags_only_swallowers(conv_tree):
+    lines = {line for line, _ in conventions.check_excepts(conv_tree)}
+    assert lines == {22, 29}                    # return None / pass
+
+
+def test_conventions_tree_is_clean():
+    res = conventions.run(ROOT)
+    assert res.findings == [], [f.render() for f in res.findings]
+    assert res.stats["techniques_checked"] == len(TECHNIQUE_SPECS)
+
+
+# ----------------------------------------------------- baseline + CLI
+
+def _f(rule="DON001", file="src/x.py", msg="buffer 'p' reused"):
+    return Finding(rule, "error", file, 1, msg)
+
+
+def test_baseline_split_new_accepted_stale():
+    b = Baseline([
+        {"rule": "DON001", "file": "src/x.py", "match": "reused",
+         "justification": "known"},
+        {"rule": "CONV001", "file": "src/y.py", "match": "never",
+         "justification": "stale"},
+    ], path="tools/analysis_baseline.json")
+    new, accepted, stale = b.split([_f(), _f(file="src/z.py")])
+    assert [f.file for f in new] == ["src/z.py"]
+    assert [f.file for f in accepted] == ["src/x.py"]
+    assert [f.rule for f in stale] == ["BASE001"]
+    assert "CONV001" in stale[0].message
+
+
+def test_baseline_load_rejects_incomplete_entries(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(
+        {"accepted": [{"rule": "DON001", "file": "src/x.py"}]}))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(str(p))
+    p.write_text(json.dumps({"accepted": []}))
+    assert Baseline.load(str(p)).entries == []
+    assert Baseline.load(str(tmp_path / "missing.json")).entries == []
+
+
+def test_checked_in_baseline_parses():
+    b = Baseline.load(os.path.join(ROOT, "tools",
+                                   "analysis_baseline.json"))
+    for e in b.entries:
+        assert e["rule"] in RULES
+
+
+SEEDED_BUG = '''\
+import jax
+
+def run(model, params, opt, batch):
+    step = jax.jit(model.step, donate_argnums=(0, 1))
+    out = step(params, opt, batch)
+    return params
+'''
+
+
+@pytest.fixture()
+def seeded_root(tmp_path):
+    """A minimal repo root whose src/ holds one donation bug."""
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "buggy.py").write_text(SEEDED_BUG)
+    (tmp_path / "tools").mkdir()
+    return tmp_path
+
+
+def test_cli_fails_on_seeded_violation(seeded_root, capsys):
+    out = seeded_root / "report.json"
+    rc = cli_main(["--root", str(seeded_root), "--passes", "donatecheck",
+                   "--format", "json", "--out", str(out)])
+    assert rc == 1
+    report = json.loads(out.read_text())
+    assert report["summary"]["new"] == 1
+    assert report["findings"][0]["rule"] == "DON001"
+    assert not report["findings"][0]["baselined"]
+    assert json.loads(capsys.readouterr().out)["exit_code"] == 1
+
+
+def test_cli_baselined_violation_passes(seeded_root, capsys):
+    base = seeded_root / "tools" / "analysis_baseline.json"
+    base.write_text(json.dumps({"accepted": [
+        {"rule": "DON001", "file": "src/buggy.py", "match": "donated",
+         "justification": "seeded fixture for the CLI test"}]}))
+    rc = cli_main(["--root", str(seeded_root), "--passes", "donatecheck"])
+    assert rc == 0
+    assert "baselined: seeded fixture" in capsys.readouterr().out
+
+
+def test_cli_stale_baseline_entry_fails(seeded_root, capsys):
+    (seeded_root / "src" / "buggy.py").write_text("x = 1\n")
+    base = seeded_root / "tools" / "analysis_baseline.json"
+    base.write_text(json.dumps({"accepted": [
+        {"rule": "DON001", "file": "src/buggy.py", "match": "donated",
+         "justification": "now stale"}]}))
+    rc = cli_main(["--root", str(seeded_root), "--passes", "donatecheck"])
+    assert rc == 1
+    assert "BASE001" in capsys.readouterr().out
+
+
+def test_cli_baseline_none_ignores_checked_in_file(seeded_root):
+    base = seeded_root / "tools" / "analysis_baseline.json"
+    base.write_text(json.dumps({"accepted": [
+        {"rule": "DON001", "file": "src/buggy.py", "match": "donated",
+         "justification": "would mask it"}]}))
+    rc = cli_main(["--root", str(seeded_root), "--passes", "donatecheck",
+                   "--baseline", "none", "--format", "json"])
+    assert rc == 1
+
+
+def test_rules_catalog_covers_every_emitted_rule():
+    prefixes = ("PLAN", "SCHED", "DON", "CONV", "BASE")
+    assert all(r.startswith(prefixes) for r in RULES)
+    assert set(PASSES) == {"planlint", "schedlint", "donatecheck",
+                           "conventions"}
+
+
+def test_full_cli_is_clean_on_tree(capsys):
+    """The acceptance gate CI runs: all four passes, checked-in
+    baseline, exit 0.  planlint abstract-traces every candidate of both
+    scenarios — device-free, so this stays a few seconds."""
+    rc = cli_main(["--format", "json"])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 0, report["findings"]
+    assert report["summary"]["new"] == 0
+    assert set(report["passes"]) == set(PASSES)
+    assert report["passes"]["planlint"]["stats"]["candidates"] > 100
+
+
+# ------------------------------------------------- abstractify (satellite 2)
+
+def test_abstractify_matches_eval_shape_closure():
+    tree = {"w": jnp.ones((4, 8), jnp.bfloat16),
+            "layers": [np.zeros((2,), np.int32), 3.0]}
+    got = abstractify(tree)
+    want = jax.eval_shape(lambda: tree)
+    assert jax.tree.map(
+        lambda a, b: (a.shape, a.dtype) == (b.shape, b.dtype), got, want)
+    flat = jax.tree.leaves(got)
+    assert all(isinstance(x, jax.ShapeDtypeStruct) for x in flat)
+
+
+def test_abstractify_is_idempotent_and_traceable():
+    tree = {"w": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    again = abstractify(tree)
+    assert again["w"].shape == (4,) and again["w"].dtype == jnp.float32
+    out = jax.eval_shape(lambda t: jax.tree.map(lambda x: x * 2, t), again)
+    assert out["w"].shape == (4,)

@@ -19,7 +19,9 @@ import sys
 
 import pytest
 
-from repro.core.pipeline import schedule_tables
+from repro.analysis import schedlint
+from repro.core.costmodel import balanced_stage_layers
+from repro.core.pipeline import schedule_tables, stage_gather_index
 
 
 def _run_check(env, gpus, extra=()):
@@ -91,6 +93,69 @@ def test_1f1b_stage_never_holds_more_than_S_forwards_ahead():
         retired = fwd_done[S - 1]
         for s in range(S):
             assert fwd_done[s] - retired <= min(S, m)
+
+
+# ------------------------------------------------------------------ #
+# edge cases (ISSUE 8 satellite): m < S, S == 1, non-divisible v > 1
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "interleaved",
+                                   "interleaved3"])
+@pytest.mark.parametrize("S,m", [(4, 1), (4, 2), (3, 1), (4, 3)])
+def test_fewer_microbatches_than_stages(sched, m, S):
+    """m < S: the pipeline is mostly bubble, but every item must still
+    run exactly once in producer order — the race detector's invariants
+    are the oracle."""
+    tables = schedule_tables(sched, S, m)
+    assert schedlint.check_tables(tables, sched, S, m) == []
+
+
+@pytest.mark.parametrize("sched,v", [("gpipe", 1), ("1f1b", 1),
+                                     ("interleaved", 2),
+                                     ("interleaved3", 3)])
+def test_single_stage_degenerate_ring(sched, v):
+    """S=1: the ring is a self-loop and every chunk's producer is the
+    same stage, so chunks must serialize (chunk c strictly after c-1)
+    and nothing is ever on the wire except inter-chunk hops."""
+    m = 3
+    tables = schedule_tables(sched, 1, m)
+    assert schedlint.check_tables(tables, sched, 1, m) == []
+    active, chunk, mb = tables["active"], tables["chunk"], tables["mb"]
+    assert int(active.sum()) == v * m
+    done = {}
+    for tick in range(active.shape[1]):
+        if active[0, tick]:
+            done[(int(chunk[0, tick]), int(mb[0, tick]))] = tick
+    for (k, i), tick in done.items():
+        if k > 0:
+            assert done[(k - 1, i)] < tick
+    if v == 1:
+        # no chunks to hand over: a pure loop, zero arrival traffic
+        assert not tables["arr_valid"].any()
+
+
+@pytest.mark.parametrize("layers,v,S", [(7, 2, 3), (9, 3, 2), (5, 2, 2)])
+def test_interleaved_non_divisible_chunking(layers, v, S):
+    """v*S chunks over a layer count that does not divide evenly: the
+    pad-and-mask gather must still cover every layer exactly once, each
+    chunk contiguously, and the tick tables still verify."""
+    split = balanced_stage_layers(layers, [1.0] * (S * v))
+    assert sum(split) == layers and min(split) >= 1
+    assert max(split) != min(split)             # genuinely uneven
+    idx, valid = stage_gather_index(split, S, v)
+    assert idx.shape == valid.shape == (S * v * max(split),)
+    covered = idx[valid]
+    assert sorted(covered.tolist()) == list(range(layers))
+    # each chunk's real rows are one contiguous ascending layer run
+    per = max(split)
+    for chunk_pos in range(S * v):
+        rows = idx[chunk_pos * per:(chunk_pos + 1) * per]
+        real = rows[valid[chunk_pos * per:(chunk_pos + 1) * per]]
+        assert real.tolist() == list(range(real[0], real[0] + len(real)))
+    m = 4
+    sched = f"interleaved{v}" if v != 2 else "interleaved"
+    tables = schedule_tables(sched, S, m)
+    assert schedlint.check_tables(tables, sched, S, m) == []
 
 
 # ------------------------------------------------------------------ #

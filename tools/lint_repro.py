@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""Shim for ``python -m repro.analysis`` runnable from the repo root
+without setting PYTHONPATH:
+
+    python tools/lint_repro.py [--format json] [--passes ...]
+
+See docs/static-analysis.md for the pass catalog and baseline workflow.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
