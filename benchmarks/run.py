@@ -7,9 +7,11 @@ dry-run roofline and kernel micro-bench.
 Aggregates the kernel micro-bench artifact and the wire-dtype winner map
 into the repo-root ``BENCH_6.json`` perf-trajectory file (the ROADMAP's
 measured-trajectory item), runs the chaos recovery bench
-(``benchmarks/chaos_bench.py``), which writes ``BENCH_7.json``, and
+(``benchmarks/chaos_bench.py``), which writes ``BENCH_7.json``,
 summarizes the static-analysis run (``repro.analysis``) into
-``BENCH_8.json``.  Exit code = number of failed paper-claim checks.
+``BENCH_8.json``, and closes the measured-rate calibration loop
+(``benchmarks/calib_bench.py``), which writes ``BENCH_9.json``.
+Exit code = number of failed paper-claim checks.
 """
 from __future__ import annotations
 
@@ -148,6 +150,10 @@ def main() -> None:
     print("\n===== chaos_bench (elastic recovery, smoke) =====")
     import benchmarks.chaos_bench as chaos_bench
     n_fail += chaos_bench.run(smoke=True)
+
+    print("\n===== calib_bench (BENCH_9.json, profile->refit loop) =====")
+    import benchmarks.calib_bench as calib_bench
+    n_fail += calib_bench.run()
 
     if args.sweep:
         import subprocess

@@ -1,6 +1,7 @@
 """Convention lint: repo invariants the other passes don't own.
 
-  * CONV001 — unit-suffix discipline in ``core/costmodel.py``.  The
+  * CONV001 — unit-suffix discipline in ``core/costmodel.py`` and the
+    ``repro.calib`` calibration stack (overlay / fit / microbench).  The
     cost model's names carry units (``latency_s``, ``bytes_total``,
     ``mem_gb``, ``effective_gbps``); adding or subtracting two
     quantities with *different* known units without a conversion is a
@@ -33,7 +34,15 @@ UNIT_SUFFIXES = {"_s": "s", "_ms": "ms", "_bytes": "bytes", "_gb": "gb",
                  "_gbps": "gbps", "_tflops": "tflops"}
 NONE, UNKNOWN = "", "?"
 
-_COST_REL = os.path.join("src", "repro", "core", "costmodel.py")
+#: files under the CONV001 unit-algebra lint: the cost model and the
+#: calibration stack that prices against it (overlay rates, fitter
+#: design rows, micro-bench timings — all carry unit-suffixed names)
+_COST_RELS = (
+    os.path.join("src", "repro", "core", "costmodel.py"),
+    os.path.join("src", "repro", "calib", "overlay.py"),
+    os.path.join("src", "repro", "calib", "fit.py"),
+    os.path.join("src", "repro", "calib", "microbench.py"),
+)
 
 
 def _unit_of_name(name: str) -> str:
@@ -193,16 +202,18 @@ def check_reachability(root: str) -> List[Finding]:
 
 def run(root: str) -> PassResult:
     res = PassResult("conventions")
-    # CONV001: the cost model's unit algebra
-    cost_path = os.path.join(root, _COST_REL)
+    # CONV001: the unit algebra of the cost model + calibration stack
     n_exprs = 0
-    if os.path.exists(cost_path):
+    for rel in _COST_RELS:
+        cost_path = os.path.join(root, rel)
+        if not os.path.exists(cost_path):
+            continue
         with open(cost_path) as f:
             tree = ast.parse(f.read(), filename=cost_path)
-        n_exprs = sum(isinstance(n, ast.BinOp) for n in ast.walk(tree))
+        n_exprs += sum(isinstance(n, ast.BinOp) for n in ast.walk(tree))
         for lineno, msg in check_units(tree):
             res.findings.append(Finding(
-                "CONV001", "error", _COST_REL.replace(os.sep, "/"),
+                "CONV001", "error", rel.replace(os.sep, "/"),
                 lineno, msg))
     # CONV002: swallowing handlers anywhere in src/
     n_handlers = 0

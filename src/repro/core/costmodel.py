@@ -344,21 +344,27 @@ def pipeline_inflight_microbatches(schedule: str, n_stages: int,
 STAGE_BALANCE_MODES = ("even", "tflops")
 
 
-def stage_compute_tflops(topo: Topology, order: Sequence[int]
-                         ) -> List[float]:
+def stage_compute_tflops(topo: Topology, order: Sequence[int],
+                         calibration=None) -> List[float]:
     """Achievable TFLOP/s of each pipeline stage's site, in stage order.
 
     Args:
         topo: the topology the stages are placed on.
         order: site index per stage (a ``Placement.stage_order`` or plain
             site subset).
+        calibration: optional measured-rate overlay
+            (``repro.calib.overlay.Calibration``); sites it covers use
+            the achieved rate instead of the datasheet one.
 
     Returns:
         One entry per stage: the site's GPU count times its slowest GPU's
         achievable TFLOP/s (meshes are paced by their slowest member).
     """
-    return [min(GPUS[g].tflops for g in topo.sites[i].gpus)
-            * len(topo.sites[i].gpus) for i in order]
+    if calibration is None:
+        return [min(GPUS[g].tflops for g in topo.sites[i].gpus)
+                * len(topo.sites[i].gpus) for i in order]
+    return [calibration.gpu_tflops(topo, i) * len(topo.sites[i].gpus)
+            for i in order]
 
 
 def balanced_stage_layers(n_layers: int, stage_tflops: Sequence[float]
@@ -430,25 +436,49 @@ def _gather_time(bytes_total: float, n: int, link: Link) -> float:
         + (n - 1) / n * bytes_total / (link.effective_gbps * 1e9)
 
 
+# ---- calibrated lookups (repro.calib.overlay, docs/calibration.md) -- #
+#
+# ``cal`` is a ``repro.calib.overlay.Calibration``, duck-typed here so
+# the core never imports the calib package: it must provide
+# ``gpu_tflops(topo, i)``, ``link(topo, i, j)`` and
+# ``spanning_links(topo, sites)``.  ``cal=None`` — and the identity
+# overlay, whose lookups fall through to the very same objects and
+# expressions — price bit-for-bit the analytic model (the differential
+# gate in tests/test_calib_gates.py pins this with ``==``).
+
+def _cal_intra(cal, topo: Topology, i: int) -> Link:
+    return topo.sites[i].intra if cal is None else cal.link(topo, i, i)
+
+
+def _cal_link(cal, topo: Topology, i: int, j: int) -> Link:
+    return topo.link(i, j) if cal is None else cal.link(topo, i, j)
+
+
+def _cal_spanning(cal, topo: Topology, sites: Sequence[int]) -> List[Link]:
+    return topo.spanning_links(sites) if cal is None \
+        else cal.spanning_links(topo, sites)
+
+
 def _collective_time(bytes_total: float, n: int, topo: Topology,
-                     sites: Sequence[int]) -> float:
+                     sites: Sequence[int], cal=None) -> float:
     """All-reduce over a site subset: the ring crosses every site pair's
     path, so the *worst* spanning link prices the collective (the N=2
     special case is exactly the old single-``wan``-field rule)."""
     if len(sites) <= 1:
-        return _allreduce_time(bytes_total, n, topo.sites[sites[0]].intra)
+        return _allreduce_time(bytes_total, n,
+                               _cal_intra(cal, topo, sites[0]))
     return max(_allreduce_time(bytes_total, n, l)
-               for l in topo.spanning_links(sites))
+               for l in _cal_spanning(cal, topo, sites))
 
 
 def _gather_collective_time(bytes_total: float, n: int, topo: Topology,
-                            sites: Sequence[int]) -> float:
+                            sites: Sequence[int], cal=None) -> float:
     """All-gather / reduce-scatter over a site subset, priced like
     ``_collective_time`` on the worst spanning link."""
     if len(sites) <= 1:
-        return _gather_time(bytes_total, n, topo.sites[sites[0]].intra)
+        return _gather_time(bytes_total, n, _cal_intra(cal, topo, sites[0]))
     return max(_gather_time(bytes_total, n, l)
-               for l in topo.spanning_links(sites))
+               for l in _cal_spanning(cal, topo, sites))
 
 
 # --------------------------------------------------------------------- #
@@ -520,6 +550,9 @@ class CostContext:
             (``wire_scale()``; 1.0 = legacy fp32 baseline).
         comm: the priced technique's ``CommPrecision`` — which fractions
             of its collective volume may ride the wire dtype.
+        cal: optional measured-rate ``Calibration`` overlay
+            (``repro.calib.overlay``); None and the identity overlay
+            price bit-for-bit the analytic model.
     """
     wl: Workload
     topo: Topology
@@ -542,6 +575,7 @@ class CostContext:
     carrier_scale: float = 1.0
     wire_scale: float = 1.0
     comm: CommPrecision = field(default_factory=CommPrecision)
+    cal: Optional[object] = None
     _geom: Optional[_PipelineGeometry] = field(default=None, repr=False)
 
     @property
@@ -567,7 +601,7 @@ class CostContext:
         kind, virt = parse_schedule(self.schedule)
         n_chunks = n_stages * virt
         stage_sites = tuple(topo.sites[i] for i in order)
-        stage_tf = stage_compute_tflops(topo, order)
+        stage_tf = stage_compute_tflops(topo, order, self.cal)
         mesh_tflops = tuple(t * 1e12 for t in stage_tf)
         bubble = pipeline_bubble_fraction(self.schedule, n_stages,
                                           wl.microbatches)
@@ -612,7 +646,8 @@ def _make_context(wl: Workload, cluster: ClusterLike,
                   schedule: str = "gpipe",
                   carrier_dtype: str = "fp32",
                   wire_dtype: str = "fp32",
-                  comm: Optional[CommPrecision] = None) -> CostContext:
+                  comm: Optional[CommPrecision] = None,
+                  calibration=None) -> CostContext:
     topo = as_topology(cluster)
     sel = topo.select(vms)
     sites = [topo.sites[i] for i in sel]
@@ -624,11 +659,18 @@ def _make_context(wl: Workload, cluster: ClusterLike,
         # stage-boundary activations are wire-quantizable (pipeshard's
         # CommPrecision.act == 1.0) — the narrower dtype carries them
         cs = min(cs, ws)
+    if calibration is None:
+        slowest = min(g.tflops for g in gpus) * 1e12
+    else:
+        # pool pace = the slowest site's achieved per-GPU rate; with no
+        # overrides each per-site min is over the same datasheet floats,
+        # so min-of-mins is bit-for-bit the flat min above
+        slowest = min(calibration.gpu_tflops(topo, i) for i in sel) * 1e12
     return CostContext(
         wl=wl, topo=topo, sel=sel, sites=sites, n=n,
         tp=min(len(s.gpus) for s in sites),
         flops=wl.flops_per_step,
-        slowest=min(g.tflops for g in gpus) * 1e12,
+        slowest=slowest,
         g_bytes=wl.bytes_grads(),
         p_bytes=wl.bytes_params(),
         state=wl.bytes_train_state(),       # fp32 p+g+m+v (Alpa default)
@@ -638,7 +680,8 @@ def _make_context(wl: Workload, cluster: ClusterLike,
         stage_order=stage_order, stage_balance=stage_balance,
         stage_layers=stage_layers, schedule=schedule,
         carrier_scale=cs, wire_scale=ws,
-        comm=comm if comm is not None else CommPrecision())
+        comm=comm if comm is not None else CommPrecision(),
+        cal=calibration)
 
 
 # ---- compute components --------------------------------------------- #
@@ -668,7 +711,7 @@ def _data_collective(ctx: CostContext) -> float:
     locally), so the byte volume scales with ``_state_byte_scale`` —
     exactly the legacy bytes at fp32."""
     return _collective_time(ctx.g_bytes * _state_byte_scale(ctx),
-                            ctx.n, ctx.topo, ctx.sel)
+                            ctx.n, ctx.topo, ctx.sel, ctx.cal)
 
 
 def _zero2_collective(ctx: CostContext) -> float:
@@ -679,7 +722,7 @@ def _zero2_collective(ctx: CostContext) -> float:
     (``CommPrecision.state = 2.0/2.2``); the grad scatter + param gather
     ride the wire dtype."""
     return 2.2 * _collective_time(ctx.g_bytes * _state_byte_scale(ctx),
-                                  ctx.n, ctx.topo, ctx.sel)
+                                  ctx.n, ctx.topo, ctx.sel, ctx.cal)
 
 
 def _intraop_collective(ctx: CostContext) -> float:
@@ -687,7 +730,7 @@ def _intraop_collective(ctx: CostContext) -> float:
     over the whole pool."""
     return 4 * ctx.wl.cfg.n_layers * _collective_time(
         ctx.act_stream_bytes * _act_byte_scale(ctx), ctx.n, ctx.topo,
-        ctx.sel)
+        ctx.sel, ctx.cal)
 
 
 def _pipeline_collective(ctx: CostContext) -> float:
@@ -698,11 +741,12 @@ def _pipeline_collective(ctx: CostContext) -> float:
     if g.split is None:       # keep the legacy expression bit-for-bit
         return max(
             4 * ctx.wl.cfg.n_layers / g.n_stages * _allreduce_time(
-                act_bytes, len(s.gpus), s.intra)
-            for s in g.stage_sites)
+                act_bytes, len(s.gpus), _cal_intra(ctx.cal, ctx.topo, i))
+            for i, s in zip(g.order, g.stage_sites))
     return max(
-        4 * li * _allreduce_time(act_bytes, len(s.gpus), s.intra)
-        for li, s in zip(g.stage_l, g.stage_sites))
+        4 * li * _allreduce_time(act_bytes, len(s.gpus),
+                                 _cal_intra(ctx.cal, ctx.topo, i))
+        for li, i, s in zip(g.stage_l, g.order, g.stage_sites))
 
 
 def _shard_zero_collective(ctx: CostContext) -> float:
@@ -715,11 +759,12 @@ def _shard_zero_collective(ctx: CostContext) -> float:
     n_rep = len(ctx.sel)
     share = ctx.act_stream_bytes * _act_byte_scale(ctx) / n_rep
     intra = max(4 * ctx.wl.cfg.n_layers
-                * _allreduce_time(share, len(s.gpus), s.intra)
-                for s in ctx.sites)
+                * _allreduce_time(share, len(s.gpus),
+                                  _cal_intra(ctx.cal, ctx.topo, i))
+                for i, s in zip(ctx.sel, ctx.sites))
     inter = 2.2 * _collective_time(
         ctx.g_bytes * _state_byte_scale(ctx) / ctx.tp, n_rep,
-        ctx.topo, ctx.sel)
+        ctx.topo, ctx.sel, ctx.cal)
     return intra + inter
 
 
@@ -732,9 +777,9 @@ def _fsdp_collective(ctx: CostContext) -> float:
     layers = ctx.wl.cfg.n_layers
     s = _state_byte_scale(ctx)
     return 2 * layers * _gather_collective_time(
-        ctx.p_bytes * s / layers, ctx.n, ctx.topo, ctx.sel) \
+        ctx.p_bytes * s / layers, ctx.n, ctx.topo, ctx.sel, ctx.cal) \
         + _gather_collective_time(ctx.g_bytes * s, ctx.n, ctx.topo,
-                                  ctx.sel)
+                                  ctx.sel, ctx.cal)
 
 
 # ---- p2p components ------------------------------------------------- #
@@ -752,18 +797,21 @@ def _pipeline_p2p(ctx: CostContext) -> float:
     g = ctx.pipeline()
     wl, topo, order = ctx.wl, ctx.topo, g.order
     carrier_bytes = ctx.act_stream_bytes * ctx.carrier_scale
-    p2p = sum(
-        2 * (wl.microbatches * (carrier_bytes / wl.microbatches)
-             / (topo.link(a, b).effective_gbps * 1e9)
-             + wl.microbatches * topo.link(a, b).latency_s)
-        for a, b in zip(order[:-1], order[1:]))
+
+    def boundary_s(link: Link) -> float:
+        return 2 * (wl.microbatches * (carrier_bytes / wl.microbatches)
+                    / (link.effective_gbps * 1e9)
+                    + wl.microbatches * link.latency_s)
+
+    p2p = sum(boundary_s(_cal_link(ctx.cal, topo, a, b))
+              for a, b in zip(order[:-1], order[1:]))
     if g.kind == "interleaved" and g.n_stages > 1:
         # v virtual stages per device: every microbatch walks the
         # stage ring v times — each forward boundary link v times
         # and the wrap-around link (last stage back to first)
         # v - 1 times.  This is the schedule's price: the bubble
         # shrinks by v, the p2p bill grows by ~v.
-        wrap = topo.link(order[-1], order[0])
+        wrap = _cal_link(ctx.cal, topo, order[-1], order[0])
         p2p = g.virt * p2p + (g.virt - 1) * 2 * (
             carrier_bytes / (wrap.effective_gbps * 1e9)
             + wl.microbatches * wrap.latency_s)
@@ -950,7 +998,8 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                         stage_layers: Optional[Sequence[int]] = None,
                         schedule: str = "gpipe",
                         carrier_dtype: str = "fp32",
-                        wire_dtype: str = "fp32") -> StepCost:
+                        wire_dtype: str = "fp32",
+                        calibration=None) -> StepCost:
     """Model one optimizer step of `technique` (paper §III) on a cluster
     or N-site topology, via the technique's registered
     ``TechniqueSpec`` components (docs/cost-model.md).
@@ -995,6 +1044,11 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
             ``carrier_dtype``, the Pipeshard p2p carriers too
             (docs/quantization.md).  ``"fp32"`` (default) is bit-for-bit
             the legacy pricing; latency rounds never scale.
+        calibration: optional measured-rate overlay
+            (``repro.calib.overlay.Calibration``, docs/calibration.md).
+            Sites/links it covers are priced at their fitted achieved
+            rates; everything else — and ``Calibration.identity()`` —
+            keeps the analytic price bit-for-bit.
 
     Returns:
         A ``StepCost`` (compute_s, comm_s, memory required/available).
@@ -1015,7 +1069,8 @@ def technique_step_cost(technique: str, wl: Workload, cluster: ClusterLike,
                         stage_layers=stage_layers, schedule=schedule,
                         carrier_dtype=carrier_dtype,
                         wire_dtype=wire_dtype,
-                        comm=spec.comm_precision)
+                        comm=spec.comm_precision,
+                        calibration=calibration)
     compute = spec.compute(ctx)
     comm = spec.p2p(ctx) + spec.collective(ctx)
     mem = spec.memory.mem_gb(ctx)
@@ -1029,7 +1084,8 @@ def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
                   stage_layers: Optional[Sequence[int]] = None,
                   schedule: str = "gpipe",
                   carrier_dtype: str = "fp32",
-                  wire_dtype: str = "fp32") -> Optional[float]:
+                  wire_dtype: str = "fp32",
+                  calibration=None) -> Optional[float]:
     """Minutes per `epochs` epochs; None when the technique OOMs (the
     paper's '×' bars).  Keyword args as ``technique_step_cost``."""
     c = technique_step_cost(technique, wl, cluster, vms,
@@ -1038,7 +1094,8 @@ def epoch_minutes(technique: str, wl: Workload, cluster: ClusterLike,
                             stage_layers=stage_layers,
                             schedule=schedule,
                             carrier_dtype=carrier_dtype,
-                            wire_dtype=wire_dtype)
+                            wire_dtype=wire_dtype,
+                            calibration=calibration)
     if not c.fits:
         return None
     return c.total_s * wl.steps_per_epoch * wl.epochs / 60.0
@@ -1051,7 +1108,8 @@ def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                stage_layers: Optional[Sequence[int]] = None,
                schedule: str = "gpipe",
                carrier_dtype: str = "fp32",
-               wire_dtype: str = "fp32") -> Optional[float]:
+               wire_dtype: str = "fp32",
+               calibration=None) -> Optional[float]:
     """Average achieved TFLOP/s of one step (model FLOPs / step time);
     None when the technique OOMs.  Keyword args as
     ``technique_step_cost``."""
@@ -1061,7 +1119,8 @@ def avg_tflops(technique: str, wl: Workload, cluster: ClusterLike,
                             stage_layers=stage_layers,
                             schedule=schedule,
                             carrier_dtype=carrier_dtype,
-                            wire_dtype=wire_dtype)
+                            wire_dtype=wire_dtype,
+                            calibration=calibration)
     if not c.fits:
         return None
     return wl.flops_per_step / c.total_s / 1e12

@@ -52,6 +52,7 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
 
 from repro.core.costmodel import (ALL_TECHNIQUES, ClusterLike, SCHEDULES,
                                   StepCost, TECHNIQUES, Workload,
+                                  _cal_intra, _cal_link, _cal_spanning,
                                   as_topology, avg_tflops,
                                   balanced_stage_layers, carrier_scale,
                                   parse_schedule, stage_compute_tflops,
@@ -292,6 +293,15 @@ class PlanSearch:
             dtype rescales every subset's byte terms by the same factor
             and never touches latency or compute, so the dominance
             order between subsets is unchanged.
+        calibration: optional measured-rate overlay
+            (``repro.calib.overlay.Calibration``) pricing every
+            candidate — and every pruning decision — at fitted rates
+            instead of datasheet/analytic ones (docs/calibration.md).
+            ``None`` and ``Calibration.identity()`` are bit-for-bit
+            identical to the uncalibrated search: every lookup falls
+            through to the very same objects and expressions, so
+            subset dominance, beam boundary scores, and prices all
+            coincide (pinned by tests/test_calib_gates.py).
     """
     wl: Workload
     topology: Topology
@@ -305,6 +315,7 @@ class PlanSearch:
     schedules: Tuple[str, ...] = SCHEDULES
     carrier_dtype: str = "fp32"
     wire_dtypes: Optional[Tuple[str, ...]] = None
+    calibration: Optional[object] = None   # repro.calib Calibration overlay
     # live probe memo: probe-equivalence key -> measured TFLOP/s
     _probe_cache: Dict[Tuple, Optional[float]] = field(
         default_factory=dict, init=False, repr=False, compare=False)
@@ -400,20 +411,31 @@ class PlanSearch:
         return self.stage_balance != "tflops"
 
     def _subset_stats(self, subset: Tuple[int, ...]) -> _SubsetStats:
+        # every rate below reads through the calibration overlay so the
+        # dominance test compares what the evaluator will actually price
+        # — pruning would stop being lossless if it kept judging subsets
+        # by datasheet rates a calibration has overridden.  (min over
+        # per-site minima == flat min over the pool, float-exact, so the
+        # identity overlay changes nothing.)
         topo = self.topology
+        cal = self.calibration
         gpus = topo.all_gpus(subset)
-        span = tuple(topo.spanning_links(subset)) if len(subset) > 1 \
-            else (topo.sites[subset[0]].intra,)
+        span = tuple(_cal_spanning(cal, topo, subset)) if len(subset) > 1 \
+            else (_cal_intra(cal, topo, subset[0]),)
         corners = []
         for i in subset:
-            s = topo.sites[i]
-            k = len(s.gpus)
-            corners.append(((k - 1) * s.intra.latency_s,
-                            (k - 1) / k / s.intra.effective_gbps))
+            k = len(topo.sites[i].gpus)
+            intra = _cal_intra(cal, topo, i)
+            corners.append(((k - 1) * intra.latency_s,
+                            (k - 1) / k / intra.effective_gbps))
+        if cal is None:
+            min_tflops = min(g.tflops for g in gpus)
+        else:
+            min_tflops = min(cal.gpu_tflops(topo, i) for i in subset)
         return _SubsetStats(
             subset=subset,
             n_gpus=len(gpus),
-            min_tflops=min(g.tflops for g in gpus),
+            min_tflops=min_tflops,
             min_mem=min(g.mem_gb for g in gpus),
             max_lat=max(l.latency_s for l in span),
             min_eff=min(l.effective_gbps for l in span),
@@ -478,7 +500,7 @@ class PlanSearch:
         micro = self.wl.microbatches
 
         def edge_cost(a: int, b: int) -> float:
-            l = self.topology.link(a, b)
+            l = _cal_link(self.calibration, self.topology, a, b)
             return 2 * (act / (l.effective_gbps * 1e9)
                         + micro * l.latency_s)
 
@@ -507,7 +529,8 @@ class PlanSearch:
                           stage_balance=self.stage_balance,
                           schedule=cand.schedule,
                           carrier_dtype=self.carrier_dtype,
-                          wire_dtype=cand.wire_dtype)
+                          wire_dtype=cand.wire_dtype,
+                          calibration=self.calibration)
 
     def step_cost(self, cand: Candidate) -> StepCost:
         """The modelled ``StepCost`` behind ``evaluate`` — compute /
@@ -525,7 +548,8 @@ class PlanSearch:
             stage_layers=place.stage_layers,
             schedule=cand.schedule,
             carrier_dtype=self.carrier_dtype,
-            wire_dtype=cand.wire_dtype)
+            wire_dtype=cand.wire_dtype,
+            calibration=self.calibration)
 
     @staticmethod
     def probe_key(technique: str, placement: Optional[Placement]) -> Tuple:
@@ -570,7 +594,8 @@ class PlanSearch:
         _, virt = parse_schedule(schedule)
         n_chunks = len(order) * virt
         if self.stage_balance == "tflops":
-            tf = stage_compute_tflops(self.topology, order)
+            tf = stage_compute_tflops(self.topology, order,
+                                      self.calibration)
             weights = [tf[c % len(order)] for c in range(n_chunks)]
         else:
             weights = [1.0] * n_chunks
@@ -659,7 +684,8 @@ class PlanSearch:
                           stage_balance=self.stage_balance,
                           schedule="gpipe" if placement is None
                           else placement.schedule,
-                          carrier_dtype=self.carrier_dtype)
+                          carrier_dtype=self.carrier_dtype,
+                          calibration=self.calibration)
 
 
 # --------------------------------------------------------------------- #

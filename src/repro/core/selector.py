@@ -44,6 +44,9 @@ class Prober(Protocol):
 class CostModelProber:
     wl: Workload
     cluster: ClusterLike              # legacy two-VM Cluster or a Topology
+    # optional measured-rate overlay (repro.calib.overlay.Calibration);
+    # None and the identity overlay price bit-for-bit the analytic model
+    calibration: Optional[object] = None
 
     @property
     def n_sites(self) -> int:
@@ -52,12 +55,14 @@ class CostModelProber:
     def probe(self, technique: str, placement: Optional[Placement]
               ) -> Optional[float]:
         if placement is None:
-            return avg_tflops(technique, self.wl, self.cluster, None)
+            return avg_tflops(technique, self.wl, self.cluster, None,
+                              calibration=self.calibration)
         return avg_tflops(technique, self.wl, self.cluster,
                           list(placement.sites),
                           stage_order=placement.stage_order,
                           stage_layers=placement.stage_layers,
-                          schedule=placement.schedule)
+                          schedule=placement.schedule,
+                          calibration=self.calibration)
 
 
 # Failure modes that mean "this plan cannot run on this hardware" — the

@@ -1,0 +1,242 @@
+"""Measured-rate calibration (repro.calib): overlay semantics, the
+design-row linearity the fitter depends on, and the synthetic-ground-
+truth recovery guarantees — exact at zero noise, bounded under bounded
+multiplicative noise (docs/calibration.md)."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from prophelpers import given, settings, st
+
+from repro.calib.fit import (collective_sample, compute_sample,
+                             fit_calibration, row_dot, step_design_row,
+                             step_sample)
+from repro.calib.microbench import (RecordingProber,
+                                    synthetic_measurements)
+from repro.calib.overlay import Calibration, LinkRate, MeasuredLink
+from repro.configs import get_config
+from repro.core.costmodel import (ALL_TECHNIQUES, PAPER_CLUSTERS,
+                                  paper_workload, technique_step_cost)
+from repro.core.plans import Placement
+from repro.core.selector import CostModelProber
+from repro.core.topology import (Link, Site, hub, line, ring, two_site)
+
+WL_M = paper_workload(get_config("gpt2m"))
+A30X2 = two_site("a30x2", ("A30", "A30"), ("A30", "A30"), 20.2)
+
+
+def _sites(n, gpu="A30"):
+    return [Site((gpu, gpu), name=f"S{i}") for i in range(n)]
+
+
+def _topo(shape: str, n: int):
+    """The topology-zoo shapes the property tests sweep (N in 2..4)."""
+    if n == 2 or shape == "two":
+        return two_site("t2", ("A30", "A30"), ("T4", "T4"), 20.2)
+    wan = [Link(10e-3 * (k + 1), 2.0 + k) for k in range(n)]
+    if shape == "ring":
+        return ring("r", _sites(n), wan[:n])
+    if shape == "hub":
+        return hub("h", _sites(1)[0], _sites(n - 1, gpu="T4"), wan[0])
+    return line("l", _sites(n), wan[:n - 1])
+
+
+# ------------------------------------------------------------------ #
+# overlay semantics
+# ------------------------------------------------------------------ #
+
+def test_measured_link_skips_window_clamp():
+    """A fitted rate was measured *through* the TCP window, so
+    ``MeasuredLink`` must not re-apply the analytic clamp that
+    ``Link.effective_gbps`` applies to datasheet bandwidths."""
+    lat, bw = 57.4e-3, 10.0
+    assert Link(lat, bw).effective_gbps < bw          # clamp engages
+    assert MeasuredLink(lat, bw).effective_gbps == bw  # measured: no clamp
+    assert LinkRate(lat, bw).link() == MeasuredLink(lat, bw)
+
+
+def test_calibration_json_round_trip():
+    cal = Calibration(site_tflops={1: 15.0, 0: 23.5},
+                      links={(0, 1): LinkRate(22e-3, 2.4),
+                             (1, 1): LinkRate(4e-6, 11.0)},
+                      note="bench host, 2026-08")
+    back = Calibration.loads(cal.dumps())
+    assert back == cal
+    assert json.loads(cal.dumps()) == cal.to_json()   # stable text form
+    assert not cal.is_identity and Calibration.identity().is_identity
+
+
+def test_calibration_pair_keys_canonicalize():
+    cal = Calibration(links={(1, 0): LinkRate(1e-3, 5.0)})
+    topo = _topo("line", 3)
+    assert cal.link(topo, 0, 1) == cal.link(topo, 1, 0) \
+        == MeasuredLink(1e-3, 5.0)
+    # unmeasured pairs fall through to the very same analytic objects
+    assert cal.link(topo, 1, 2) is topo.link(1, 2)
+    assert cal.link(topo, 2, 2) is topo.sites[2].intra
+
+
+def test_identity_overlay_is_bit_for_bit_none():
+    """Every technique on every paper cluster: ``Calibration.identity()``
+    must price bit-for-bit (``==``, not isclose) what ``calibration=
+    None`` prices — the overlay only ever falls through."""
+    ident = Calibration.identity()
+    wl = WL_M
+    for cname, cluster in sorted(PAPER_CLUSTERS.items()):
+        for tech in ALL_TECHNIQUES:
+            for sel in ([0], [0, 1]):
+                kw = {"stage_order": tuple(sel)} \
+                    if tech == "pipeshard" else {}
+                if tech == "pipeshard" and len(sel) == 1:
+                    continue
+                a = technique_step_cost(tech, wl, cluster, sel, **kw)
+                b = technique_step_cost(tech, wl, cluster, sel,
+                                        calibration=ident, **kw)
+                assert (a.compute_s, a.comm_s, a.mem_required_gb) == \
+                    (b.compute_s, b.comm_s, b.mem_required_gb), \
+                    (cname, tech, sel)
+
+
+# ------------------------------------------------------------------ #
+# design-row linearity
+# ------------------------------------------------------------------ #
+
+TRUTH = Calibration(site_tflops={0: 17.0, 1: 9.0},
+                    links={(0, 0): LinkRate(6e-6, 9.0),
+                           (0, 1): LinkRate(25e-3, 1.7)},
+                    note="truth")
+
+
+@pytest.mark.parametrize("tech", sorted(ALL_TECHNIQUES))
+@pytest.mark.parametrize("sel", [(0,), (0, 1)])
+def test_step_design_row_reproduces_step_cost(tech, sel):
+    """``row_dot(step_design_row(...), cal)`` must reproduce
+    ``technique_step_cost(..., calibration=cal).total_s`` — the
+    linearity (at fixed max/argmax structure) the whole fitter rests
+    on."""
+    if tech == "pipeshard" and len(sel) == 1:
+        pytest.skip("1-stage pipeline degenerates")
+    kw = {"stage_order": sel} if tech == "pipeshard" else {}
+    want = technique_step_cost(tech, WL_M, A30X2, sel,
+                               calibration=TRUTH, **kw).total_s
+    row = step_design_row(tech, WL_M, A30X2, sel, calibration=TRUTH,
+                          **kw)
+    got = row_dot(row, TRUTH, A30X2)
+    assert math.isclose(got, want, rel_tol=1e-9), (tech, sel)
+
+
+def test_recording_prober_pools_step_samples():
+    """RecordingProber converts each successful probe's TFLOP/s figure
+    back to the step seconds it came from, so ε-epoch probes become
+    fitter rows instead of being thrown away."""
+    inner = CostModelProber(WL_M, A30X2)
+    rec = RecordingProber(inner, WL_M)
+    t = rec.probe("data", Placement((0,)))
+    assert t == inner.probe("data", Placement((0,)))
+    assert rec.probe("data", None) == inner.probe("data", None)
+    assert len(rec.samples) == 1                 # placement=None skipped
+    (s,) = rec.samples
+    assert s.kind == "step" and s.technique == "data" and s.sites == (0,)
+    assert math.isclose(s.time_s, WL_M.flops_per_step / (t * 1e12))
+
+
+# ------------------------------------------------------------------ #
+# synthetic-ground-truth recovery
+# ------------------------------------------------------------------ #
+
+def _max_rel_err(fitted: Calibration, truth: Calibration, topo) -> float:
+    err = 0.0
+    for i in truth.site_tflops:
+        err = max(err, abs(fitted.gpu_tflops(topo, i)
+                           / truth.gpu_tflops(topo, i) - 1.0))
+    for (i, j) in truth.links:
+        f, t = fitted.link(topo, i, j), truth.link(topo, i, j)
+        err = max(err, abs(f.latency_s / t.latency_s - 1.0),
+                  abs(f.effective_gbps / t.effective_gbps - 1.0))
+    return err
+
+
+def _full_truth(topo, rng) -> Calibration:
+    """A random full-coverage ground truth: every site's achieved rate
+    and every (intra + end-to-end inter) pair overridden."""
+    n = topo.n_sites
+    sites = {i: float(rng.uniform(5.0, 30.0)) for i in range(n)}
+    links = {}
+    for i in range(n):
+        links[(i, i)] = LinkRate(float(rng.uniform(1e-6, 1e-4)),
+                                 float(rng.uniform(5.0, 20.0)))
+        for j in range(i + 1, n):
+            links[(i, j)] = LinkRate(float(rng.uniform(1e-3, 60e-3)),
+                                     float(rng.uniform(0.5, 4.0)))
+    return Calibration(sites, links, note="synthetic truth")
+
+
+def test_fit_recovers_truth_exactly_at_zero_noise():
+    topo = A30X2
+    rng = np.random.default_rng(11)
+    truth = _full_truth(topo, rng)
+    samples = synthetic_measurements(
+        topo, truth, rng=rng, noise=0.0, wl=WL_M,
+        step_placements=[("data", (0,), {}), ("zero2", (0, 1), {}),
+                         ("pipeshard", (0, 1),
+                          {"stage_order": (0, 1)})])
+    fr = fit_calibration(topo, samples)
+    assert fr.residual < 1e-9
+    assert _max_rel_err(fr.calibration, truth, topo) < 1e-9
+
+
+def test_fit_recovery_error_is_noise_bounded():
+    """2% multiplicative noise must not blow recovery past a few
+    percent (the least-squares average beats the worst sample)."""
+    topo = A30X2
+    rng = np.random.default_rng(3)
+    truth = _full_truth(topo, rng)
+    samples = synthetic_measurements(topo, truth, rng=rng, noise=0.02)
+    fr = fit_calibration(topo, samples)
+    assert _max_rel_err(fr.calibration, truth, topo) < 0.05
+
+
+def test_fit_rejects_empty_measurement_set():
+    with pytest.raises(ValueError):
+        fit_calibration(A30X2, [])
+
+
+def test_fit_keeps_base_for_unmeasured_coefficients():
+    """Half-measured sets must not invent rates: coefficients with no
+    sample keep the base overlay's (here: analytic) values."""
+    topo = A30X2
+    samples = [compute_sample(0, 1e12, 1e12 / (15.0 * 1e12))]
+    fr = fit_calibration(topo, samples)
+    cal = fr.calibration
+    assert math.isclose(cal.gpu_tflops(topo, 0), 15.0, rel_tol=1e-9)
+    assert math.isclose(cal.gpu_tflops(topo, 1), 25.0)   # datasheet
+    assert cal.link(topo, 0, 1) == topo.link(0, 1)       # untouched
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=st.sampled_from(["ring", "hub", "line"]),
+       n=st.integers(min_value=2, max_value=4),
+       noise=st.sampled_from([0.0, 0.01, 0.03]),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_fit_recovery_property(shape, n, noise, seed):
+    """The acceptance property (ISSUE 9): on random workloads over the
+    topology zoo (ring / hub / line, N in 2..4) with a random
+    full-coverage ground truth, the fitter recovers the truth exactly
+    at zero noise and within a noise-proportional band under bounded
+    multiplicative noise."""
+    topo = _topo(shape, n)
+    rng = np.random.default_rng(seed)
+    truth = _full_truth(topo, rng)
+    steps = [("data", tuple(range(topo.n_sites)), {})]
+    if topo.n_sites >= 2:
+        steps.append(("pipeshard", (0, 1), {"stage_order": (0, 1)}))
+    samples = synthetic_measurements(topo, truth, rng=rng, noise=noise,
+                                     wl=WL_M, step_placements=steps)
+    fr = fit_calibration(topo, samples)
+    err = _max_rel_err(fr.calibration, truth, topo)
+    if noise == 0.0:
+        assert err < 1e-9
+    else:
+        assert err < max(10.0 * noise, 0.05)

@@ -1,0 +1,173 @@
+"""The identity-calibration differential gate (ISSUE 9): an empty
+``Calibration`` overlay must leave every pinned selection of PRs 1-8
+bit-for-bit unchanged — same winners, same ``==``-equal prices — and a
+pinned non-identity overlay (an A30 cell achieving 60% of datasheet)
+must flip a known cell, with the *fitted* overlay reproducing the
+ground-truth-priced search exactly (docs/calibration.md §4)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.calib.fit import fit_calibration
+from repro.calib.microbench import synthetic_measurements
+from repro.calib.overlay import Calibration, LinkRate
+from repro.configs import get_config
+from repro.core.costmodel import (ALL_TECHNIQUES, PAPER_CLUSTERS,
+                                  paper_workload, technique_step_cost)
+from repro.core.search import PlanSearch
+from repro.core.selector import CostModelProber, select_technique
+from repro.core.topology import Link, Site, line, two_site
+
+from benchmarks.paper_alg1 import PAPER_EXPECTED
+
+WL_M = paper_workload(get_config("gpt2m"))
+IDENT = Calibration.identity()
+WIRE_POOL = ("fp32", "bf16", "int8")
+
+
+def _sites(n, gpu="A30"):
+    return [Site((gpu, gpu), name=f"S{i}") for i in range(n)]
+
+
+def _ranked(search: PlanSearch):
+    return [(s.candidate.key, s.tflops) for s in search.search()]
+
+
+# ------------------------------------------------------------------ #
+# identity leaves every pinned gate bit-for-bit
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("cname,mname", sorted(PAPER_EXPECTED))
+def test_identity_keeps_table2_selections(cname, mname):
+    """All 10 Algorithm-1 Table-II winners: probing through the identity
+    overlay must reproduce the uncalibrated selection — technique, VM
+    list, and every probe value ``==``-equal."""
+    wl = paper_workload(get_config(mname))
+    cluster = PAPER_CLUSTERS[cname]
+    base = select_technique(CostModelProber(wl, cluster), delta=0.1)
+    cal = select_technique(CostModelProber(wl, cluster, calibration=IDENT),
+                           delta=0.1)
+    assert (cal.technique, cal.vms) == (base.technique, base.vms)
+    assert cal.probes == base.probes
+    key = (base.technique, tuple(base.vms) if base.vms else None)
+    assert key in PAPER_EXPECTED[(cname, mname)]
+
+
+def test_identity_keeps_1f1b_memory_flip():
+    """The PR-4 pinned gate: gpt2L@52 on a 3-site RTX line flips to
+    Pipeshard under 1F1B's smaller stash.  The identity overlay must
+    reproduce the flip and the full ranked list bit-for-bit."""
+    wl = paper_workload(get_config("gpt2L"), global_batch=52)
+    topo = line("rtx3", _sites(3, gpu="RTX"), [Link(57.4e-3, 3.0)] * 2)
+    base = PlanSearch(wl, topo)
+    cal = PlanSearch(wl, topo, calibration=IDENT)
+    assert _ranked(base) == _ranked(cal)
+    best = cal.best()
+    assert (best.candidate.technique, best.candidate.schedule) == \
+        ("pipeshard", "1f1b")
+
+
+def test_identity_keeps_fsdp_and_shard_zero_gates():
+    """The PR-5 pinned gates: fsdp rescues TACC-TACC gpt2L; shard_zero
+    wins the T4 metro line — identical under the identity overlay."""
+    wl = paper_workload(get_config("gpt2L"))
+    c = PAPER_CLUSTERS["TACC-TACC"]
+    base = PlanSearch.for_cluster(wl, c, techniques=ALL_TECHNIQUES)
+    cal = PlanSearch.for_cluster(wl, c, techniques=ALL_TECHNIQUES,
+                                 calibration=IDENT)
+    assert _ranked(base) == _ranked(cal)
+    assert cal.best().candidate.technique == "fsdp"
+
+    topo = line("lan3", _sites(3, gpu="T4"), [Link(0.1e-3, 3.0)] * 2)
+    base = PlanSearch(wl, topo, techniques=ALL_TECHNIQUES)
+    cal = PlanSearch(wl, topo, techniques=ALL_TECHNIQUES,
+                     calibration=IDENT)
+    assert _ranked(base) == _ranked(cal)
+    assert cal.best().candidate.technique == "shard_zero"
+
+
+def test_identity_keeps_int8_wire_flip():
+    """The PR-6 pinned gate: the regional A30 cell flips data ->
+    pipeshard~int8 when the wire pool widens — identical rankings
+    through the identity overlay."""
+    topo = two_site("a30x2", ("A30", "A30"), ("A30", "A30"), 20.2)
+    base = PlanSearch(WL_M, topo, wire_dtypes=WIRE_POOL)
+    cal = PlanSearch(WL_M, topo, wire_dtypes=WIRE_POOL,
+                     calibration=IDENT)
+    assert _ranked(base) == _ranked(cal)
+    assert cal.best().candidate.key == "pipeshard@V1+V2~int8"
+
+
+# ------------------------------------------------------------------ #
+# a pinned non-identity overlay flips a known cell
+# ------------------------------------------------------------------ #
+
+# the paper's regional two-A30-site cell (Table I RTT), whose winner at
+# datasheet rates is single-site Data
+FLIP_TOPO = two_site("a30x2", ("A30", "A30"), ("A30", "A30"), 20.2)
+# a cluster whose A30s achieve 60% of datasheet (15 of 25 TFLOP/s) —
+# measured comm rates unchanged, so compute's share of every step grows
+# and the 4-GPU pipeline overtakes the 2-GPU single-site plan
+SLOW_A30 = Calibration(site_tflops={0: 15.0, 1: 15.0},
+                       note="A30s at 60% of datasheet")
+
+
+def test_slow_a30_calibration_flips_regional_cell():
+    """The pinned calibration flip (ISSUE 9): at datasheet rates the
+    regional A30 cell picks data@V1; under the 60%-of-datasheet
+    overlay the winner flips to pipeshard@V1+V2 — slower compute with
+    unchanged links shifts the balance toward the plan that halves the
+    per-GPU compute share."""
+    base = PlanSearch(WL_M, FLIP_TOPO).best()
+    assert base.candidate.key == "data@V1"
+    slow = PlanSearch(WL_M, FLIP_TOPO, calibration=SLOW_A30).best()
+    assert slow.candidate.key == "pipeshard@V1+V2"
+    # sanity: the slow cluster is slower in absolute terms
+    assert slow.tflops < base.tflops
+
+
+def test_fitted_overlay_search_matches_ground_truth_search():
+    """Close the loop: fit an overlay from zero-noise synthetic
+    measurements generated by the slow-A30 ground truth (plus a
+    measured WAN), then search under the *fitted* overlay — the ranked
+    candidate keys must equal the ground-truth-priced search's and the
+    flip must reproduce."""
+    truth = Calibration(site_tflops={0: 15.0, 1: 15.0},
+                        links={(0, 1): LinkRate(22e-3, 2.4)},
+                        note="ground truth")
+    rng = np.random.default_rng(7)
+    samples = synthetic_measurements(
+        FLIP_TOPO, truth, rng=rng, noise=0.0, wl=WL_M,
+        step_placements=[("data", (0,), {}), ("zero2", (0, 1), {}),
+                         ("pipeshard", (0, 1),
+                          {"stage_order": (0, 1)})])
+    fitted = fit_calibration(FLIP_TOPO, samples).calibration
+    gt = PlanSearch(WL_M, FLIP_TOPO, calibration=truth).search()
+    ft = PlanSearch(WL_M, FLIP_TOPO, calibration=fitted).search()
+    assert [s.candidate.key for s in gt] == [s.candidate.key for s in ft]
+    for g, f in zip(gt, ft):
+        if g.tflops is None:
+            assert f.tflops is None
+        else:
+            assert math.isclose(g.tflops, f.tflops, rel_tol=1e-9)
+
+
+def test_calibrated_pruning_stays_lossless():
+    """Dominance pruning reads rates through the overlay, so the pruned
+    search must still equal the exhaustive one under a calibration that
+    reverses which subset dominates (site 1's T4s measured faster than
+    site 0's A30s)."""
+    topo = two_site("mix", ("A30", "A30"), ("T4", "T4"), 20.2)
+    cal = Calibration(site_tflops={0: 6.0, 1: 18.0},
+                      links={(1, 1): LinkRate(1e-6, 30.0)})
+    s = PlanSearch(WL_M, topo, techniques=ALL_TECHNIQUES,
+                   calibration=cal)
+    pruned = {(c.candidate.key, c.tflops) for c in s.search(prune=True)
+              if c.feasible}
+    exact = {(c.candidate.key, c.tflops) for c in s.search(prune=False)
+             if c.feasible}
+    best_p = max(pruned, key=lambda kv: kv[1])
+    best_e = max(exact, key=lambda kv: kv[1])
+    assert best_p == best_e
+    assert pruned <= exact

@@ -1,0 +1,53 @@
+"""The kernel-bench numerics gate (ISSUE 9 satellite): a drift failure
+must be actionable from the message alone — it names the kernel, the
+measured-vs-threshold comparison, and the pinned operand PRNG seed, so
+a red CI line reproduces without digging through the harness."""
+import math
+
+import pytest
+
+from benchmarks.kernel_bench import SEED, drift_fail_message
+
+
+def test_drift_message_names_kernel_measured_threshold_and_seed():
+    msg = drift_fail_message("int8_matmul", "rel error vs fp32",
+                             0.137, ">", 0.02)
+    assert "CLAIM-FAIL[int8_matmul]" in msg
+    assert "0.137" in msg and "> threshold 0.02" in msg
+    assert f"(seed={SEED})" in msg
+    assert "broken kernel" in msg
+
+    msg = drift_fail_message("flash_attention_int8kv",
+                             "cosine vs fp32 flash", 0.51234, "<", 0.999)
+    assert "CLAIM-FAIL[flash_attention_int8kv]" in msg
+    assert "0.51234" in msg and "< threshold 0.999" in msg
+    assert f"(seed={SEED})" in msg
+
+
+def test_broken_int8_matmul_fails_with_named_message(monkeypatch,
+                                                     tmp_path):
+    """End-to-end regression: a kernel whose numerics drift (here: an
+    int8_matmul stubbed to return zeros) must fail the run (non-zero
+    return) and print the standardized message carrying its name, the
+    measured error, the 0.02 threshold, and the seed."""
+    jnp = pytest.importorskip("jax.numpy")
+    from benchmarks import kernel_bench
+    from repro.kernels import ops
+
+    real = ops.int8_matmul
+
+    def zeroed(x, w, **kw):
+        return jnp.zeros_like(real(x, w, **kw))
+
+    monkeypatch.setattr(ops, "int8_matmul", zeroed)
+    lines = []
+    n_fail = kernel_bench.run(print_fn=lines.append, out=str(tmp_path))
+    assert n_fail == 1
+    fails = [l for l in lines if l.startswith("CLAIM-FAIL")]
+    assert len(fails) == 1
+    (msg,) = fails
+    assert "CLAIM-FAIL[int8_matmul]" in msg
+    assert "> threshold 0.02" in msg
+    assert f"(seed={SEED})" in msg
+    # zeroed output => rel error is exactly 1, and the message carries it
+    assert " 1 > " in msg
