@@ -10,7 +10,11 @@ measured-trajectory item), runs the chaos recovery bench
 (``benchmarks/chaos_bench.py``), which writes ``BENCH_7.json``,
 summarizes the static-analysis run (``repro.analysis``) into
 ``BENCH_8.json``, and closes the measured-rate calibration loop
-(``benchmarks/calib_bench.py``), which writes ``BENCH_9.json``.
+(``benchmarks/calib_bench.py``), which writes ``BENCH_9.json``, runs
+the continuous-batching serving bench (``benchmarks/serving_bench.py``,
+``BENCH_10.json``), and finally re-checks every collected BENCH file's
+pinned gate via ``benchmarks/trajectory.py`` so a regression in any
+prior PR's promised metric fails this run.
 Exit code = number of failed paper-claim checks.
 """
 from __future__ import annotations
@@ -154,6 +158,14 @@ def main() -> None:
     print("\n===== calib_bench (BENCH_9.json, profile->refit loop) =====")
     import benchmarks.calib_bench as calib_bench
     n_fail += calib_bench.run()
+
+    print("\n===== serving_bench (BENCH_10.json, smoke) =====")
+    import benchmarks.serving_bench as serving_bench
+    n_fail += serving_bench.run(smoke=True)
+
+    print("\n===== trajectory (BENCH_6.. gate re-check) =====")
+    import benchmarks.trajectory as trajectory
+    n_fail += trajectory.run()
 
     if args.sweep:
         import subprocess

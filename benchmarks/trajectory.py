@@ -1,0 +1,128 @@
+"""Perf-trajectory collector: every repo-root ``BENCH_<N>.json`` (one
+per perf PR, 6 onward) folded into a single per-PR history table, with
+each file's *gated* metrics re-checked so a regression in any PR's
+pinned claim fails the newest run loudly.
+
+The gate registry below is the authoritative list of what each BENCH
+file promised when it landed:
+
+  6  — the int8 wire sweep produced at least one int8-wire winner cell
+  7  — the chaos sweep's live recovery gate passed (all checks true)
+  8  — the static-analysis run exited 0 (no non-baselined findings)
+  9  — the calibration closed loop tightened: refit error < analytic
+  10 — continuous-batching goodput >= 2x fixed on the mixed trace,
+       live greedy tokens bit-exact, and the placement winner map keeps
+       the far site local while the LAN pair shares a replica
+
+Emits ``benchmarks/out/trajectory.{json,md}``.  Exit code = number of
+gate failures across all collected files (a missing file is skipped
+with a warning, not failed — older artifacts regenerate via
+``benchmarks/run.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Callable, Dict, List, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.sweep_common import write_outputs
+
+
+def _gate_6(d: dict) -> Tuple[bool, str]:
+    n = d["wire_sweep"]["n_int8_winners"]
+    return n >= 1, f"{n} int8-wire winner cell(s)"
+
+
+def _gate_7(d: dict) -> Tuple[bool, str]:
+    live = d["chaos"].get("live_gate") or {}
+    ok = bool(live.get("ok"))
+    bad = [k for k, v in (live.get("checks") or {}).items() if not v]
+    return ok, "recovery checks all pass" if ok else f"failed: {bad}"
+
+
+def _gate_8(d: dict) -> Tuple[bool, str]:
+    code = d["exit_code"]
+    return code == 0, f"analysis exit_code {code}"
+
+
+def _gate_9(d: dict) -> Tuple[bool, str]:
+    err = d["closed_loop"]["search_vs_measured_error"]
+    ok = err["after"] < err["before"]
+    return ok, f"refit error {err['after']} vs analytic {err['before']}"
+
+
+def _gate_10(d: dict) -> Tuple[bool, str]:
+    g = d["gates"]
+    need = ("goodput_ratio_ge_2", "bit_exact", "far_site_local",
+            "lan_pair_shared")
+    bad = [k for k in need if g.get(k) is not True]
+    ratio = d["trace"]["overload"]["goodput_tok_s"]["ratio"]
+    return not bad, f"goodput x{ratio}" if not bad else f"failed: {bad}"
+
+
+#: pr number -> (gate_fn, short metric description for the table)
+GATES: Dict[int, Tuple[Callable[[dict], Tuple[bool, str]], str]] = {
+    6: (_gate_6, "int8 wire winners >= 1"),
+    7: (_gate_7, "chaos live recovery ok"),
+    8: (_gate_8, "static analysis clean"),
+    9: (_gate_9, "calib refit < analytic err"),
+    10: (_gate_10, "serving goodput >= 2x + bit-exact + winner map"),
+}
+
+
+def collect(root: str = _ROOT, print_fn=print) -> Tuple[List[dict], int]:
+    """Check every registered BENCH file; returns (rows, n_fail)."""
+    rows: List[dict] = []
+    n_fail = 0
+    for pr in sorted(GATES):
+        gate_fn, desc = GATES[pr]
+        path = os.path.join(root, f"BENCH_{pr}.json")
+        if not os.path.exists(path):
+            print_fn(f"trajectory: BENCH_{pr}.json missing — skipped "
+                     f"(regenerate via benchmarks/run.py)")
+            rows.append({"pr": pr, "gate": desc, "ok": None,
+                         "detail": "missing"})
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        try:
+            ok, detail = gate_fn(d)
+        except (KeyError, TypeError) as e:
+            ok, detail = False, f"malformed ({e!r})"
+        rows.append({"pr": pr, "gate": desc, "ok": ok, "detail": detail,
+                     "source": d.get("source", "?")})
+        if not ok:
+            n_fail += 1
+            print_fn(f"TRAJECTORY-FAIL: BENCH_{pr}.json — {desc}: {detail}")
+    return rows, n_fail
+
+
+def run(print_fn=print) -> int:
+    rows, n_fail = collect(print_fn=print_fn)
+    mark = {True: "pass", False: "FAIL", None: "—"}
+    md = ["# Perf trajectory (BENCH_6..)", "",
+          "| PR | gated metric | status | detail |",
+          "|---:|---|---|---|"]
+    for r in rows:
+        md.append(f"| {r['pr']} | {r['gate']} | {mark[r['ok']]} "
+                  f"| {r['detail']} |")
+        print_fn(f"  PR {r['pr']:>2} [{mark[r['ok']]:>4}] "
+                 f"{r['gate']}: {r['detail']}")
+    record = {"rows": rows, "n_fail": n_fail}
+    write_outputs(os.path.join(_ROOT, "benchmarks", "out"), "trajectory",
+                  record, "\n".join(md) + "\n", print_fn=print_fn)
+    return n_fail
+
+
+def main() -> None:
+    sys.exit(run())
+
+
+if __name__ == "__main__":
+    main()

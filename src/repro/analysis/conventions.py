@@ -36,12 +36,14 @@ NONE, UNKNOWN = "", "?"
 
 #: files under the CONV001 unit-algebra lint: the cost model and the
 #: calibration stack that prices against it (overlay rates, fitter
-#: design rows, micro-bench timings — all carry unit-suffixed names)
+#: design rows, micro-bench timings — all carry unit-suffixed names),
+#: plus the serving placement pass built on those prices
 _COST_RELS = (
     os.path.join("src", "repro", "core", "costmodel.py"),
     os.path.join("src", "repro", "calib", "overlay.py"),
     os.path.join("src", "repro", "calib", "fit.py"),
     os.path.join("src", "repro", "calib", "microbench.py"),
+    os.path.join("src", "repro", "serve", "placement.py"),
 )
 
 

@@ -641,6 +641,41 @@ class PlanSearch:
         return top[0] if top and top[0].feasible else None
 
     # ------------------------------------------------------------- #
+    def restricted(self, sites: Sequence[int]
+                   ) -> Tuple["PlanSearch", Tuple[int, ...]]:
+        """A search over only the sub-topology spanned by ``sites``.
+
+        The replica-placement objective (``serve/placement.py``) prices
+        each candidate replica group through this: same workload and
+        knobs, the topology cut down to the group, and the
+        ``Calibration`` overlay's site/pair keys remapped to the dense
+        sub-topology indices (sparse entries for dropped sites vanish;
+        everything else keeps falling through to analytic rates).
+
+        Returns:
+            ``(search, kept)`` — ``kept[new_index] == old_index`` maps
+            the sub-search's site numbering back to this topology's.
+        """
+        import dataclasses as _dc
+        keep = set(self.topology.select(tuple(sites)))
+        dead = [i for i in range(self.topology.n_sites) if i not in keep]
+        sub, kept = self.topology.without_sites(dead)
+        calib = self.calibration
+        if calib is not None and dead:
+            from repro.calib.overlay import Calibration
+            remap = {old: new for new, old in enumerate(kept)}
+            calib = Calibration(
+                site_tflops={remap[i]: v
+                             for i, v in calib.site_tflops.items()
+                             if i in remap},
+                links={(min(remap[i], remap[j]), max(remap[i], remap[j])): r
+                       for (i, j), r in calib.links.items()
+                       if i in remap and j in remap},
+                note=calib.note)
+        return _dc.replace(self, topology=sub, calibration=calib,
+                           probe_fn=None), kept
+
+    # ------------------------------------------------------------- #
     def select(self, *, delta: float = 0.1,
                extended: Optional[bool] = None) -> "Selection":
         """Generalized Algorithm 1 over this topology (paper probe set +

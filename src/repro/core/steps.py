@@ -196,13 +196,29 @@ def build_train_step(model: Model, plan: Plan, mesh: Mesh,
 
 def build_prefill_step(model: Model, plan: Plan, mesh: Mesh, *,
                        params_shapes, batch_shapes, cache_shapes,
-                       batch_size: int, window: int = 0):
+                       batch_size: int, window: int = 0,
+                       gather_last: bool = False):
+    """``gather_last`` (continuous batching): the returned step takes an
+    extra traced ``last_pos`` scalar and reads logits at that position —
+    one compile per prompt-length *bucket* instead of per prompt length
+    (the pad tail past ``last_pos`` is causally invisible)."""
     cfg = model.cfg
     _set_logits_spec(model, plan, mesh, batch_size)
     _set_moe_dispatch(model, plan, mesh, batch_size)
     p_sh = _ns(mesh, plan.param_specs(params_shapes, cfg, mesh))
     b_sh = _ns(mesh, plan.batch_spec(batch_shapes, mesh))
     c_sh = plan.cache_shardings(cache_shapes, cfg, mesh, batch_size)
+
+    if gather_last:
+        def prefill_at(params, batch, cache, last_pos):
+            return model.prefill(params, batch, cache, window=window,
+                                 last_pos=last_pos)
+
+        return jax.jit(prefill_at,
+                       in_shardings=(p_sh, b_sh, c_sh,
+                                     NamedSharding(mesh, P())),
+                       out_shardings=(None, c_sh)), {
+                           "params": p_sh, "batch": b_sh, "cache": c_sh}
 
     def prefill(params, batch, cache):
         return model.prefill(params, batch, cache, window=window)
@@ -234,6 +250,96 @@ def build_serve_step(model: Model, plan: Plan, mesh: Mesh, *,
 
     return jax.jit(serve_step,
                    in_shardings=(p_sh, c_sh, tok_sh),
+                   out_shardings=(None, tok_sh, c_sh),
+                   donate_argnums=(1,)), {
+                       "params": p_sh, "cache": c_sh, "tokens": tok_sh}
+
+
+def _is_index_path(path) -> bool:
+    return any(getattr(p, "name", "") == "index" for p in path)
+
+
+def build_insert_step(model: Model, plan: Plan, mesh: Mesh, *,
+                      cache_shapes, src_cache_shapes, batch_size: int):
+    """Prefill-insert for continuous batching: scatter one freshly
+    prefilled request (a batch-1 cache from ``build_prefill_step``) into
+    slot ``slot`` of the live per-slot decode cache
+    (``Model.init_slot_cache``).
+
+    ``length`` is the request's true prompt length: it overwrites the
+    slot's ``index`` entries (the prefill cache holds the padded bucket
+    length there), so the pad tail past it stays masked out of attention
+    and the next decode append overwrites the first pad position.  The
+    destination cache is donated — the scatter is in-place.
+    """
+    cfg = model.cfg
+    dst_sh = plan.cache_shardings(cache_shapes, cfg, mesh, batch_size)
+    src_sh = plan.cache_shardings(src_cache_shapes, cfg, mesh, 1)
+    scalar_sh = NamedSharding(mesh, P())
+
+    def insert(dst, src, slot, length):
+        def leaf(path, d, s):
+            if _is_index_path(path):
+                # dst: [layers..., B] per-slot indices; the src cache's
+                # shared per-layer index is replaced by the true length
+                return d.at[..., slot].set(jnp.asarray(length, d.dtype))
+            # batch dim: where dst (B) and src (1) disagree; equal-shape
+            # leaves fall back to the cache_spec size convention
+            b_dim = next((i for i, (a, b) in enumerate(zip(d.shape, s.shape))
+                          if a != b), None)
+            if b_dim is None:
+                b_dim = next((i for i, n in enumerate(d.shape)
+                              if n == batch_size), None)
+            if b_dim is None:       # batch-free leaf (shared state)
+                return d
+            return jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), slot, b_dim)
+
+        return jax.tree_util.tree_map_with_path(leaf, dst, src)
+
+    return jax.jit(insert,
+                   in_shardings=(dst_sh, src_sh, scalar_sh, scalar_sh),
+                   out_shardings=dst_sh,
+                   donate_argnums=(0,)), {"cache": dst_sh, "src": src_sh}
+
+
+def build_decode_slots_step(model: Model, plan: Plan, mesh: Mesh, *,
+                            params_shapes, cache_shapes, batch_size: int,
+                            window: int = 0, pad_id: int = 0):
+    """One decode step over the persistent slot cache (continuous
+    batching).  Beyond ``build_serve_step`` it takes a ``live`` [B] bool
+    mask: dead (evicted, not yet backfilled) slots emit ``pad_id`` and
+    their per-slot cache indices are frozen, so an evicted slot's ring
+    state cannot drift between eviction and the insert that recycles it.
+    """
+    cfg = model.cfg
+    _set_logits_spec(model, plan, mesh, batch_size)
+    _set_moe_dispatch(model, plan, mesh, batch_size)
+    p_sh = _ns(mesh, plan.param_specs(params_shapes, cfg, mesh))
+    c_sh = plan.cache_shardings(cache_shapes, cfg, mesh, batch_size)
+    axes = plan.batch_axes(mesh, batch_size)
+    b_ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+    tok_sh = NamedSharding(mesh, P(b_ax))
+    live_sh = NamedSharding(mesh, P(b_ax))
+
+    def decode_slots(params, cache, tokens, live):
+        logits, new_cache = model.decode_step(params, cache, tokens,
+                                              window=window)
+
+        def freeze(path, new, old):
+            if _is_index_path(path):
+                return jnp.where(live, new, old)   # [..., B] broadcast
+            return new
+
+        new_cache = jax.tree_util.tree_map_with_path(freeze, new_cache,
+                                                     cache)
+        next_tok = jnp.where(live[:, None],
+                             jnp.argmax(logits, axis=-1)[:, None],
+                             pad_id).astype(jnp.int32)
+        return logits, next_tok, new_cache
+
+    return jax.jit(decode_slots,
+                   in_shardings=(p_sh, c_sh, tok_sh, live_sh),
                    out_shardings=(None, tok_sh, c_sh),
                    donate_argnums=(1,)), {
                        "params": p_sh, "cache": c_sh, "tokens": tok_sh}

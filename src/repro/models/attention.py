@@ -134,6 +134,36 @@ def chunked_attention(
 # decode attention over a (possibly ring-buffered) KV cache
 # --------------------------------------------------------------------- #
 
+def _ring_valid(index, batch: int, capacity: int):
+    """Filled-slot mask [batch, capacity] for a ring index that is either
+    a scalar (one write position shared by the whole batch — the fixed
+    -batch engine) or per-slot ``[batch]`` (continuous batching, where
+    every slot tracks its own fill; serve/engine.ContinuousEngine)."""
+    slots = jnp.arange(capacity, dtype=jnp.int32)
+    filled = jnp.minimum(index, capacity)
+    if index.ndim == 0:
+        return jnp.broadcast_to(slots[None, :] < filled, (batch, capacity))
+    return slots[None, :] < filled[:, None]
+
+
+def _append_token(buf, new, slot):
+    """Write one token's row (``new``: [B, 1, ...]) into ``buf``
+    ([B, S, ...]) at ring position ``slot`` — a scalar (shared index) or
+    per-slot ``[B]`` vector (each batch row writes its own position)."""
+    new = new.astype(buf.dtype)
+    if slot.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, slot, 1)
+    return jax.vmap(
+        lambda b, n, s: jax.lax.dynamic_update_slice_in_dim(b, n, s, 0)
+    )(buf, new, slot)
+
+
+def _decode_positions(index):
+    """RoPE positions [*, 1] of the token being decoded: the cache index
+    broadcast ([1, 1]) for a scalar index, per-slot [B, 1] otherwise."""
+    return index[None, None] if index.ndim == 0 else index[:, None]
+
+
 def decode_attention(q, k_cache, v_cache, valid_mask):
     """One-token attention. q: [B, 1, H, Dk]; caches [B, S, KV, D*];
     valid_mask: [B, S] bool marking filled slots."""
@@ -153,7 +183,9 @@ class KVCache(NamedTuple):
     """Ring-buffered KV cache (window=0 => plain cache of full length)."""
     k: jax.Array          # [B, S, KV, Dk]
     v: jax.Array          # [B, S, KV, Dv]
-    index: jax.Array      # scalar int32: next write position (total tokens)
+    index: jax.Array      # int32 next write position (total tokens):
+                          # scalar (shared) or [B] (per-slot, continuous
+                          # batching)
 
     @property
     def capacity(self) -> int:
@@ -170,10 +202,7 @@ class KVCache(NamedTuple):
             last >= 0, last, -1), jnp.where(last >= n - S, last, -1))
 
     def valid(self, batch: int):
-        S = self.capacity
-        slots = jnp.arange(S, dtype=jnp.int32)
-        filled = jnp.where(self.index >= S, S, self.index)
-        return jnp.broadcast_to(slots[None, :] < filled, (batch, S))
+        return _ring_valid(self.index, batch, self.capacity)
 
 
 def init_kv_cache(batch: int, capacity: int, kv_heads: int, dk: int, dv: int,
@@ -188,8 +217,8 @@ def init_kv_cache(batch: int, capacity: int, kv_heads: int, dk: int, dv: int,
 def cache_append(cache: KVCache, k_new, v_new) -> KVCache:
     """Append one token (k_new/v_new: [B, 1, KV, D]) at the ring position."""
     slot = jnp.mod(cache.index, cache.capacity)
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, 1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, 1)
+    k = _append_token(cache.k, k_new, slot)
+    v = _append_token(cache.v, v_new, slot)
     return KVCache(k=k, v=v, index=cache.index + 1)
 
 
@@ -207,17 +236,14 @@ class QuantKVCache(NamedTuple):
     k_scale: jax.Array    # [B, S, KV] fp32
     v_q: jax.Array        # [B, S, KV, Dv] int8
     v_scale: jax.Array    # [B, S, KV] fp32
-    index: jax.Array      # scalar int32: next write position (total tokens)
+    index: jax.Array      # int32 next write position: scalar or [B]
 
     @property
     def capacity(self) -> int:
         return self.k_q.shape[1]
 
     def valid(self, batch: int):
-        S = self.capacity
-        slots = jnp.arange(S, dtype=jnp.int32)
-        filled = jnp.where(self.index >= S, S, self.index)
-        return jnp.broadcast_to(slots[None, :] < filled, (batch, S))
+        return _ring_valid(self.index, batch, self.capacity)
 
 
 def init_quant_kv_cache(batch: int, capacity: int, kv_heads: int, dk: int,
@@ -244,12 +270,11 @@ def quant_cache_append(cache: QuantKVCache, k_new, v_new) -> QuantKVCache:
     slot = jnp.mod(cache.index, cache.capacity)
     kq, ks = _quant_kv(k_new)
     vq, vs = _quant_kv(v_new)
-    upd = jax.lax.dynamic_update_slice_in_dim
     return QuantKVCache(
-        k_q=upd(cache.k_q, kq, slot, 1),
-        k_scale=upd(cache.k_scale, ks, slot, 1),
-        v_q=upd(cache.v_q, vq, slot, 1),
-        v_scale=upd(cache.v_scale, vs, slot, 1),
+        k_q=_append_token(cache.k_q, kq, slot),
+        k_scale=_append_token(cache.k_scale, ks, slot),
+        v_q=_append_token(cache.v_q, vq, slot),
+        v_scale=_append_token(cache.v_scale, vs, slot),
         index=cache.index + 1)
 
 
@@ -379,7 +404,7 @@ def attention_decode(x, params, cfg: ModelConfig, *, cache: KVCache,
     """One-token decode: x [B, 1, d]."""
     B = x.shape[0]
     q, k, v = _qkv(x, params, cfg)
-    pos = cache.index[None, None]  # [1,1] broadcast position
+    pos = _decode_positions(cache.index)
     if cfg.rope_theta:
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
@@ -406,10 +431,7 @@ class MLACache(NamedTuple):
         return self.c_kv.shape[1]
 
     def valid(self, batch: int):
-        S = self.capacity
-        slots = jnp.arange(S, dtype=jnp.int32)
-        filled = jnp.where(self.index >= S, S, self.index)
-        return jnp.broadcast_to(slots[None, :] < filled, (batch, S))
+        return _ring_valid(self.index, batch, self.capacity)
 
 
 def init_mla_cache(batch: int, capacity: int, mla: MLAConfig, dtype) -> MLACache:
@@ -512,15 +534,13 @@ def mla_decode(x, params, cfg: ModelConfig, *, cache: MLACache,
     the cache stays [B, S, kv_lora + rope] — MLA's memory win."""
     m, dt = cfg.mla, x.dtype
     B = x.shape[0]
-    pos = cache.index[None, None]
+    pos = _decode_positions(cache.index)
     q_nope, q_rope = _mla_q(x, params, cfg, pos)          # [B,1,H,*]
     c_new, r_new = _mla_latent(x, params, cfg, pos)       # [B,1,R], [B,1,rope]
     slot = jnp.mod(cache.index, cache.capacity)
     cache = MLACache(
-        c_kv=jax.lax.dynamic_update_slice_in_dim(
-            cache.c_kv, c_new.astype(cache.c_kv.dtype), slot, 1),
-        k_rope=jax.lax.dynamic_update_slice_in_dim(
-            cache.k_rope, r_new.astype(cache.k_rope.dtype), slot, 1),
+        c_kv=_append_token(cache.c_kv, c_new, slot),
+        k_rope=_append_token(cache.k_rope, r_new, slot),
         index=cache.index + 1)
     # absorb W_uk into q: q_lat[h] = q_nope[h] @ W_uk[h]
     q_lat = jnp.einsum("bqhk,hrk->bqhr", q_nope, params["w_uk"].astype(dt))

@@ -316,12 +316,35 @@ class Model:
             return stack(make, cfg.n_layers)
         raise ValueError(cfg.family)
 
+    def init_slot_cache(self, batch: int, capacity: int, *,
+                        window: int = 0, kv_dtype: str = "fp32") -> Any:
+        """Per-slot decode cache for continuous batching: ``init_cache``
+        with every ring ``index`` leaf widened by a trailing ``[batch]``
+        axis, so each slot tracks its own fill position and can hold a
+        different request (``serve.engine.ContinuousEngine``).  SSM state
+        carries no index and is shared unchanged."""
+        cache = self.init_cache(batch, capacity, window=window,
+                                kv_dtype=kv_dtype)
+
+        def widen(path, leaf):
+            if any(getattr(p, "name", "") == "index" for p in path):
+                return jnp.zeros(leaf.shape + (batch,), leaf.dtype)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(widen, cache)
+
     # ----------------------------------------------------------------- #
     # prefill: full forward that also fills the cache
     # ----------------------------------------------------------------- #
-    def prefill(self, params, batch, cache, *, window: int = 0
-                ) -> Tuple[jax.Array, Any]:
-        """Returns (last-position logits [B, V], filled cache)."""
+    def prefill(self, params, batch, cache, *, window: int = 0,
+                last_pos=None) -> Tuple[jax.Array, Any]:
+        """Returns (last-position logits [B, V], filled cache).
+
+        ``last_pos``: optional traced int32 scalar — read the logits at
+        this sequence position instead of the final one.  This is how a
+        bucket-padded prefill (continuous batching) reads the true
+        prompt's last token while the pad tail stays causally invisible.
+        """
         cfg = self.cfg
         x, positions, _ = self._embed_inputs(params, batch)
         pre = _BLOCK[cfg.family][2]
@@ -357,7 +380,9 @@ class Model:
         else:
             x, new_cache = jax.lax.scan(block_fn, x,
                                         (params["layers"], cache))
-        logits = self._head(params, x[:, -1:])[:, 0]
+        x_last = x[:, -1:] if last_pos is None else \
+            jax.lax.dynamic_slice_in_dim(x, last_pos, 1, 1)
+        logits = self._head(params, x_last)[:, 0]
         return logits, new_cache
 
     # ----------------------------------------------------------------- #
@@ -371,8 +396,9 @@ class Model:
         x = embed(tokens, params["embed"], dt)
         if "pos_embed" in params:
             pos = self._cache_index(cache)
-            x = x + params["pos_embed"]["table"].astype(dt)[
-                jnp.clip(pos, 0, cfg.max_seq_len - 1)][None, None]
+            pe = params["pos_embed"]["table"].astype(dt)[
+                jnp.clip(pos, 0, cfg.max_seq_len - 1)]
+            x = x + (pe[None, None] if pos.ndim == 0 else pe[:, None])
 
         def block_fn(h, inp):
             layer_p, layer_c = inp
@@ -407,7 +433,9 @@ class Model:
     @staticmethod
     def _cache_index(cache) -> jax.Array:
         """Current absolute position from any cache pytree (first leaf
-        named 'index'; stacked => take layer 0)."""
+        named 'index'; stacked => take layer 0).  Scalar for the shared
+        -index caches of ``init_cache``; ``[batch]`` for the per-slot
+        caches of ``init_slot_cache`` (continuous batching)."""
         idx = None
 
         def find(path, leaf):
@@ -420,7 +448,7 @@ class Model:
         jax.tree_util.tree_map_with_path(find, cache)
         if idx is None:
             return jnp.zeros((), jnp.int32)
-        return idx.reshape(-1)[0]
+        return idx[0]
 
 
 def lm_loss(cfg: ModelConfig, logits, batch, aux

@@ -1,3 +1,9 @@
-from repro.serve.engine import Engine, ServeStats, sample_tokens
+from repro.serve.engine import (
+    ContinuousEngine, ContinuousStats, Engine, OutputQueue, Request,
+    ServeStats, SlotScheduler, sample_tokens,
+)
 
-__all__ = ["Engine", "ServeStats", "sample_tokens"]
+__all__ = [
+    "ContinuousEngine", "ContinuousStats", "Engine", "OutputQueue",
+    "Request", "ServeStats", "SlotScheduler", "sample_tokens",
+]

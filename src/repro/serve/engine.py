@@ -1,11 +1,27 @@
-"""Batched serving engine: prefill + autoregressive decode over the plan's
-sharded caches.  ``long context`` uses the sliding-window ring cache for
-attention archs and the native constant-size state for SSM/hybrid."""
+"""Serving engines over the plan's sharded caches.
+
+Two engines share the compiled-step machinery (``core/steps.py``):
+
+  * ``Engine`` — the fixed-batch prefill + decode loop: every request in
+    a batch waits for the longest prompt and the longest generation.
+  * ``ContinuousEngine`` — slot-based continuous batching
+    (docs/serving.md): a persistent decode state of ``slots`` slots,
+    bucketed prefill lengths (pad-to-bucket keeps prefill
+    compile-stable), prefill-insert scattering each new request's
+    KV/state into a free slot, per-slot eviction on EOS or its token
+    budget with immediate backfill from the pending queue, and a
+    detokenize/backpressure ``OutputQueue`` so slow consumers never
+    stall the decode step.
+
+``long context`` uses the sliding-window ring cache for attention archs
+and the native constant-size state for SSM/hybrid.
+"""
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +29,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.plans import Plan
-from repro.core.steps import build_prefill_step, build_serve_step
+from repro.core.steps import (
+    build_decode_slots_step, build_insert_step, build_prefill_step,
+    build_serve_step,
+)
 from repro.models.model import Model
 from repro.models.registry import abstractify
 
@@ -35,11 +54,28 @@ def sample_tokens(logits, rng_key, *, temperature: float = 0.0,
 class ServeStats:
     prefill_s: float = 0.0
     decode_s: List[float] = field(default_factory=list)
+    n_slots: int = 1            # live batch rows: one step = n_slots tokens
+    total_decode_s: float = 0.0  # whole-loop wall time (timing=False path)
+    n_steps: int = 0
+
+    @property
+    def steps_per_s(self) -> float:
+        """Decode steps per second (drops the first, warm-up, step when
+        per-step timings exist; falls back to the loop wall clock)."""
+        times = self.decode_s[1:] or self.decode_s
+        if times:
+            return 1.0 / float(np.mean(times))
+        if self.total_decode_s > 0 and self.n_steps:
+            return self.n_steps / self.total_decode_s
+        return 0.0
 
     @property
     def tokens_per_s(self) -> float:
-        times = self.decode_s[1:] or self.decode_s
-        return 1.0 / float(np.mean(times)) if times else 0.0
+        """Aggregate generated tokens/s: one decode step emits one token
+        *per live slot*, so this is ``steps_per_s * n_slots`` — not the
+        bare step rate (that unit bug is pinned by
+        tests/test_serving.py::test_tokens_per_s_units)."""
+        return self.steps_per_s * self.n_slots
 
 
 class Engine:
@@ -75,12 +111,18 @@ class Engine:
             self.shardings = {**sh_p, **sh_s}
 
     def generate(self, params, batch: Dict[str, Any], n_tokens: int, *,
-                 seed: int = 0) -> Dict[str, Any]:
+                 seed: int = 0, timing: bool = True) -> Dict[str, Any]:
         """batch: prompt inputs (tokens [B, S] + modality extras).
-        Returns generated token matrix [B, n_tokens] and timing stats."""
+        Returns generated token matrix [B, n_tokens] and timing stats.
+
+        ``timing=False`` skips the per-step ``block_until_ready`` and the
+        per-step host transfer, letting steady-state decode pipeline
+        host->device dispatch; only the loop total is measured.  The
+        benchmark path keeps ``timing=True`` for per-step latencies.
+        """
         if self._serve_step is None:
             self._build(params, batch)
-        stats = ServeStats()
+        stats = ServeStats(n_slots=self.batch_size)
         key = jax.random.key(seed)
         with jax.set_mesh(self.mesh):
             cache = jax.device_put(self._cache0, self.shardings["cache"])
@@ -91,9 +133,11 @@ class Engine:
             key, k = jax.random.split(key)
             tok = sample_tokens(logits, k, temperature=self.temperature,
                                 top_k=self.top_k)[:, None]
-            out = [np.asarray(tok)]
+            out: List[Any] = [np.asarray(tok) if timing else tok]
+            t_loop = time.perf_counter()
             for _ in range(n_tokens - 1):
-                t0 = time.perf_counter()
+                if timing:
+                    t0 = time.perf_counter()
                 logits, next_tok, cache = self._serve_step(params, cache, tok)
                 if self.temperature > 0:
                     key, k = jax.random.split(key)
@@ -102,7 +146,326 @@ class Engine:
                                         top_k=self.top_k)[:, None]
                 else:
                     tok = next_tok
-                tok.block_until_ready()
-                stats.decode_s.append(time.perf_counter() - t0)
-                out.append(np.asarray(tok))
-        return {"tokens": np.concatenate(out, axis=1), "stats": stats}
+                if timing:
+                    tok.block_until_ready()
+                    stats.decode_s.append(time.perf_counter() - t0)
+                    out.append(np.asarray(tok))
+                else:
+                    out.append(tok)
+            if not timing and n_tokens > 1:
+                out[-1].block_until_ready()
+            stats.total_decode_s = time.perf_counter() - t_loop
+            stats.n_steps = n_tokens - 1
+            tokens = np.concatenate([np.asarray(t) for t in out], axis=1)
+        return {"tokens": tokens, "stats": stats}
+
+
+# --------------------------------------------------------------------- #
+# continuous batching (docs/serving.md)
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class Request:
+    """One serving request: a prompt and its generation budget."""
+    uid: int
+    prompt: Any                       # int32 token ids [prompt_len]
+    max_new: int = 0                  # 0 => the run()-level default
+
+
+class SlotScheduler:
+    """Host-side slot bookkeeping for continuous batching.
+
+    Pure python, no jax — the property tests (tests/test_serving.py)
+    drive it with random admit/generate/evict traces.  Invariants:
+
+      * a slot is free or live, never both, and
+        ``len(free) + occupancy == n_slots`` (occupancy conservation);
+      * ``admit`` only hands out a free slot, so backfill can never
+        overwrite a live request;
+      * ``record_token``/``evict`` reject free slots, so nothing reads a
+        slot after its eviction until a new admit recycles it.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._free = deque(range(n_slots))
+        self._uid: Dict[int, int] = {}      # slot -> request uid
+        self._count: Dict[int, int] = {}    # slot -> tokens generated
+        self._limit: Dict[int, int] = {}    # slot -> max_new budget
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._uid)
+
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    def live_slots(self) -> List[int]:
+        return sorted(self._uid)
+
+    def uid_of(self, slot: int) -> int:
+        return self._uid[slot]
+
+    def admit(self, uid: int, max_new: int) -> int:
+        """Claim a free slot for request ``uid``; returns the slot."""
+        if not self._free:
+            raise RuntimeError("admit with no free slot")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        slot = self._free.popleft()
+        self._uid[slot] = uid
+        self._count[slot] = 0
+        self._limit[slot] = max_new
+        return slot
+
+    def record_token(self, slot: int) -> bool:
+        """Count one generated token; True when the slot hit its budget."""
+        if slot not in self._uid:
+            raise KeyError(f"slot {slot} is not live")
+        self._count[slot] += 1
+        return self._count[slot] >= self._limit[slot]
+
+    def evict(self, slot: int) -> int:
+        """Release a live slot (EOS or budget); returns its uid."""
+        if slot not in self._uid:
+            raise KeyError(f"slot {slot} is not live")
+        uid = self._uid.pop(slot)
+        del self._count[slot], self._limit[slot]
+        self._free.append(slot)
+        return uid
+
+    def check(self) -> None:
+        """Audit the invariants (used by the property tests)."""
+        free, live = set(self._free), set(self._uid)
+        if free & live:
+            raise AssertionError(f"slots both free and live: {free & live}")
+        if len(self._free) + len(self._uid) != self.n_slots:
+            raise AssertionError(
+                f"occupancy leak: {len(self._free)} free + "
+                f"{len(self._uid)} live != {self.n_slots}")
+
+
+class OutputQueue:
+    """Decode-side handoff to (possibly slow) consumers.
+
+    The decode loop only ever appends raw token-id rows — O(1), no
+    detokenization, no blocking — so a slow consumer can never stall a
+    decode step.  The expensive part (detokenize) runs on the consumer
+    side, inside ``drain``.
+    """
+
+    def __init__(self, detokenize: Optional[Callable[[Any], Any]] = None):
+        self._q: deque = deque()
+        self._detok = detokenize
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def put(self, uid: int, token_ids) -> None:
+        self._q.append((uid, token_ids))
+
+    def drain(self) -> List:
+        """Pop every finished request as ``(uid, output)`` — detokenized
+        here, on the consumer's clock, when a detokenizer was given."""
+        out = []
+        while self._q:
+            uid, ids = self._q.popleft()
+            out.append((uid, self._detok(ids) if self._detok else ids))
+        return out
+
+
+@dataclass
+class ContinuousStats:
+    n_slots: int = 1
+    prefill_s: List[float] = field(default_factory=list)
+    decode_s: List[float] = field(default_factory=list)   # timing=True
+    ttft_s: Dict[int, float] = field(default_factory=dict)
+    occupancy: List[int] = field(default_factory=list)    # per decode step
+    n_tokens: int = 0            # generated tokens across all requests
+    total_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Goodput: generated tokens per wall-clock second of the run."""
+        return self.n_tokens / self.total_s if self.total_s > 0 else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self.occupancy)) if self.occupancy else 0.0
+
+
+DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+class ContinuousEngine:
+    """Slot-based continuous batching over a persistent decode state.
+
+    ``slots`` requests decode in lock-step; each finished request's slot
+    is immediately backfilled from the pending queue via a bucketed
+    batch-1 prefill + ``build_insert_step`` scatter.  Greedy decoding
+    only — the whole point is the bit-exactness contract: every request's
+    tokens are bit-identical to what the fixed-batch ``Engine`` produces
+    for the same prompt (pinned by the serving gate, BENCH_10.json).
+
+    Prompt lengths are padded up to a bucket so prefill compiles once per
+    bucket, not once per length; the causal mask keeps the pad tail
+    invisible and the insert step rewinds the slot's index to the true
+    prompt length.  SSM/hybrid prefills run the full-sequence recurrence
+    — pad tokens would flow into the state — so those families compile
+    per distinct prompt length instead (``exact_prefill``), a deliberate
+    tradeoff documented in docs/serving.md.
+    """
+
+    def __init__(self, model: Model, plan: Plan, mesh, *, slots: int,
+                 max_len: int, buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 kv_dtype: str = "fp32", eos_id: int = -1, pad_id: int = 0,
+                 detokenize: Optional[Callable[[Any], Any]] = None):
+        if model.cfg.family in ("vlm", "encdec"):
+            raise NotImplementedError(
+                f"continuous batching serves token-only prompts; family "
+                f"{model.cfg.family!r} needs per-request modality extras")
+        self.model, self.plan, self.mesh = model, plan, mesh
+        self.slots, self.max_len = slots, max_len
+        self.kv_dtype = kv_dtype
+        self.eos_id, self.pad_id = eos_id, pad_id
+        # SSM recurrences integrate every input token into the state, so
+        # pad-to-bucket prefill is wrong for them: exact lengths instead.
+        self.exact_prefill = model.cfg.family in ("ssm", "hybrid")
+        self.buckets = tuple(sorted(b for b in buckets if b <= max_len))
+        self.output_queue = OutputQueue(detokenize)
+        with jax.set_mesh(mesh):
+            self._slot_cache0 = model.init_slot_cache(
+                slots, max_len, kv_dtype=kv_dtype)
+            self._src_cache0 = model.init_cache(1, max_len,
+                                                kv_dtype=kv_dtype)
+        self._decode = None
+        self._prefill_fns: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------- #
+    def _bucket_of(self, n: int) -> int:
+        if n > self.max_len:
+            raise ValueError(f"prompt of {n} tokens exceeds max_len "
+                             f"{self.max_len}")
+        if self.exact_prefill:
+            return n
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.max_len      # longest prompts pad to the full cache
+
+    def _build(self, params):
+        with jax.set_mesh(self.mesh):
+            p_shapes = abstractify(params)
+            slot_shapes = abstractify(self._slot_cache0)
+            src_shapes = abstractify(self._src_cache0)
+            self._decode, sh = build_decode_slots_step(
+                self.model, self.plan, self.mesh, params_shapes=p_shapes,
+                cache_shapes=slot_shapes, batch_size=self.slots,
+                pad_id=self.pad_id)
+            self._insert, sh_i = build_insert_step(
+                self.model, self.plan, self.mesh, cache_shapes=slot_shapes,
+                src_cache_shapes=src_shapes, batch_size=self.slots)
+            self.shardings = {**sh, "src": sh_i["src"]}
+            self._p_shapes, self._src_shapes = p_shapes, src_shapes
+
+    def _prefill_for(self, bucket: int):
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            with jax.set_mesh(self.mesh):
+                fn, _ = build_prefill_step(
+                    self.model, self.plan, self.mesh,
+                    params_shapes=self._p_shapes,
+                    batch_shapes={"tokens": jax.ShapeDtypeStruct(
+                        (1, bucket), jnp.int32)},
+                    cache_shapes=self._src_shapes, batch_size=1,
+                    gather_last=True)
+            self._prefill_fns[bucket] = fn
+        return fn
+
+    def _prefill_one(self, params, prompt):
+        """Bucketed batch-1 prefill; returns (first token, cache, len)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        L = int(prompt.shape[0])
+        bucket = self._bucket_of(L)
+        padded = np.full((1, bucket), self.pad_id, np.int32)
+        padded[0, :L] = prompt
+        logits, pcache = self._prefill_for(bucket)(
+            params, {"tokens": padded}, self._src_dev,
+            jnp.asarray(L - 1, jnp.int32))
+        tok0 = int(jnp.argmax(logits, axis=-1)[0])
+        return tok0, pcache, L
+
+    # ------------------------------------------------------------- #
+    def run(self, params, requests: Sequence[Request], *,
+            max_new: int = 32, timing: bool = False) -> Dict[str, Any]:
+        """Serve ``requests`` to completion; returns per-request outputs
+        (uid -> generated token ids, EOS included when hit) and stats."""
+        reqs = [r if isinstance(r, Request) else Request(i, r)
+                for i, r in enumerate(requests)]
+        if self._decode is None:
+            self._build(params)
+        sched = SlotScheduler(self.slots)
+        stats = ContinuousStats(n_slots=self.slots)
+        pending = deque(reqs)
+        bufs: Dict[int, List[int]] = {}
+        slot_tok = np.full((self.slots, 1), self.pad_id, np.int32)
+        live = np.zeros((self.slots,), bool)
+        t_start = time.perf_counter()
+
+        with jax.set_mesh(self.mesh):
+            cache = jax.device_put(self._slot_cache0,
+                                   self.shardings["cache"])
+            self._src_dev = jax.device_put(self._src_cache0,
+                                           self.shardings["src"])
+
+            def finish(slot: int) -> None:
+                uid = sched.evict(slot)
+                live[slot] = False
+                slot_tok[slot, 0] = self.pad_id
+                self.output_queue.put(
+                    uid, np.asarray(bufs.pop(slot), np.int32))
+
+            while pending or sched.occupancy:
+                # backfill every free slot from the pending queue
+                while pending and sched.has_free():
+                    req = pending.popleft()
+                    budget = req.max_new or max_new
+                    t0 = time.perf_counter()
+                    tok0, pcache, L = self._prefill_one(params, req.prompt)
+                    now = time.perf_counter()
+                    stats.prefill_s.append(now - t0)
+                    stats.ttft_s[req.uid] = now - t_start
+                    slot = sched.admit(req.uid, budget)
+                    cache = self._insert(cache, pcache,
+                                         jnp.asarray(slot, jnp.int32),
+                                         jnp.asarray(L, jnp.int32))
+                    bufs[slot] = [tok0]
+                    live[slot] = True
+                    slot_tok[slot, 0] = tok0
+                    stats.n_tokens += 1
+                    if sched.record_token(slot) or tok0 == self.eos_id:
+                        finish(slot)
+                if not sched.occupancy:
+                    continue     # everything admitted finished at prefill
+                # one decode step across all live slots
+                if timing:
+                    t0 = time.perf_counter()
+                logits, next_tok, cache = self._decode(
+                    params, cache, jnp.asarray(slot_tok),
+                    jnp.asarray(live))
+                nt = np.asarray(next_tok)    # host sync: scheduler input
+                if timing:
+                    stats.decode_s.append(time.perf_counter() - t0)
+                stats.occupancy.append(sched.occupancy)
+                for slot in sched.live_slots():
+                    t = int(nt[slot, 0])
+                    bufs[slot].append(t)
+                    slot_tok[slot, 0] = t
+                    stats.n_tokens += 1
+                    if sched.record_token(slot) or t == self.eos_id:
+                        finish(slot)
+        stats.total_s = time.perf_counter() - t_start
+        outputs = dict(self.output_queue.drain())
+        return {"outputs": outputs, "stats": stats}
